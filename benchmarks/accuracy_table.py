@@ -1,0 +1,42 @@
+"""Table 1 analog: Top-1 accuracy of TinyTrain vs baselines across
+cross-domain targets (synthetic CDFSL; see DESIGN.md §7 data note)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from . import common
+
+
+METHODS = ("none", "fulltrain", "lastlayer", "tinytl", "sparseupdate", "tinytrain")
+
+
+def run(arch: str = "tiny", episodes_per_domain: int = 2, iters: int = 12,
+        meta_episodes: int = 150, methods=METHODS) -> List[Dict]:
+    bb, params = common.meta_train(arch, episodes=meta_episodes)
+    rows = []
+    for m in methods:
+        t0 = time.perf_counter()
+        r = common.run_method(bb, params, m,
+                              episodes_per_domain=episodes_per_domain,
+                              iters=iters)
+        r["wall_s"] = time.perf_counter() - t0
+        r["arch"] = arch
+        rows.append(r)
+    return rows
+
+
+def main(quick: bool = True) -> List[str]:
+    rows = run()
+    out = []
+    header = "arch,method," + ",".join(common.TARGET_DOMAINS) + ",avg"
+    out.append(header)
+    for r in rows:
+        doms = ",".join(f"{r['per_domain'][d]*100:.1f}" for d in common.TARGET_DOMAINS)
+        out.append(f"{r['arch']},{r['method']},{doms},{r['avg']*100:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

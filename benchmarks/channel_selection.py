@@ -1,0 +1,36 @@
+"""Fig. 4 / 6b analog: dynamic (Fisher) vs static (random / L2-norm) channel
+selection at equal layer selection and budget."""
+from __future__ import annotations
+
+from typing import List
+
+from . import common
+
+MODES = ("dynamic", "random", "l2norm")
+
+
+def run(arch: str = "tiny", episodes_per_domain: int = 2, iters: int = 12):
+    bb, params = common.meta_train(arch)
+    rows = []
+    for mode in MODES:
+        r = common.run_method(bb, params, "tinytrain", channel_mode=mode,
+                              episodes_per_domain=episodes_per_domain,
+                              iters=iters)
+        rows.append({"mode": mode, "avg": r["avg"],
+                     "per_domain": r["per_domain"]})
+    return rows
+
+
+def main(quick: bool = True) -> List[str]:
+    rows = run()
+    out = ["channel_mode," + ",".join(common.TARGET_DOMAINS) + ",avg"]
+    for r in rows:
+        doms = ",".join(f"{r['per_domain'][d]*100:.1f}"
+                        for d in common.TARGET_DOMAINS)
+        out.append(f"{r['mode']},{doms},{r['avg']*100:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

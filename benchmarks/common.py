@@ -1,0 +1,234 @@
+"""Shared harness for the paper-table benchmarks.
+
+Pipeline mirrors the paper end-to-end at CPU scale: (1) offline ProtoNet
+meta-training of an edge-CNN backbone on *source* domains; (2) online
+adaptation on held-out *target* domains with each on-device training method;
+(3) query-set accuracy averaged over episodes.
+
+Meta-trained weights are cached under results/cache/ so every table reuses
+the same offline stage (as in the paper).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Budget, adapt_task, cnn_backbone, evaluate_task, full_policy,
+    last_layer_policy, select_policy, static_channel_policy,
+)
+from repro.core.adapt import AdaptResult
+from repro.core.baselines import (
+    evolutionary_search_policy, make_full_episode_step,
+    make_tinytl_episode_step, tinytl_adapter_init, tinytl_features,
+)
+from repro.core.protonet import episode_accuracy, make_meta_train_step
+from repro.core.sparse import EpisodeStepCache
+from repro.data import DOMAINS, augment_support, sample_episode
+from repro.models.edge_cnn import EDGE_CNNS, _build_ir_net
+from repro.optim import adam
+
+RES = 48
+MAX_WAY = 8
+SUPPORT_PAD = 64
+QUERY_PAD = 80
+SOURCE_DOMAINS = ("gratings", "checkers", "rings", "mosaic")
+TARGET_DOMAINS = ("glyphs", "stripes", "blobs", "spots", "waves")
+CACHE_DIR = "results/cache"
+
+
+def small_cnn(name: str = "tiny"):
+    if name == "tiny":
+        spec = [(1, 8, 1, 1, 3), (4, 16, 2, 2, 3), (4, 24, 2, 2, 3),
+                (4, 32, 1, 1, 3)]
+        return _build_ir_net("tiny", spec, 1.0, 8, 0, RES)
+    return EDGE_CNNS[name](in_res=RES)
+
+
+def episode_jnp(ep):
+    sup = {k: jnp.asarray(v) for k, v in ep.support.items()}
+    qry = {k: jnp.asarray(v) for k, v in ep.query.items()}
+    return sup, qry
+
+
+def pseudo_query(rng, ep):
+    return {k: jnp.asarray(v) for k, v in augment_support(rng, ep.support).items()}
+
+
+def meta_train(
+    arch: str = "tiny",
+    episodes: int = 150,
+    lr: float = 1e-3,
+    seed: int = 0,
+    cache: bool = True,
+) -> Tuple[object, list]:
+    """Offline stage: ProtoNet meta-training on the source domains."""
+    cfg = small_cnn(arch)
+    bb = cnn_backbone(cfg, batch_size=SUPPORT_PAD)
+    key = jax.random.PRNGKey(seed)
+    params = bb.init(key)
+
+    cache_path = os.path.join(CACHE_DIR, f"meta_{arch}_{episodes}_{seed}.npz")
+    if cache and os.path.exists(cache_path):
+        data = np.load(cache_path)
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        params = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(data[f"l{i}"]) for i in range(len(leaves))])
+        return bb, params
+
+    opt = adam(lr)
+    step = make_meta_train_step(bb.features, opt, MAX_WAY)
+    opt_state = opt.init(params)
+    rng = np.random.default_rng(seed)
+    for i in range(episodes):
+        dom = SOURCE_DOMAINS[i % len(SOURCE_DOMAINS)]
+        ep = sample_episode(rng, dom, res=RES, max_way=MAX_WAY,
+                            support_pad=SUPPORT_PAD, query_pad=QUERY_PAD)
+        sup, qry = episode_jnp(ep)
+        params, opt_state, loss = step(params, opt_state, sup, qry)
+    if cache:
+        os.makedirs(CACHE_DIR, exist_ok=True)
+        leaves = jax.tree_util.tree_leaves(params)
+        np.savez(cache_path, **{f"l{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    return bb, params
+
+
+# paper budgets: "around 1 MB" backward memory (Sec 2.2)
+DEFAULT_BUDGET = Budget(mem_bytes=1e6, compute_frac=0.5, channel_ratio=0.75)
+
+
+FEWSHOT = dict(max_support_total=40, max_support_per_class=8)
+
+
+def run_method(
+    bb,
+    params,
+    method: str,
+    domains=TARGET_DOMAINS,
+    episodes_per_domain: int = 2,
+    iters: int = 40,  # paper: 40 iterations
+    budget: Budget = DEFAULT_BUDGET,
+    lr: float = 1e-3,
+    seed: int = 0,
+    criterion: str = "tinytrain",
+    channel_mode: str = "dynamic",
+    step_cache: Optional[EpisodeStepCache] = None,
+) -> Dict[str, object]:
+    """Adapt + evaluate one method over target-domain episodes.
+
+    Returns per-domain accuracies and wall times.  ``method`` in
+    {none, fulltrain, lastlayer, tinytl, adapterdrop<k>, sparseupdate,
+    tinytrain}.
+    """
+    rng = np.random.default_rng(seed + 1000)
+    if method in ("tinytrain", "sparseupdate", "lastlayer"):
+        lr = 3e-3  # delta params start at zero; tuned per method as in the paper
+    opt = adam(lr)
+    accs: Dict[str, List[float]] = {d: [] for d in domains}
+    fisher_times, train_times = [], []
+
+    if step_cache is None:
+        step_cache = EpisodeStepCache(bb, opt, MAX_WAY)
+
+    # static methods prepared once (offline), as in the paper
+    static_policy = None
+    if method == "sparseupdate":
+        # offline ES on a PROXY source domain (cannot see target data)
+        proxy_rng = np.random.default_rng(seed)
+        ep = sample_episode(proxy_rng, SOURCE_DOMAINS[0], res=RES,
+                            max_way=MAX_WAY, support_pad=SUPPORT_PAD,
+                            query_pad=QUERY_PAD)
+        sup, _ = episode_jnp(ep)
+        pq = pseudo_query(proxy_rng, ep)
+        from repro.core.fisher import fisher_probe
+        from repro.core.protonet import episode_loss as el
+
+        def probe_loss(p, b, taps=None):
+            return el(bb.features, p, sup, pq, MAX_WAY, taps=taps)
+
+        n = int(np.sum(np.asarray(ep.support["episode_labels"]) >= 0))
+        potentials, _, _ = fisher_probe(bb, params, probe_loss, sup, n)
+        static_policy = evolutionary_search_policy(
+            bb.unit_costs, potentials, budget, iters=400, seed=seed)
+    elif method == "lastlayer":
+        static_policy = last_layer_policy(bb.unit_costs, len(bb.unit_costs))
+
+    tinytl_step = None
+    dropped = 0
+    if method.startswith("tinytl") or method.startswith("adapterdrop"):
+        if method.startswith("adapterdrop"):
+            frac = int(method.replace("adapterdrop", "") or "50") / 100
+            n_blocks = max(s.block for s in bb.cfg.layers) + 1
+            dropped = int(n_blocks * frac)
+        tinytl_step = make_tinytl_episode_step(bb.cfg, opt, MAX_WAY, dropped)
+
+    for dom in domains:
+        for e in range(episodes_per_domain):
+            ep = sample_episode(rng, dom, res=RES, max_way=MAX_WAY,
+                                support_pad=SUPPORT_PAD, query_pad=QUERY_PAD,
+                                **FEWSHOT)
+            sup, qry = episode_jnp(ep)
+            pq = pseudo_query(rng, ep)
+
+            if method == "none":
+                acc = float(episode_accuracy(bb.features, params, sup, qry, MAX_WAY))
+            elif method == "fulltrain":
+                step = make_full_episode_step(bb.features, opt, MAX_WAY)
+                # step donates its params argument: train a private copy
+                p = jax.tree_util.tree_map(jnp.copy, params)
+                st = opt.init(p)
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    p, st, _ = step(p, st, sup, pq)
+                train_times.append(time.perf_counter() - t0)
+                acc = float(episode_accuracy(bb.features, p, sup, qry, MAX_WAY))
+            elif method.startswith("tinytl") or method.startswith("adapterdrop"):
+                adapters = tinytl_adapter_init(bb.cfg, jax.random.PRNGKey(seed))
+                st = opt.init(adapters)
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    adapters, st, _ = tinytl_step(params, adapters, st, sup, pq)
+                train_times.append(time.perf_counter() - t0)
+                acc = float(episode_accuracy(
+                    lambda a, b: tinytl_features(bb.cfg, params, a, b["images"],
+                                                 dropped_blocks=dropped),
+                    adapters, sup, qry, MAX_WAY))
+            else:
+                # policy-based: lastlayer / sparseupdate / tinytrain variants
+                override = static_policy
+                res = adapt_task(
+                    bb, params, sup, pq, budget, opt, iters=iters,
+                    max_way=MAX_WAY, criterion=criterion,
+                    policy_override=override, step_cache=step_cache,
+                )
+                if channel_mode != "dynamic" and override is None:
+                    # Fig. 4 ablation: same layers, static channel choice
+                    l2 = bb.weight_l2(params) if channel_mode == "l2norm" else None
+                    pol = static_channel_policy(
+                        res.policy, bb.unit_costs, channel_mode,
+                        rng=np.random.default_rng(seed), weight_l2=l2)
+                    res = adapt_task(
+                        bb, params, sup, pq, budget, opt, iters=iters,
+                        max_way=MAX_WAY, policy_override=pol,
+                        step_cache=step_cache,
+                    )
+                fisher_times.append(res.fisher_seconds)
+                train_times.append(res.train_seconds)
+                ev = step_cache.evaluate(res.policy)
+                ci = step_cache.chan_idx_arrays(res.policy)
+                acc = float(ev(params, res.deltas, sup, qry, ci))
+            accs[dom].append(acc)
+
+    per_domain = {d: float(np.mean(v)) for d, v in accs.items()}
+    return {
+        "method": method,
+        "per_domain": per_domain,
+        "avg": float(np.mean(list(per_domain.values()))),
+        "fisher_s": float(np.mean(fisher_times)) if fisher_times else 0.0,
+        "train_s": float(np.mean(train_times)) if train_times else 0.0,
+    }

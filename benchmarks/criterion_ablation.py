@@ -1,0 +1,77 @@
+"""Table 3 analog: multi-objective-criterion ablation — L2-norm layer
+selection vs Fisher-only vs Fisher/Memory vs Fisher/Compute vs TinyTrain."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from . import common
+
+VARIANTS = (
+    ("l2norm_layers", "l2norm"),
+    ("fisher_only", "fisher_only"),
+    ("fisher_mem", "fisher_mem"),
+    ("fisher_compute", "fisher_compute"),
+    ("tinytrain", "tinytrain"),
+)
+
+
+def run(arch: str = "tiny", episodes_per_domain: int = 2, iters: int = 12):
+    bb, params = common.meta_train(arch)
+    rows = []
+    for name, crit in VARIANTS:
+        if crit == "l2norm":
+            # layer scores = per-unit weight L2 norms instead of Fisher
+            from repro.core import Budget, select_policy
+            from repro.core.sparse import EpisodeStepCache
+            from repro.optim import adam
+            l2 = bb.weight_l2(params)
+            pot = np.array([np.linalg.norm(l2[(c.layer, c.kind)])
+                            for c in bb.unit_costs])
+            pol = select_policy(bb.unit_costs, pot, l2, common.DEFAULT_BUDGET,
+                                criterion="fisher_only")
+            r = common.run_method(bb, params, "static_l2",
+                                  episodes_per_domain=episodes_per_domain,
+                                  iters=iters)
+            # run via policy override
+            cache = EpisodeStepCache(bb, adam(1e-3), common.MAX_WAY)
+            accs = []
+            rng = np.random.default_rng(1000)
+            from repro.data import sample_episode
+            from repro.core import adapt_task
+            for dom in common.TARGET_DOMAINS:
+                for _ in range(episodes_per_domain):
+                    ep = sample_episode(rng, dom, res=common.RES,
+                                        max_way=common.MAX_WAY,
+                                        support_pad=common.SUPPORT_PAD,
+                                        query_pad=common.QUERY_PAD)
+                    sup, qry = common.episode_jnp(ep)
+                    pq = common.pseudo_query(rng, ep)
+                    res = adapt_task(bb, params, sup, pq, common.DEFAULT_BUDGET,
+                                     adam(1e-3), iters=iters,
+                                     max_way=common.MAX_WAY,
+                                     policy_override=pol, step_cache=cache)
+                    ev = cache.evaluate(res.policy)
+                    ci = cache.chan_idx_arrays(res.policy)
+                    accs.append(float(ev(params, res.deltas, sup, qry, ci)))
+            rows.append({"variant": name, "avg": float(np.mean(accs))})
+        else:
+            r = common.run_method(bb, params, "tinytrain", criterion=crit,
+                                  episodes_per_domain=episodes_per_domain,
+                                  iters=iters)
+            rows.append({"variant": name, "avg": r["avg"]})
+    return rows
+
+
+def main(quick: bool = True) -> List[str]:
+    rows = run()
+    out = ["variant,avg_accuracy"]
+    for r in rows:
+        out.append(f"{r['variant']},{r['avg']*100:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

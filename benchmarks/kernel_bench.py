@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: Pallas (interpret) correctness sweeps + XLA-path
+timings of the same ops (wall-clock is CPU; TPU perf comes from §Roofline).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, n: int = 5) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(quick: bool = True) -> List[str]:
+    out = ["kernel,shape,us_per_call,max_err_vs_oracle"]
+    key = jax.random.PRNGKey(0)
+
+    # fisher
+    n, d, c = (4, 512, 256) if quick else (16, 2048, 1024)
+    a = jax.random.normal(key, (n, d, c))
+    g = jax.random.normal(jax.random.PRNGKey(1), (n, d, c)) * 0.1
+    want = ref.fisher_ref(a, g)
+    got = ops.fisher(a, g, block_d=min(512, d), block_c=min(256, c))
+    err = float(jnp.max(jnp.abs(got - want) / (jnp.abs(want) + 1e-6)))
+    us = _time(jax.jit(ref.fisher_ref), a, g)
+    out.append(f"fisher,({n}x{d}x{c}),{us:.0f},{err:.2e}")
+
+    # flash attention
+    b, s, hq, hkv, hd = (1, 512, 4, 2, 64) if quick else (2, 2048, 8, 2, 128)
+    q = jax.random.normal(key, (b, s, hq, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, s, hkv, hd))
+    got = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    kk, vv = jnp.repeat(k, hq // hkv, 2), jnp.repeat(v, hq // hkv, 2)
+    want = ref.flash_attention_ref(q, kk, vv, causal=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = _time(jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True)), q, kk, vv)
+    out.append(f"flash_attention,({b}x{s}x{hq}x{hd}),{us:.0f},{err:.2e}")
+
+    # ssd scan
+    b, s, h, p, nst = (1, 256, 2, 32, 16) if quick else (2, 1024, 8, 64, 64)
+    x = jax.random.normal(key, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (b, s, h)))
+    aa = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (h,)))
+    bm = jax.random.normal(jax.random.PRNGKey(6), (b, s, nst)) * 0.5
+    cm = jax.random.normal(jax.random.PRNGKey(7), (b, s, nst)) * 0.5
+    y, _ = ops.ssd_scan(x, dt, aa, bm, cm, chunk=64)
+    yr, _ = ref.ssd_scan_ref(x, dt, aa, bm, cm)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    us = _time(jax.jit(lambda *a: ref.ssd_scan_ref(*a)[0]), x, dt, aa, bm, cm)
+    out.append(f"ssd_scan,({b}x{s}x{h}x{p}x{nst}),{us:.0f},{err:.2e}")
+
+    # grad quant
+    g1 = jax.random.normal(key, (4096,)) * 0.01
+    e1 = jnp.zeros((4096,))
+    q8, sc, ne = ops.grad_quant(g1, e1, block=1024)
+    qr, sr, nr = ref.grad_quant_ref(g1, e1)
+    err = float(jnp.max(jnp.abs(ne - nr)))
+    us = _time(jax.jit(ref.grad_quant_ref), g1, e1)
+    out.append(f"grad_quant,(4096),{us:.0f},{err:.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,49 @@
+"""Tables 9/10 analog: end-to-end latency breakdown — Fisher-calculation
+time vs sparse fine-tuning run time (TinyTrain) vs SparseUpdate run time.
+Measured wall-clock on this host (the paper's Pi Zero 2 / Jetson Nano role).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from . import common
+
+
+def run(arch: str = "tiny", episodes_per_domain: int = 1, iters: int = 12):
+    from repro.core.sparse import EpisodeStepCache
+    from repro.optim import adam
+
+    bb, params = common.meta_train(arch)
+    rows = []
+    for m in ("sparseupdate", "tinytrain"):
+        # warm-up episode first with a shared jit cache: report steady-state
+        # latency (compiles are per-deployment one-offs, amortised over
+        # tasks — paper Tables 9/10 likewise measure a warmed runtime)
+        cache = EpisodeStepCache(bb, adam(1e-3), common.MAX_WAY)
+        common.run_method(bb, params, m, domains=common.TARGET_DOMAINS[:1],
+                          episodes_per_domain=1, iters=iters,
+                          step_cache=cache)
+        r = common.run_method(bb, params, m,
+                              episodes_per_domain=episodes_per_domain,
+                              iters=iters, step_cache=cache)
+        total = r["fisher_s"] + r["train_s"]
+        rows.append({
+            "method": m, "fisher_s": r["fisher_s"], "train_s": r["train_s"],
+            "total_s": total,
+            "fisher_pct": 100 * r["fisher_s"] / total if total else 0.0,
+        })
+    return rows
+
+
+def main(quick: bool = True) -> List[str]:
+    rows = run()
+    out = ["method,fisher_s,train_s,total_s,fisher_pct"]
+    for r in rows:
+        out.append(f"{r['method']},{r['fisher_s']:.2f},{r['train_s']:.2f},"
+                   f"{r['total_s']:.2f},{r['fisher_pct']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,40 @@
+"""Fig. 6a analog: accuracy with vs without offline meta-training, per
+on-device method."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from . import common
+
+METHODS = ("none", "lastlayer", "tinytrain")
+
+
+def run(arch: str = "tiny", episodes_per_domain: int = 2, iters: int = 12):
+    bb, params_meta = common.meta_train(arch)
+    params_raw = bb.init(jax.random.PRNGKey(0))  # pre-trained-only stand-in
+    rows = []
+    for m in METHODS:
+        r0 = common.run_method(bb, params_raw, m,
+                               episodes_per_domain=episodes_per_domain,
+                               iters=iters)
+        r1 = common.run_method(bb, params_meta, m,
+                               episodes_per_domain=episodes_per_domain,
+                               iters=iters)
+        rows.append({"method": m, "no_meta": r0["avg"], "meta": r1["avg"]})
+    return rows
+
+
+def main(quick: bool = True) -> List[str]:
+    rows = run()
+    out = ["method,no_meta_acc,meta_acc,gain_pp"]
+    for r in rows:
+        out.append(f"{r['method']},{r['no_meta']*100:.1f},{r['meta']*100:.1f},"
+                   f"{(r['meta']-r['no_meta'])*100:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

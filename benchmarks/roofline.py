@@ -1,0 +1,71 @@
+"""§Roofline: read dry-run cell JSONs and render the roofline table.
+
+Terms per (arch × shape) on the single-pod 16×16 mesh:
+  t_compute   = HLO_FLOPs/device   / peak_FLOP/s          (197 TF bf16)
+  t_memory    = HLO_bytes/device   / HBM_bw               (819 GB/s)
+  t_collective= coll_bytes/device  / (links × link_bw)    (4 × 50 GB/s)
+plus the dominant term, MODEL_FLOPS = 6·N_active·D, and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs × chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(dirpath: str = "results/dryrun") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(dirpath: str = "results/dryrun", mesh: str = "16x16") -> List[str]:
+    rows = [
+        "arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+        "bottleneck,model_flops_ratio,roofline_frac,status"
+    ]
+    for c in load_cells(dirpath):
+        if c.get("mesh") != mesh:
+            continue
+        if "skipped" in c:
+            rows.append(f"{c['arch']},{c['shape']},{c['mesh']},,,,,,,SKIP:{c['skipped']}")
+            continue
+        if "error" in c:
+            rows.append(f"{c['arch']},{c['shape']},{c['mesh']},,,,,,,ERROR")
+            continue
+        tc = c.get("t_compute_s", 0) * 1e3
+        tm = c.get("t_memory_s", 0) * 1e3
+        tl = c.get("t_collective_s", 0) * 1e3
+        # roofline fraction: useful compute time / achievable step time.
+        # For train cells "useful" is the sparse-ideal FLOPs (the TinyTrain
+        # step's minimum work); otherwise the 2·N·D serve reference.
+        mf = c.get("sparse_ideal_flops") or c.get("model_flops_total", 0)
+        chips = c.get("n_chips", 256)
+        t_useful = mf / chips / 197e12
+        t_step = max(tc, tm, tl) / 1e3
+        frac = (t_useful / t_step) if t_step else 0.0
+        rows.append(
+            f"{c['arch']},{c['shape']},{c['mesh']},{tc:.2f},{tm:.2f},{tl:.2f},"
+            f"{c.get('bottleneck','')},{c.get('model_flops_ratio',0):.3f},"
+            f"{frac:.3f},ok"
+        )
+    return rows
+
+
+def main(quick: bool = True) -> List[str]:
+    out = table()
+    done = sum(1 for r in out[1:] if r.endswith(",ok"))
+    skipped = sum(1 for r in out[1:] if ",SKIP" in r)
+    out.append(f"# cells ok={done} skipped={skipped} (single-pod)")
+    mp = [r for r in table(mesh="2x16x16")[1:] if r.endswith(",ok") or ",SKIP" in r]
+    out.append(f"# multi-pod cells recorded={len(mp)}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,58 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV summary lines plus each table's own
+CSV block.  --full uses paper-scale episode counts (slow on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("memory_compute_table", "Table 2: backward memory & MACs"),
+    ("kernel_bench", "Kernel oracle sweeps + XLA timings"),
+    ("roofline", "Roofline from dry-run cells"),
+    ("latency_breakdown", "Tables 9/10: latency breakdown"),
+    ("accuracy_table", "Table 1: accuracy vs baselines"),
+    ("criterion_ablation", "Table 3: criterion ablation"),
+    ("channel_selection", "Fig 4/6b: channel selection"),
+    ("meta_training_effect", "Fig 6a: meta-training effect"),
+    ("layer_analysis", "Fig 3: per-layer contribution"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    summary = ["name,us_per_call,derived"]
+    for mod_name, desc in BENCHES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"\n=== {mod_name}: {desc} ===", flush=True)
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+        t0 = time.perf_counter()
+        try:
+            lines = mod.main(quick=not args.full)
+            dt = time.perf_counter() - t0
+            for line in lines:
+                print(line)
+            derived = lines[-1].replace(",", ";") if lines else ""
+            summary.append(f"{mod_name},{dt*1e6:.0f},{derived}")
+        except Exception as e:  # keep the suite running
+            dt = time.perf_counter() - t0
+            print(f"[bench] {mod_name} FAILED: {type(e).__name__}: {e}")
+            summary.append(f"{mod_name},{dt*1e6:.0f},FAILED:{type(e).__name__}")
+
+    print("\n=== summary ===")
+    for line in summary:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Distributed sparse fine-tuning of an assigned LM architecture.
+
+Uses the same launcher path as production (``repro.launch.train``):
+Fisher probe on the first batch -> budgeted policy -> sparse train steps
+with fault-tolerant checkpointing.  Run at smoke scale on CPU; the full
+configs take the production mesh via --production-mesh on a pod.
+
+    PYTHONPATH=src:. python examples/distributed_finetune.py
+"""
+import subprocess
+import sys
+
+cmd = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "qwen2-1.5b", "--preset", "smoke",
+    "--steps", "60", "--batch", "8", "--seq", "128",
+    "--mode", "tinytrain", "--mem-budget-mb", "8",
+    "--compute-frac", "0.5", "--ckpt-dir", "/tmp/repro_example_ckpt",
+]
+print("+", " ".join(cmd))
+raise SystemExit(subprocess.call(cmd))

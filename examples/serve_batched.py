@@ -1,0 +1,51 @@
+"""Serve a TinyTrain-adapted model with continuous batching.
+
+Adapts a small LM to a synthetic task, folds the deltas into a serving
+parameter copy (zero serving overhead), and runs batched requests through
+the slot-multiplexed decode engine.
+
+    PYTHONPATH=src:. python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Budget, adapt_task, lm_backbone
+from repro.data import augment_lm_support, lm_episode
+from repro.models import transformer as T
+from repro.models.api import ArchConfig
+from repro.optim import adam
+from repro.serving import Request, ServeEngine, fold_deltas
+
+cfg = ArchConfig(name="serve-demo", family="dense", n_layers=4, d_model=64,
+                 vocab=256, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                 dtype="float32").validate()
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+bb = lm_backbone(cfg, tokens_per_batch=48 * 64, batch_size=48)
+
+# adapt to a synthetic token-distribution task
+rng = np.random.default_rng(0)
+ep = lm_episode(rng, cfg.vocab, 64, max_way=5, support_pad=48, query_pad=48)
+sup = {k: jnp.asarray(v) for k, v in ep.support.items()}
+pq = {k: jnp.asarray(v) for k, v in augment_lm_support(rng, ep.support).items()}
+res = adapt_task(bb, params, sup, pq,
+                 Budget(mem_bytes=4e6, compute_frac=0.5), adam(3e-3),
+                 iters=10, max_way=8)
+print("adapted:", res.policy.describe())
+
+# fold deltas -> serving copy; engine sees plain weights
+serving_params = fold_deltas(cfg, params, res.deltas, res.policy)
+eng = ServeEngine(cfg, serving_params, slots=4, max_len=96)
+reqs = [Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 16))).astype(np.int32),
+                max_new=12)
+        for i in range(10)]
+t0 = time.perf_counter()
+eng.run(reqs)
+dt = time.perf_counter() - t0
+toks = sum(len(r.out) for r in reqs)
+print(f"served {len(reqs)} requests / {toks} tokens in {dt:.1f}s "
+      f"({toks/dt:.1f} tok/s, {eng.ticks} ticks, 4 slots)")
+assert all(r.done for r in reqs)

@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` for every assigned config.
+
+Each module exposes ``config()`` (exact published dims) and ``reduced()``
+(same family, CPU-smoke scale).  The paper's own edge CNNs are registered
+under their names as well (used by the reproduction benchmarks, not the
+TPU dry-run).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.api import ArchConfig
+
+_LM_ARCHS = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "paligemma-3b": "paligemma_3b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "gemma-2b": "gemma_2b",
+    "starcoder2-3b": "starcoder2_3b",
+    "stablelm-12b": "stablelm_12b",
+    "qwen2-1.5b": "qwen2_1p5b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "whisper-base": "whisper_base",
+}
+
+_CNN_ARCHS = ("mcunet", "mobilenetv2", "proxylessnas")
+
+
+def lm_arch_ids() -> List[str]:
+    return list(_LM_ARCHS)
+
+
+def get_config(arch: str) -> ArchConfig:
+    mod = importlib.import_module(f".{_LM_ARCHS[arch]}", __name__)
+    return mod.config()
+
+
+def get_reduced(arch: str) -> ArchConfig:
+    mod = importlib.import_module(f".{_LM_ARCHS[arch]}", __name__)
+    return mod.reduced()
+
+
+def get_cnn(arch: str):
+    from ..models import edge_cnn
+    return edge_cnn.EDGE_CNNS[arch]()

@@ -1,0 +1,124 @@
+"""Algorithm 1: the TinyTrain online stage, end to end.
+
+Given a meta-trained backbone, a target task's support set and the device
+budgets: (1) one gradient probe on the support set; (2) Fisher potential per
+unit; (3) multi-objective scores; (4) budgeted layer selection + top-K
+channel selection; (5) sparse fine-tuning of the selected deltas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import Optimizer
+from .backbones import Backbone
+from .criterion import Budget
+from .fisher import fisher_probe
+from .policy import SparseUpdatePolicy
+from .protonet import episode_accuracy, episode_loss
+from .selection import select_policy
+from .sparse import make_episode_sparse_step
+
+
+@dataclasses.dataclass
+class AdaptResult:
+    deltas: Any
+    policy: SparseUpdatePolicy
+    fisher_seconds: float
+    train_seconds: float
+    losses: list
+
+
+def adapt_task(
+    backbone: Backbone,
+    params: Any,
+    support: Dict[str, jax.Array],
+    pseudo_query: Dict[str, jax.Array],
+    budget: Budget,
+    optimizer: Optimizer,
+    *,
+    iters: int = 40,
+    max_way: int = 16,
+    criterion: str = "tinytrain",
+    shard_channels: int = 1,
+    policy_override: Optional[SparseUpdatePolicy] = None,
+    step_cache=None,  # EpisodeStepCache: reuse compiles across tasks
+) -> AdaptResult:
+    """Run Algorithm 1 for one target task.
+
+    ``pseudo_query`` is the augmented support set used for backprop (Hu et
+    al. 2022 procedure, Appendix C).  ``policy_override`` lets ablations
+    inject static policies (random/L2 channels, ES policies, ...).
+    """
+    n = int(np.sum(np.asarray(support["episode_labels"]) >= 0))
+
+    if policy_override is None:
+        if step_cache is not None:
+            # steady-state path: probe compiled once per backbone
+            batch_pad = next(
+                v.shape[0] for v in jax.tree_util.tree_leaves(support))
+            taps = backbone.make_taps(batch_pad)
+            t0 = time.perf_counter()
+            g = step_cache.probe_grad()(params, support, pseudo_query, taps)
+            g = jax.tree_util.tree_map(np.asarray, g)
+            potentials, chans = backbone.fisher_from_grads(g, n)
+            fisher_dt = time.perf_counter() - t0
+        else:
+            def probe_loss(p, batch, taps=None):
+                return episode_loss(
+                    backbone.features, p, support, pseudo_query, max_way,
+                    taps=taps)
+
+            potentials, chans, fisher_dt = fisher_probe(
+                backbone, params, probe_loss, support, n
+            )
+        policy = select_policy(
+            backbone.unit_costs, potentials, chans, budget,
+            criterion=criterion, shard_channels=shard_channels,
+        )
+    else:
+        policy = policy_override
+        fisher_dt = 0.0
+
+    deltas = backbone.init_deltas(policy)
+    opt_state = optimizer.init(deltas)
+
+    t0 = time.perf_counter()
+    losses = []
+    if step_cache is not None:
+        step = step_cache.step(policy)
+        ci = step_cache.chan_idx_arrays(policy)
+        for _ in range(iters):
+            deltas, opt_state, loss = step(
+                params, deltas, opt_state, support, pseudo_query, ci)
+            losses.append(float(loss))
+    else:
+        step = make_episode_sparse_step(
+            backbone.features, policy, optimizer, max_way)
+        for _ in range(iters):
+            deltas, opt_state, loss = step(
+                params, deltas, opt_state, support, pseudo_query)
+            losses.append(float(loss))
+    train_dt = time.perf_counter() - t0
+    return AdaptResult(deltas, policy, fisher_dt, train_dt, losses)
+
+
+def evaluate_task(
+    backbone: Backbone,
+    params: Any,
+    deltas: Any,
+    policy: Optional[SparseUpdatePolicy],
+    support: Dict[str, jax.Array],
+    query: Dict[str, jax.Array],
+    max_way: int = 16,
+) -> float:
+    kw = {"deltas": deltas, "plan": policy} if policy is not None else {}
+    acc = episode_accuracy(
+        backbone.features, params, support, query, max_way, **kw
+    )
+    return float(acc)

@@ -1,0 +1,265 @@
+"""Backbone adapters: uniform TinyTrain surface over LM and edge-CNN models.
+
+A :class:`Backbone` bundles everything the task-adaptive sparse-update engine
+needs from a model family: unit cost descriptions (Eq. 3 denominators),
+Fisher tap construction, tap-gradient -> Fisher reduction, delta-parameter
+initialisation, and feature/loss closures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import edge_cnn as E
+from ..models import layers as ML
+from ..models import ssm as MS
+from ..models import transformer as T
+from ..models.api import ArchConfig
+from .criterion import UnitCost
+from .policy import SparseUpdatePolicy
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Backbone:
+    kind: str  # lm | cnn
+    cfg: Any
+    unit_costs: List[UnitCost]
+    init: Callable[[jax.Array], Params]
+    features: Callable[..., jax.Array]
+    loss: Optional[Callable[..., jax.Array]]
+    make_taps: Callable[[int], Any]
+    fisher_from_grads: Callable[[Any, int], Tuple[np.ndarray, Dict]]
+    init_deltas: Callable[[SparseUpdatePolicy], Any]
+    weight_l2: Callable[[Params], Dict[Tuple[int, str], np.ndarray]]
+
+    def cost_by_key(self) -> Dict[Tuple[int, str], UnitCost]:
+        return {(c.layer, c.kind): c for c in self.unit_costs}
+
+
+# ---------------------------------------------------------------------------
+# LM backbone
+# ---------------------------------------------------------------------------
+
+
+def _lm_group_kinds(cfg: ArchConfig, gi: int) -> Tuple[str, str, int, int]:
+    """(mixer_kind, ffn_kind, mixer_channels, ffn_channels) of group gi."""
+    groups = T.stack_groups(cfg)
+    ids = groups[gi][1]
+    lid = ids[0]
+    bk = T.block_kind(cfg, lid)
+    fk = T.ffn_kind(cfg, lid)
+    mixer_kind = "ssm" if bk == "ssm" else "attn"
+    mixer_ch = cfg.n_ssm_heads if bk == "ssm" else cfg.n_heads
+    if fk == "moe":
+        ffn_ch = cfg.n_experts
+    elif fk == "mlp":
+        ffn_ch = (
+            cfg.dense_d_ff
+            if (cfg.n_experts and lid < cfg.moe_start_layer)
+            else cfg.d_ff
+        )
+    else:
+        ffn_ch = 0
+    return mixer_kind, fk, mixer_ch, ffn_ch
+
+
+def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Backbone:
+    dtype_bytes = jnp.dtype(cfg.dtype).itemsize
+    descs = T.unit_descs(cfg)
+    costs = [
+        UnitCost(
+            layer=d.layer,
+            kind=d.kind,
+            n_channels=d.n_channels,
+            n_params=d.n_params,
+            macs=d.macs_per_token * tokens_per_batch,
+            act_in_bytes=2 * tokens_per_batch * cfg.d_model * dtype_bytes,
+            dx_macs=d.macs_per_token * tokens_per_batch,
+        )
+        for d in descs
+    ]
+    groups = T.stack_groups(cfg)
+
+    def make_taps(n: int):
+        taps = {}
+        for gi, (_, ids) in enumerate(groups):
+            mk, fk, mc, fc = _lm_group_kinds(cfg, gi)
+            g: Dict[str, jax.Array] = {
+                "mixer": jnp.ones((len(ids), n, mc), jnp.float32)
+            }
+            if fk != "none":
+                g["ffn"] = jnp.ones((len(ids), n, fc), jnp.float32)
+            taps[f"g{gi}"] = g
+        return taps
+
+    def fisher_from_grads(tg, n: int):
+        chans: Dict[Tuple[int, str], np.ndarray] = {}
+        for gi, (_, ids) in enumerate(groups):
+            mk, fk, _, _ = _lm_group_kinds(cfg, gi)
+            gm = np.asarray(tg[f"g{gi}"]["mixer"], np.float64)  # (L, B, C)
+            d_mix = np.sum(gm**2, axis=1) / (2.0 * n)  # (L, C)
+            for j, lid in enumerate(ids):
+                chans[(lid, mk)] = d_mix[j]
+            if fk != "none":
+                gf = np.asarray(tg[f"g{gi}"]["ffn"], np.float64)
+                d_ffn = np.sum(gf**2, axis=1) / (2.0 * n)
+                for j, lid in enumerate(ids):
+                    chans[(lid, fk)] = d_ffn[j]
+        potentials = np.array(
+            [chans[(c.layer, c.kind)].sum() for c in costs], np.float64
+        )
+        return potentials, chans
+
+    def init_deltas(policy: SparseUpdatePolicy):
+        # deltas follow the model dtype: keeps backward cotangents (the
+        # (B,S,K) gathered-dy tensors) out of f32; adam math is f32 anyway
+        dtype = jnp.dtype(cfg.dtype)
+        deltas: Dict[str, Dict[str, Any]] = {}
+        for u in policy.units:
+            lid, kind, k = u.layer, u.kind, u.n_channels
+            if kind == "attn":
+                d = (
+                    ML.mla_delta_init(cfg, k, dtype)
+                    if cfg.mla
+                    else ML.attn_delta_init(cfg, k, dtype)
+                )
+            elif kind == "ssm":
+                d = MS.ssd_delta_init(cfg, k, dtype)
+            elif kind == "moe":
+                d = ML.moe_delta_init(cfg, k, dtype)
+            else:
+                f = (
+                    cfg.dense_d_ff
+                    if (cfg.n_experts and lid < cfg.moe_start_layer)
+                    else cfg.d_ff
+                )
+                d = ML.mlp_delta_init(cfg.d_model, k, cfg.act, dtype)
+            deltas.setdefault(f"L{lid}", {})[kind] = d
+        return deltas
+
+    def weight_l2(params) -> Dict[Tuple[int, str], np.ndarray]:
+        out: Dict[Tuple[int, str], np.ndarray] = {}
+        for gi, (_, ids) in enumerate(groups):
+            st = params["stacks"][f"g{gi}"]
+            mk, fk, _, _ = _lm_group_kinds(cfg, gi)
+            for j, lid in enumerate(ids):
+                if mk == "attn" and not cfg.mla:
+                    wq = np.asarray(st["attn"]["wq"][j], np.float64)
+                    wo = np.asarray(st["attn"]["wo"][j], np.float64)
+                    h, dh = cfg.n_heads, cfg.head_dim
+                    nq = (wq.reshape(-1, h, dh) ** 2).sum((0, 2))
+                    no = (wo.reshape(h, dh, -1) ** 2).sum((1, 2))
+                    out[(lid, "attn")] = np.sqrt(nq + no)
+                elif mk == "attn" and cfg.mla:
+                    wq = np.asarray(st["attn"]["w_uq"][j], np.float64)
+                    h = cfg.n_heads
+                    out[(lid, "attn")] = np.sqrt(
+                        (wq.reshape(-1, h, cfg.qk_nope_dim + cfg.qk_rope_dim) ** 2).sum((0, 2))
+                    )
+                else:
+                    wx = np.asarray(st["ssm"]["w_x"][j], np.float64)
+                    h, p = cfg.n_ssm_heads, cfg.ssm_head_dim
+                    out[(lid, "ssm")] = np.sqrt((wx.reshape(-1, h, p) ** 2).sum((0, 2)))
+                if fk == "mlp":
+                    wg = np.asarray(st["mlp"]["w_up"][j], np.float64)
+                    wd = np.asarray(st["mlp"]["w_down"][j], np.float64)
+                    out[(lid, "mlp")] = np.sqrt((wg**2).sum(0) + (wd**2).sum(1))
+                elif fk == "moe":
+                    wg = np.asarray(st["moe"]["w_up"][j], np.float64)
+                    out[(lid, "moe")] = np.sqrt((wg**2).sum((1, 2)))
+        return out
+
+    def features(params, batch, *, deltas=None, plan=None, taps=None, chan_idx=None):
+        return T.pooled_features(cfg, params, batch, deltas=deltas, plan=plan,
+                                 taps=taps, chan_idx=chan_idx)
+
+    def loss(params, batch, *, deltas=None, plan=None, taps=None, chan_idx=None):
+        return T.lm_loss(cfg, params, batch, deltas=deltas, plan=plan,
+                         taps=taps, chan_idx=chan_idx)
+
+    return Backbone(
+        kind="lm",
+        cfg=cfg,
+        unit_costs=costs,
+        init=lambda key: T.init_params(cfg, key),
+        features=features,
+        loss=loss,
+        make_taps=make_taps,
+        fisher_from_grads=fisher_from_grads,
+        init_deltas=init_deltas,
+        weight_l2=weight_l2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CNN backbone (paper-faithful path)
+# ---------------------------------------------------------------------------
+
+
+def cnn_backbone(cfg: E.CnnConfig, batch_size: int) -> Backbone:
+    layer_costs = E.cnn_layer_costs(cfg)
+    costs = [
+        UnitCost(
+            layer=i,
+            kind="conv",
+            n_channels=c["c_out"],
+            n_params=c["params"],
+            macs=c["macs"] * batch_size,
+            # B4: input activation map needed for dW (exact for conv)
+            act_in_bytes=4 * batch_size * c["act"] * (
+                cfg.layers[i].c_in / max(c["c_out"], 1)
+            ),
+            dx_macs=c["macs"] * batch_size,
+        )
+        for i, c in enumerate(layer_costs)
+    ]
+
+    def make_taps(n: int):
+        return [
+            jnp.ones((n, spec.c_out), jnp.float32) for spec in cfg.layers
+        ]
+
+    def fisher_from_grads(tg, n: int):
+        chans = {
+            (i, "conv"): np.sum(np.asarray(g, np.float64) ** 2, axis=0) / (2.0 * n)
+            for i, g in enumerate(tg)
+        }
+        potentials = np.array([chans[(i, "conv")].sum() for i in range(cfg.n_layers)])
+        return potentials, chans
+
+    def init_deltas(policy: SparseUpdatePolicy):
+        return {
+            f"L{u.layer}": {"conv": E.cnn_delta_init(cfg, u.layer, u.n_channels)}
+            for u in policy.units
+        }
+
+    def weight_l2(params) -> Dict[Tuple[int, str], np.ndarray]:
+        return {
+            (i, "conv"): np.sqrt(
+                (np.asarray(p["w"], np.float64) ** 2).sum((0, 1, 2))
+            )
+            for i, p in enumerate(params)
+        }
+
+    def features(params, batch, *, deltas=None, plan=None, taps=None, chan_idx=None):
+        return E.cnn_features(cfg, params, batch["images"], deltas=deltas,
+                              plan=plan, taps=taps, chan_idx=chan_idx)
+
+    return Backbone(
+        kind="cnn",
+        cfg=cfg,
+        unit_costs=costs,
+        init=lambda key: E.cnn_init(cfg, key),
+        features=features,
+        loss=None,
+        make_taps=make_taps,
+        fisher_from_grads=fisher_from_grads,
+        init_deltas=init_deltas,
+        weight_l2=weight_l2,
+    )

@@ -1,0 +1,239 @@
+"""Baseline on-device training methods (paper Sec. 3.1 / Appendix A.5).
+
+- None:          no adaptation (evaluate the meta-trained backbone as-is).
+- FullTrain:     fine-tune the entire backbone.
+- LastLayer:     update only the last unit.
+- TinyTL:        lite-residual adapters (Cai et al. 2020), backbone frozen.
+- AdapterDrop-X: TinyTL with the first X% of block adapters dropped.
+- SparseUpdate:  static layer/channel policy from an offline evolutionary
+                 search on a *proxy* dataset (Lin et al. 2022) — the paper's
+                 SOTA comparison point.  Its policy cannot adapt per task;
+                 TinyTrain's can.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..models import edge_cnn as E
+from ..optim import Optimizer, apply_updates
+from .backbones import Backbone
+from .criterion import Budget, UnitCost, policy_backward_macs, policy_memory_bytes
+from .policy import SelectedUnit, SparseUpdatePolicy
+from .selection import topk_channels
+
+
+# ---------------------------------------------------------------------------
+# FullTrain
+# ---------------------------------------------------------------------------
+
+
+def make_full_train_step(loss_fn, optimizer: Optimizer):
+    """Differentiates every backbone parameter (unbounded-resource baseline)."""
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch)
+        )(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return jax.jit(step, donate_argnums=(0, 1))
+
+
+def make_full_episode_step(feature_fn, optimizer: Optimizer, max_way: int):
+    from .protonet import episode_loss
+
+    def step(params, opt_state, support, query):
+        loss, grads = jax.value_and_grad(
+            lambda p: episode_loss(feature_fn, p, support, query, max_way)
+        )(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return jax.jit(step, donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Static SparseUpdate (Lin et al. 2022): offline evolutionary search
+# ---------------------------------------------------------------------------
+
+
+def evolutionary_search_policy(
+    costs: Sequence[UnitCost],
+    contributions: np.ndarray,  # per-unit accuracy-gain proxy on PROXY data
+    budget: Budget,
+    *,
+    iters: int = 500,
+    pop: int = 32,
+    seed: int = 0,
+    channel_ratios: Tuple[float, ...] = (0.125, 0.25, 0.5, 1.0),
+) -> SparseUpdatePolicy:
+    """Offline ES over (unit subset, per-unit channel ratio).
+
+    Fitness = Σ contribution_i · ratio_i  subject to memory/compute budgets —
+    the additive-contribution surrogate used by MCUNetV3's search.  This runs
+    *offline on proxy data*; the resulting policy is static at deployment,
+    which is precisely the limitation TinyTrain removes.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(costs)
+    full_bwd = sum(c.dx_macs + c.macs for c in costs)
+
+    def decode(genome):
+        sel = [
+            (costs[i], max(1, int(round(costs[i].n_channels * channel_ratios[g]))))
+            for i, g in enumerate(genome)
+            if g >= 0
+        ]
+        return sel
+
+    def fitness(genome):
+        sel = decode(genome)
+        if not sel:
+            return -1e9
+        horizon = min(c.layer for c, _ in sel)
+        mem = policy_memory_bytes(sel, budget)
+        macs = policy_backward_macs(
+            costs, {(c.layer, c.kind): k for c, k in sel}, horizon
+        )
+        if mem > budget.mem_bytes or macs > budget.compute_frac * full_bwd:
+            return -1e9
+        return sum(
+            contributions[i] * (k / costs[i].n_channels)
+            for i, (c, k) in zip(
+                [j for j, g in enumerate(genome) if g >= 0], sel
+            )
+        )
+
+    # genome: per unit, -1 (off) or ratio index
+    popu = [np.full(n, -1, np.int32) for _ in range(pop)]
+    for g in popu:
+        on = rng.choice(n, size=max(1, n // 8), replace=False)
+        g[on] = rng.integers(0, len(channel_ratios), size=len(on))
+    fits = [fitness(g) for g in popu]
+    for _ in range(iters):
+        # tournament + mutate
+        a, b = rng.integers(0, pop, 2)
+        parent = popu[a] if fits[a] >= fits[b] else popu[b]
+        child = parent.copy()
+        for _m in range(rng.integers(1, 4)):
+            i = rng.integers(0, n)
+            child[i] = rng.integers(-1, len(channel_ratios))
+        f = fitness(child)
+        worst = int(np.argmin(fits))
+        if f > fits[worst]:
+            popu[worst] = child
+            fits[worst] = f
+    best = popu[int(np.argmax(fits))]
+    sel = decode(best)
+    units = []
+    for c, k in sel:
+        # static: channels by contribution order proxy = first-k (no target
+        # data available offline, so channel pick cannot be task-adaptive)
+        units.append(SelectedUnit(c.layer, c.kind, tuple(range(k))))
+    units.sort(key=lambda u: (u.layer, u.kind))
+    horizon = min((u.layer for u in units), default=0)
+    return SparseUpdatePolicy(
+        horizon=horizon, units=tuple(units),
+        meta={"source": "sparse_update_es", "fitness": float(np.max(fits))},
+    )
+
+
+# ---------------------------------------------------------------------------
+# TinyTL lite-residual adapters (CNN) + AdapterDrop
+# ---------------------------------------------------------------------------
+
+
+def tinytl_adapter_init(cfg: E.CnnConfig, key, reduction: int = 4) -> Dict[str, Any]:
+    """One lite-residual module per inverted-residual block."""
+    blocks: Dict[int, Tuple[int, int]] = {}
+    for i, spec in enumerate(cfg.layers):
+        blocks.setdefault(spec.block, (spec.c_in, spec.c_out))
+        blocks[spec.block] = (blocks[spec.block][0], spec.c_out)
+    adapters = {}
+    keys = jax.random.split(key, len(blocks))
+    for (b, (cin, cout)), k in zip(sorted(blocks.items()), keys):
+        r = max(8, cout // reduction)
+        k1, k2 = jax.random.split(k)
+        adapters[f"b{b}"] = {
+            "w1": jax.random.normal(k1, (3, 3, cin, r)) * (1.0 / np.sqrt(9 * cin)),
+            "w2": jax.random.normal(k2, (1, 1, r, cout)) * (1.0 / np.sqrt(r)),
+        }
+    return adapters
+
+
+def tinytl_features(
+    cfg: E.CnnConfig,
+    params: List[Dict[str, Any]],
+    adapters: Dict[str, Any],
+    images: jax.Array,
+    dropped_blocks: int = 0,
+) -> jax.Array:
+    """Frozen backbone + trainable lite residuals (downsample-conv-upsample)."""
+    x = images
+    referenced = {s.residual_with for s in cfg.layers if s.residual_with >= 0}
+    block_inputs: Dict[int, jax.Array] = {}
+    block_start_act: Dict[int, jax.Array] = {}
+    params = jax.tree_util.tree_map(lax.stop_gradient, params)
+
+    for i, (spec, p) in enumerate(zip(cfg.layers, params)):
+        if spec.block not in block_start_act:
+            block_start_act[spec.block] = x
+        if i in referenced:
+            block_inputs[i] = x
+        y = E._conv(x, spec, p["w"], p["b"])
+        if spec.residual_with >= 0:
+            y = y + block_inputs[spec.residual_with]
+        # apply adapter at the end of each block
+        nxt_block = cfg.layers[i + 1].block if i + 1 < len(cfg.layers) else -1
+        if nxt_block != spec.block and f"b{spec.block}" in adapters and spec.block >= dropped_blocks:
+            a = adapters[f"b{spec.block}"]
+            xin = block_start_act[spec.block]
+            h = lax.reduce_window(
+                xin, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "SAME"
+            ) / 4.0
+            h = lax.conv_general_dilated(
+                h, a["w1"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = jax.nn.relu6(h)
+            h = lax.conv_general_dilated(
+                h, a["w2"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            # upsample back to y's spatial size
+            h = jax.image.resize(h, (h.shape[0], y.shape[1], y.shape[2], h.shape[3]), "nearest")
+            y = y + h
+        x = y
+    return jnp.mean(x, axis=(1, 2))
+
+
+def make_tinytl_episode_step(
+    cfg: E.CnnConfig, optimizer: Optimizer, max_way: int, dropped_blocks: int = 0
+):
+    from .protonet import episode_loss
+
+    def feat(adapters, batch, params=None):
+        return tinytl_features(cfg, params, adapters, batch["images"],
+                               dropped_blocks=dropped_blocks)
+
+    def step(params, adapters, opt_state, support, query):
+        def f(a):
+            return episode_loss(
+                lambda aa, b: tinytl_features(cfg, params, aa, b["images"],
+                                              dropped_blocks=dropped_blocks),
+                a, support, query, max_way,
+            )
+
+        loss, grads = jax.value_and_grad(f)(adapters)
+        updates, opt_state = optimizer.update(grads, opt_state, adapters)
+        adapters = apply_updates(adapters, updates)
+        return adapters, opt_state, loss
+
+    return jax.jit(step, donate_argnums=(1, 2))

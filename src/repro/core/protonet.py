@@ -1,0 +1,109 @@
+"""ProtoNet (Snell et al. 2017) with cosine distance — paper Sec. 2.1 / Eq. 1.
+
+Supports the various-way-various-shot setting: prototypes are computed from
+whatever support labels are present, so episodes of any (K, N) work without
+re-jitting (class count is padded to ``max_way``).
+
+Offline stage: ``make_meta_train_step`` (episodic meta-training of the full
+backbone).  Online stage: the meta-testing fine-tune procedure of Hu et al.
+(2022) as adopted by the paper (Appendix C): prototypes from the support
+set, backprop on an augmented pseudo-query set.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+TEMPERATURE = 10.0  # cosine-similarity scaling (Hu et al. 2022)
+
+
+def _l2n(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # rsqrt(ss + eps) keeps the gradient finite at exactly-zero vectors
+    # (padded class prototypes), unlike norm()+eps.
+    ss = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ss + eps)
+
+
+def prototypes(
+    feats: jax.Array, labels: jax.Array, max_way: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Class centroids c_k = mean of support features per class.
+
+    Returns (protos (max_way, F), valid (max_way,)).  Labels >= max_way or
+    < 0 are ignored (padding).
+    """
+    onehot = jax.nn.one_hot(labels, max_way, dtype=feats.dtype)  # (N, K)
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    sums = onehot.T @ feats  # (K, F)
+    protos = sums / jnp.maximum(counts[:, None], 1.0)
+    return protos, counts > 0
+
+
+def proto_logits(
+    query_feats: jax.Array, protos: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Cosine-distance logits (Eq. 1 with d = cosine distance)."""
+    q = _l2n(query_feats.astype(jnp.float32))
+    p = _l2n(protos.astype(jnp.float32))
+    sim = q @ p.T  # (Nq, K); -d(f(x), c_k) ≡ sim - 1 up to a constant
+    return jnp.where(valid[None, :], TEMPERATURE * sim, -1e30)
+
+
+def episode_loss(
+    feature_fn: Callable[..., jax.Array],
+    params: Any,
+    support: Dict[str, jax.Array],
+    query: Dict[str, jax.Array],
+    max_way: int,
+    **fkw,
+) -> jax.Array:
+    """Cross-entropy of query points against support prototypes."""
+    fs = feature_fn(params, support, **fkw)
+    fq = feature_fn(params, query, **fkw)
+    protos, valid = prototypes(fs, support["episode_labels"], max_way)
+    logits = proto_logits(fq, protos, valid)
+    labels = query["episode_labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None], 1)[:, 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def episode_accuracy(
+    feature_fn: Callable[..., jax.Array],
+    params: Any,
+    support: Dict[str, jax.Array],
+    query: Dict[str, jax.Array],
+    max_way: int,
+    **fkw,
+) -> jax.Array:
+    fs = feature_fn(params, support, **fkw)
+    fq = feature_fn(params, query, **fkw)
+    protos, valid = prototypes(fs, support["episode_labels"], max_way)
+    logits = proto_logits(fq, protos, valid)
+    pred = jnp.argmax(logits, axis=-1)
+    labels = query["episode_labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((pred == labels) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_meta_train_step(
+    feature_fn: Callable[..., jax.Array],
+    optimizer,
+    max_way: int,
+):
+    """Offline meta-training: episodic full-backbone update (Sec. 2.1)."""
+    from ..optim import apply_updates
+
+    def step(params, opt_state, support, query):
+        def f(p):
+            return episode_loss(feature_fn, p, support, query, max_way)
+
+        loss, grads = jax.value_and_grad(f)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return jax.jit(step)

@@ -1,0 +1,132 @@
+"""Dynamic layer/channel selection (paper Sec. 2.2, Algorithm 1 lines 1-4).
+
+Layer selection: maximise the number of selected units taken in descending
+multi-objective-score order, subject to the memory and compute budgets.
+Channel selection: within each selected unit, the top-K channels by Fisher
+information Δ_o.
+
+TPU adaptation (see DESIGN.md): when ``shard_channels > 1``, top-K is taken
+*per contiguous channel shard* (shard-local top-K), keeping ΔW evenly
+TP-sharded and avoiding a Fisher-score all-gather.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .criterion import (
+    Budget,
+    UnitCost,
+    full_backward_macs,
+    multi_objective_scores,
+    policy_backward_macs,
+    policy_memory_bytes,
+)
+from .policy import SelectedUnit, SparseUpdatePolicy
+
+
+def topk_channels(
+    delta_o: np.ndarray, k: int, shard_channels: int = 1
+) -> np.ndarray:
+    """Top-k channel indices by Fisher information, optionally shard-local."""
+    n = delta_o.shape[0]
+    k = min(k, n)
+    if shard_channels <= 1 or n % shard_channels or k % shard_channels:
+        idx = np.argsort(-delta_o)[:k]
+        return np.sort(idx).astype(np.int32)
+    per = n // shard_channels
+    kper = k // shard_channels
+    out = []
+    for s in range(shard_channels):
+        local = delta_o[s * per : (s + 1) * per]
+        idx = np.argsort(-local)[:kper] + s * per
+        out.append(idx)
+    return np.sort(np.concatenate(out)).astype(np.int32)
+
+
+def select_policy(
+    costs: Sequence[UnitCost],
+    fisher_potential: np.ndarray,  # per-unit P (Eq. 2 summed over channels)
+    fisher_channels: Dict[Tuple[int, str], np.ndarray],  # per-unit Δ_o
+    budget: Budget,
+    *,
+    criterion: str = "tinytrain",
+    shard_channels: int = 1,
+    min_horizon: int = 0,
+) -> SparseUpdatePolicy:
+    """Greedy budgeted selection ordered by the multi-objective score."""
+    scores = multi_objective_scores(fisher_potential, costs, criterion)
+    order = np.argsort(-scores)
+    full_bwd = full_backward_macs(costs)
+
+    chosen: List[Tuple[UnitCost, int]] = []
+    selection: Dict[Tuple[int, str], int] = {}
+    for j in order:
+        c = costs[int(j)]
+        k = max(1, int(round(c.n_channels * budget.channel_ratio)))
+        if shard_channels > 1 and c.n_channels % shard_channels == 0:
+            # keep K a multiple of the shard count for even TP sharding
+            kper = max(1, k // shard_channels)
+            k = kper * shard_channels
+        cand = chosen + [(c, k)]
+        cand_sel = dict(selection)
+        cand_sel[(c.layer, c.kind)] = k
+        horizon = min(u.layer for u, _ in cand)
+        horizon = max(horizon, min_horizon)
+        mem = policy_memory_bytes(cand, budget)
+        macs = policy_backward_macs(costs, cand_sel, horizon)
+        if mem > budget.mem_bytes or macs > budget.compute_frac * full_bwd:
+            continue  # paper: progressively add while budgets hold
+        chosen = cand
+        selection = cand_sel
+
+    units = []
+    for c, k in chosen:
+        d = fisher_channels[(c.layer, c.kind)]
+        idx = topk_channels(np.asarray(d), k, shard_channels)
+        units.append(SelectedUnit(c.layer, c.kind, tuple(int(i) for i in idx)))
+    units.sort(key=lambda u: (u.layer, u.kind))
+    horizon = min((u.layer for u in units), default=0)
+    meta = {
+        "criterion": criterion,
+        "scores": {f"L{c.layer}.{c.kind}": float(scores[i]) for i, c in enumerate(costs)},
+        "mem_bytes": policy_memory_bytes(chosen, budget),
+        "backward_macs": policy_backward_macs(costs, selection, horizon),
+        "full_backward_macs": full_bwd,
+        "budget": {"mem_bytes": budget.mem_bytes, "compute_frac": budget.compute_frac,
+                   "channel_ratio": budget.channel_ratio},
+    }
+    return SparseUpdatePolicy(horizon=horizon, units=tuple(units), meta=meta)
+
+
+def static_channel_policy(
+    policy: SparseUpdatePolicy,
+    costs: Sequence[UnitCost],
+    mode: str,
+    *,
+    rng: Optional[np.random.Generator] = None,
+    weight_l2: Optional[Dict[Tuple[int, str], np.ndarray]] = None,
+) -> SparseUpdatePolicy:
+    """Replace dynamic channel choices with static ones (Fig. 4 ablation).
+
+    mode: random | l2norm — same layers & K, different channel pick.
+    """
+    rng = rng or np.random.default_rng(0)
+    by_key = {(c.layer, c.kind): c for c in costs}
+    units = []
+    for u in policy.units:
+        c = by_key[(u.layer, u.kind)]
+        k = u.n_channels
+        if mode == "random":
+            idx = np.sort(rng.choice(c.n_channels, size=k, replace=False))
+        elif mode == "l2norm":
+            w = weight_l2[(u.layer, u.kind)]
+            idx = np.sort(np.argsort(-np.asarray(w))[:k])
+        else:
+            raise ValueError(mode)
+        units.append(SelectedUnit(u.layer, u.kind, tuple(int(i) for i in idx)))
+    return SparseUpdatePolicy(
+        horizon=policy.horizon, units=tuple(units),
+        meta={**(policy.meta or {}), "channel_mode": mode},
+    )

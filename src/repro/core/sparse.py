@@ -1,0 +1,189 @@
+"""Sparse fine-tuning step builder (Algorithm 1 lines 5-6).
+
+The policy is static, so the step function closes over it and is re-jitted
+once per target task — matching the paper's "selection runs only once per
+target dataset".  Gradients are taken **only w.r.t. the delta parameters**;
+base weights are constants to autodiff, which is what yields the backward
+memory/compute savings (no dW for frozen layers; no backprop below the
+horizon; optimizer state only for deltas).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import Optimizer, apply_updates
+from ..utils import tree_size
+from .backbones import Backbone
+from .policy import SparseUpdatePolicy
+
+
+def make_sparse_train_step(
+    loss_fn: Callable[..., jax.Array],
+    policy: SparseUpdatePolicy,
+    optimizer: Optimizer,
+    *,
+    donate: bool = True,
+):
+    """loss_fn(params, batch, deltas=..., plan=...) -> scalar.
+
+    Returns step(params, deltas, opt_state, batch) -> (deltas, opt_state,
+    loss).  Params are never updated — they stay the frozen meta-trained
+    weights; deltas carry the task adaptation.
+    """
+
+    def step(params, deltas, opt_state, batch):
+        def f(d):
+            return loss_fn(params, batch, deltas=d, plan=policy)
+
+        loss, grads = jax.value_and_grad(f)(deltas)
+        updates, opt_state = optimizer.update(grads, opt_state, deltas)
+        deltas = apply_updates(deltas, updates)
+        return deltas, opt_state, loss
+
+    donate_argnums = (1, 2) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def make_episode_sparse_step(
+    feature_fn: Callable[..., jax.Array],
+    policy: SparseUpdatePolicy,
+    optimizer: Optimizer,
+    max_way: int,
+):
+    """Sparse fine-tune step for the ProtoNet meta-testing procedure."""
+    from .protonet import episode_loss
+
+    def step(params, deltas, opt_state, support, query):
+        def f(d):
+            return episode_loss(
+                feature_fn, params, support, query, max_way,
+                deltas=d, plan=policy,
+            )
+
+        loss, grads = jax.value_and_grad(f)(deltas)
+        updates, opt_state = optimizer.update(grads, opt_state, deltas)
+        deltas = apply_updates(deltas, updates)
+        return deltas, opt_state, loss
+
+    return jax.jit(step, donate_argnums=(1, 2))
+
+
+class EpisodeStepCache:
+    """Adaptation-engine jit cache: one compile per policy *structure*.
+
+    Channel indices are passed as traced arrays, so two tasks whose policies
+    select the same (layers, kinds, K) but different channels share one
+    compiled step — the common case when adapting to many user tasks.
+    """
+
+    def __init__(self, backbone: Backbone, optimizer: Optimizer, max_way: int):
+        self.backbone = backbone
+        self.optimizer = optimizer
+        self.max_way = max_way
+        self._steps: Dict = {}
+        self._evals: Dict = {}
+        self._probe = None
+
+    def probe_grad(self):
+        """Jitted Fisher-probe gradient, compiled once per backbone (episodes
+        pass their batches as arguments — no per-task retrace)."""
+        from .protonet import episode_loss
+
+        if self._probe is None:
+            feature_fn = self.backbone.features
+            max_way = self.max_way
+
+            def f(params, support, query, taps):
+                return episode_loss(feature_fn, params, support, query,
+                                    max_way, taps=taps)
+
+            self._probe = jax.jit(jax.grad(f, argnums=3))
+        return self._probe
+
+    @staticmethod
+    def _key(policy: SparseUpdatePolicy):
+        return (policy.horizon,
+                tuple((u.layer, u.kind, u.n_channels) for u in policy.units))
+
+    @staticmethod
+    def chan_idx_arrays(policy: SparseUpdatePolicy):
+        return {
+            lid: {k: jnp.asarray(v) for k, v in kinds.items()}
+            for lid, kinds in policy.channel_idx.items()
+        }
+
+    def step(self, policy: SparseUpdatePolicy):
+        from .protonet import episode_loss
+
+        key = self._key(policy)
+        if key not in self._steps:
+            feature_fn = self.backbone.features
+            optimizer = self.optimizer
+            max_way = self.max_way
+
+            def step(params, deltas, opt_state, support, query, chan_idx):
+                def f(d):
+                    return episode_loss(
+                        feature_fn, params, support, query, max_way,
+                        deltas=d, plan=policy, chan_idx=chan_idx,
+                    )
+
+                loss, grads = jax.value_and_grad(f)(deltas)
+                updates, opt_state = optimizer.update(grads, opt_state, deltas)
+                deltas = apply_updates(deltas, updates)
+                return deltas, opt_state, loss
+
+            self._steps[key] = jax.jit(step, donate_argnums=(1, 2))
+        return self._steps[key]
+
+    def evaluate(self, policy: Optional[SparseUpdatePolicy]):
+        from .protonet import episode_accuracy
+
+        key = self._key(policy) if policy is not None else None
+        if key not in self._evals:
+            feature_fn = self.backbone.features
+            max_way = self.max_way
+
+            if policy is None:
+                def ev(params, deltas, support, query, chan_idx):
+                    return episode_accuracy(
+                        feature_fn, params, support, query, max_way)
+            else:
+                def ev(params, deltas, support, query, chan_idx):
+                    return episode_accuracy(
+                        feature_fn, params, support, query, max_way,
+                        deltas=deltas, plan=policy, chan_idx=chan_idx)
+
+            self._evals[key] = jax.jit(ev)
+        return self._evals[key]
+
+
+def deltas_param_count(deltas: Any) -> int:
+    return tree_size(deltas)
+
+
+def sparse_memory_report(
+    backbone: Backbone,
+    policy: SparseUpdatePolicy,
+    deltas: Any,
+    optimizer: Optimizer,
+    param_bytes: int = 4,
+) -> Dict[str, float]:
+    """Backward-pass memory accounting in the paper's Table-2/7 format."""
+    n = deltas_param_count(deltas)
+    updated_weights = n * param_bytes
+    opt_mem = n * param_bytes * optimizer.slots
+    by_key = backbone.cost_by_key()
+    act = sum(
+        by_key[(u.layer, u.kind)].act_in_bytes for u in policy.units
+    )
+    return {
+        "updated_weights_bytes": updated_weights,
+        "optimizer_bytes": opt_mem,
+        "activation_bytes": act,
+        "total_bytes": updated_weights + opt_mem + act,
+        "delta_params": n,
+    }

@@ -1,0 +1,5 @@
+from .synthetic import (  # noqa: F401
+    DOMAINS, Episode, augment_lm_support, augment_support, lm_episode,
+    markov_tokens, sample_episode,
+)
+from .pipeline import EpisodeStream, TokenLoader  # noqa: F401

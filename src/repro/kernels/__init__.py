@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for TinyTrain's compute hot-spots.
+
+- fisher:          fused Eq. 2 reduction (online selection phase)
+- flash_attention: 32k-prefill attention with causal/SWA static skip
+- ssd_scan:        fused Mamba2 SSD chunk scan (zamba2 / mamba2 archs)
+- grad_quant:      int8 error-feedback compressor for delta all-reduces
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec) with its pure-jnp
+oracle in ref.py and jit'd wrapper in ops.py.  Validated in interpret mode
+on CPU (tests/test_kernels.py sweeps shapes & dtypes); compiled Mosaic path
+on TPU.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: flash attention (online softmax), GQA/causal/SWA.
+
+Block-tiled attention for the 32k prefill shapes: q/k/v stream through VMEM
+in (Bq, D)/(Bk, D) tiles; softmax statistics (m, l) and the output
+accumulator live in VMEM scratch across the kv-block axis (TPU grids are
+sequential over the minor axis).  Causal and sliding-window blocks that are
+fully masked are skipped with ``pl.when`` — the static-skip that halves
+causal FLOPs vs a masked dense computation.
+
+Grid: (B, Hq, Sq/Bq, Sk/Bk).  GQA: the kv block index maps query head
+h -> kv head h // (Hq/Hkv) in the BlockSpec index map (no HBM repeat).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc, m_acc, l_acc,
+    *, scale: float, n_kv_blocks: int, bq: int, bk: int,
+    causal: bool, window: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + bq - 1
+    if window > 0:
+        relevant = jnp.logical_and(relevant, k_start + bk - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_acc[...] - m_new)
+        l_acc[...] = l_acc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_acc[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _out():
+        o_ref[0, :, 0, :] = (
+            acc[...] / jnp.maximum(l_acc[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    grid = (b, hq, sq // bq, sk // bk)
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=1.0 / math.sqrt(d),
+            n_kv_blocks=sk // bk,
+            bq=bq, bk=bk, causal=causal, window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda bi, h, qi, ki: (bi, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h // group, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d), lambda bi, h, qi, ki: (bi, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the kernels execute (and are
+validated) on CPU; on TPU backends the compiled Mosaic path is used.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .fisher import fisher_pallas
+from .flash_attention import flash_attention_pallas
+from .grad_quant import grad_quant_pallas
+from .ssd_scan import ssd_scan_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_c", "interpret"))
+def fisher(a, g, *, block_d: int = 512, block_c: int = 256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return fisher_pallas(a, g, block_d=block_d, block_c=block_c,
+                         interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=256,
+                    block_k=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, a, bmat, cmat, chunk=chunk,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def grad_quant(g, err, *, block=1024, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return grad_quant_pallas(g, err, block=block, interpret=interpret)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fisher_ref(a: jax.Array, g: jax.Array) -> jax.Array:
+    """Eq. 2: Δ_o = 1/(2N) Σ_n (Σ_d a·g)².  a, g: (N, D, C) -> (C,)."""
+    u = jnp.sum(a.astype(jnp.float32) * g.astype(jnp.float32), axis=1)
+    return jnp.sum(u * u, axis=0) / (2.0 * a.shape[0])
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, H, D)   (kv heads pre-broadcast)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    a: jax.Array,  # (H,)
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence oracle: y, final_state."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp
+        dta = jnp.exp(dtt * a[None, :])  # (B,H)
+        st = st * dta[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhpn", bt, xt * dtt[..., None]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", st, ct)
+        return st, y
+
+    st0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(cmat.astype(jnp.float32), 1, 0),
+    )
+    st, ys = jax.lax.scan(step, st0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), st
+
+
+def grad_quant_ref(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Int8 error-feedback quantisation oracle: (q, scale, new_err)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale, g32 - q.astype(jnp.float32) * scale

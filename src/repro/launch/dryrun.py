@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every assigned
+(architecture × input shape) cell on the production meshes and record
+memory / cost / collective analysis for the roofline (deliverable g).
+
+MUST be run as its own process (the device-count flag above is locked at
+first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+Cells are skipped per DESIGN.md §Arch-applicability (long_500k on pure
+full-attention archs); skips are recorded in the output JSON.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..core.policy import SelectedUnit, SparseUpdatePolicy
+from ..dist.sharding import ShardingRules
+from ..models import transformer as T
+from ..models.api import ArchConfig, SHAPES_BY_NAME, ShapeConfig, shape_applicable
+from ..optim import adam, apply_updates
+from .mesh import make_production_mesh
+
+# v5e hardware constants for the roofline terms (see EXPERIMENTS.md)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+ICI_LINKS = 4  # links/chip engaged on a 2D torus mesh
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(.*?)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\("
+)
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64)\[([\d,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8}
+
+
+def _div_heads(cfg: ArchConfig, mesh) -> bool:
+    tp = mesh.shape.get("model", 1)
+    if cfg.family in ("ssm", "hybrid"):
+        return cfg.n_ssm_heads % tp == 0
+    return cfg.n_heads % tp == 0
+
+
+# ---------------------------------------------------------------------------
+# Static dry-run policy: representative TinyTrain selection
+# ---------------------------------------------------------------------------
+
+
+def dryrun_policy(cfg: ArchConfig, *, layer_frac: float = 0.25,
+                  channel_ratio: float = 0.25, align: int = 16) -> SparseUpdatePolicy:
+    """Representative policy: last ``layer_frac`` of layers, every unit,
+    ``channel_ratio`` of channels with shard-aligned strided indices.
+    (Real deployments compute this from the Fisher probe; the dry-run needs
+    a static stand-in with the same cost structure.)"""
+    from ..core.backbones import lm_backbone
+
+    bb = lm_backbone(cfg, tokens_per_batch=1, batch_size=1)
+    h = int(cfg.n_layers * (1 - layer_frac))
+    units = []
+    for c in bb.unit_costs:
+        if c.layer < h:
+            continue
+        k = max(1, int(c.n_channels * channel_ratio))
+        if c.n_channels % align == 0 and k >= align:
+            k = (k // align) * align
+            per = c.n_channels // align
+            kper = k // align
+            idx = np.concatenate([
+                np.arange(kper) + s * per for s in range(align)
+            ])
+        else:
+            idx = np.arange(k)
+        units.append(SelectedUnit(c.layer, c.kind, tuple(int(i) for i in np.sort(idx))))
+    return SparseUpdatePolicy(horizon=h, units=tuple(units),
+                              meta={"source": "dryrun_static"})
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocated)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train" or shape.kind == "prefill":
+        specs = {}
+        s_txt = s
+        if cfg.family == "vlm":
+            s_txt = s - cfg.n_img_tokens
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.img_embed_dim), jnp.dtype(cfg.dtype))
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_txt), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_txt), i32)
+        return specs
+    # decode: one new token with a seq_len KV cache
+    specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.is_encoder_decoder:
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ArchConfig, policy: SparseUpdatePolicy,
+                     logit_chunk: int = 128):
+    opt = adam(1e-4, state_dtype=jnp.bfloat16)
+
+    def step(params, deltas, opt_state, batch):
+        def f(d):
+            return T.lm_loss(cfg, params, batch, deltas=d, plan=policy,
+                             logit_chunk=logit_chunk)
+
+        loss, g = jax.value_and_grad(f)(deltas)
+        upd, opt_state = opt.update(g, opt_state, deltas)
+        deltas = apply_updates(deltas, upd)
+        return deltas, opt_state, loss
+
+    return step, opt
+
+
+def build_prefill_step(cfg: ArchConfig):
+    def step(params, batch):
+        x, positions, enc_out = T.build_inputs(cfg, params, batch)
+        h, _, _ = T.forward_hidden(cfg, params, x, positions, enc_out=enc_out)
+        return T.unembed(cfg, params, h[:, -1:])
+
+    return step
+
+
+def build_decode_step(cfg: ArchConfig):
+    def step(params, batch, caches, pos):
+        return T.decode_step(cfg, params, batch["tokens"], caches, pos,
+                             enc_out=batch.get("enc_out"))
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis
+# ---------------------------------------------------------------------------
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum result-shape bytes of every collective op in compiled HLO.
+
+    Parses lines of the form ``%x = f32[a,b] all-reduce(...)`` (including
+    async -start variants and tuple-shaped variadic collectives); -done ops
+    are skipped to avoid double counting their -start.
+    """
+    per_kind: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        lhs, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in SHAPE_RE.finditer(lhs):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    return sum(per_kind.values()), per_kind
+
+
+def analyse(compiled, n_chips: int, hlo_path: Optional[str] = None) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        # raw XLA numbers (while bodies counted ONCE — reference only)
+        out["xla_flops_once"] = float(ca.get("flops", 0.0))
+        out["xla_bytes_once"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        out["cost_error"] = str(e)
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = str(e)
+    try:
+        txt = compiled.as_text()
+        if hlo_path:
+            import gzip
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(txt)
+        # trip-count-aware analysis (see hlo_analysis.py)
+        from .hlo_analysis import analyse_hlo
+        h = analyse_hlo(txt)
+        out["flops"] = h["flops"]
+        out["bytes"] = h["bytes"]
+        out["bytes_floor"] = h.get("bytes_floor", 0.0)
+        out["t_memory_floor_s"] = h.get("bytes_floor", 0.0) / HBM_BW
+        out["collective_bytes"] = h["collective_bytes"]
+        out["collectives"] = h["collectives"]
+    except Exception as e:  # pragma: no cover
+        out["hlo_error"] = str(e)
+
+    flops = out.get("flops", 0.0)
+    bts = out.get("bytes", 0.0)
+    coll = out.get("collective_bytes", 0)
+    # cost_analysis flops/bytes are per-partition on SPMD modules
+    out["t_compute_s"] = flops / PEAK_FLOPS
+    out["t_memory_s"] = bts / HBM_BW
+    out["t_collective_s"] = coll / (ICI_LINKS * ICI_BW)
+    terms = {
+        "compute": out["t_compute_s"],
+        "memory": out["t_memory_s"],
+        "collective": out["t_collective_s"],
+    }
+    out["bottleneck"] = max(terms, key=terms.get)
+    return out
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D reference (forward+backward for train; 2·N·D decode)."""
+    from ..core.backbones import lm_backbone
+    bb = lm_backbone(cfg, tokens_per_batch=1, batch_size=1)
+    per_token = sum(c.macs for c in bb.unit_costs)  # active MACs/token
+    per_token += cfg.d_model * cfg.vocab  # unembed
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    mult = 6 if shape.kind == "train" else 2
+    return mult * per_token * tokens
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True, hlo_path: Optional[str] = None,
+             policy_kw: Optional[Dict[str, Any]] = None,
+             opts: Tuple[str, ...] = ()) -> Dict[str, Any]:
+    cfg = configs.get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opts": list(opts),
+    }
+    if not ok:
+        rec["skipped"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    # 'sp': sequence parallelism for archs whose heads don't divide TP
+    sp = "sp" in opts and not _div_heads(cfg, mesh) and shape.kind != "decode"
+    rules = ShardingRules(cfg, mesh, seq_parallel=sp)
+    rec["seq_parallel"] = sp
+
+    params_shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    params_sh = rules.params(params_shapes)
+    batch_shapes = input_specs(cfg, shape)
+    batch_sh = rules.batch(batch_shapes)
+    batch1 = shape.global_batch % int(
+        np.prod([mesh.shape[a] for a in rules.dp])) != 0
+    if batch1:
+        # batch=1 long-context cells: replicate batch, shard caches on seq
+        batch_sh = {k: NamedSharding(mesh, P(*([None] * v.ndim)))
+                    for k, v in batch_shapes.items()}
+
+    # MoE dispatch-buffer placement hint: experts over model (+data for
+    # full-EP archs like deepseek: 256 experts -> 1/chip, weights resident)
+    from ..dist import context as dist_ctx
+    ep_spec = None
+    row_moe = "rowmoe" in opts and bool(cfg.n_experts)
+    dp_t = tuple(rules.dp)
+    if cfg.n_experts:
+        if rules.shard_experts_full:
+            # per-row layout: rows stay on their data shard, experts over
+            # model; expert weights keep (model,data) storage -> bounded
+            # FSDP-style gather over 'data' per layer instead of routing
+            # every token through global all-to-alls
+            ep_spec = (P(dp_t, "model", None, None) if row_moe
+                       else P(("model", "data"), None, None))
+        elif rules.shard_experts:
+            ep_spec = (P(dp_t, "model", None, None) if row_moe
+                       else P("model", None, None))
+        elif row_moe:
+            ep_spec = P(dp_t, None, None, None)
+
+    t0 = time.time()
+    with mesh, dist_ctx.sharding_context(moe_dispatch_spec=ep_spec,
+                                         moe_row_dispatch=row_moe,
+                                         seq_parallel=sp):
+        if shape.kind == "train":
+            policy = dryrun_policy(cfg, **(policy_kw or {}))
+            # SP: CE chunk-scan would slice the sharded seq dim; disable
+            logit_chunk = 0 if sp else 128
+            from ..core.backbones import lm_backbone
+            bb = lm_backbone(cfg, tokens_per_batch=1, batch_size=1)
+            deltas_shapes = jax.eval_shape(lambda: bb.init_deltas(policy))
+            deltas_sh = rules.deltas(deltas_shapes)
+            step, opt = build_train_step(cfg, policy, logit_chunk=logit_chunk)
+            opt_shapes = jax.eval_shape(opt.init, deltas_shapes)
+            opt_sh = rules.opt_state(opt_shapes, deltas_sh)
+            jf = jax.jit(
+                step,
+                in_shardings=(params_sh, deltas_sh, opt_sh, batch_sh),
+                donate_argnums=(1, 2),
+            )
+            lowered = jf.lower(params_shapes, deltas_shapes, opt_shapes, batch_shapes)
+            rec["policy_units"] = len(policy.units)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(cfg)
+            jf = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jf.lower(params_shapes, batch_shapes)
+        else:  # decode
+            caches_shapes = cache_specs(cfg, shape)
+            caches_sh = rules.caches(caches_shapes, seq_sharded=batch1)
+            step = build_decode_step(cfg)
+            pos_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            pos_sh = NamedSharding(mesh, P(None))
+            jf = jax.jit(
+                step,
+                in_shardings=(params_sh, batch_sh, caches_sh, pos_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jf.lower(params_shapes, batch_shapes, caches_shapes, pos_spec)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        rec.update(analyse(compiled, n_chips, hlo_path=hlo_path))
+        rec["n_chips"] = n_chips
+        mf = model_flops(cfg, shape)
+        rec["model_flops_total"] = mf
+        if rec.get("flops"):
+            # cost_analysis flops are per-partition
+            rec["model_flops_ratio"] = mf / (rec["flops"] * n_chips)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+                  f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                  f"bottleneck={rec.get('bottleneck')}")
+            print(f"  memory_analysis: "
+                  f"args={rec.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+                  f"temp={rec.get('temp_size_in_bytes', 0)/1e9:.2f}GB "
+                  f"out={rec.get('output_size_in_bytes', 0)/1e9:.2f}GB (per device)")
+            print(f"  cost_analysis: flops/dev={rec.get('flops', 0):.3e} "
+                  f"bytes/dev={rec.get('bytes', 0):.3e} "
+                  f"coll_bytes/dev={rec.get('collective_bytes', 0):.3e}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", type=str, default="",
+                    help="comma list of optimizations: sp,rowmoe")
+    ap.add_argument("--tag-suffix", type=str, default="")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = configs.lm_arch_ids() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}{args.tag_suffix}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] skip existing {tag}")
+            continue
+        hlo_dir = os.path.join(args.out, "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp, opts=opts,
+                           hlo_path=os.path.join(hlo_dir, tag + ".txt.gz"))
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"[dryrun] FAIL {tag}: {rec['error']}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body **once**; our
+models scan over layers (and SSD chunks), so FLOPs/bytes/collective payloads
+must be scaled by loop trip counts.  This module parses compiled HLO text,
+reconstructs the computation call graph (while bodies, fusions, calls),
+extracts trip counts from loop conditions, and accumulates:
+
+- ``flops``: 2 x prod(result_shape) x prod(contracting dims) per dot/conv;
+- ``bytes``: result bytes of every materialising instruction (a write-once
+  proxy for HBM traffic; operands are counted at their producers);
+- ``collective_bytes``: result bytes per collective kind.
+
+Fusion computations contribute only their root result bytes (interior ops
+live in registers/VMEM); dots never fuse on TPU so their FLOPs are visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\],{}\s]+?)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$"
+)
+_SHAPE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[List[int]]:
+    out = []
+    for m in _SHAPE.finditer(type_str):
+        if m.group(1) in DTYPE_BYTES:
+            out.append([int(d) for d in m.group(2).split(",") if d])
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+    raw_args: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        line = _COMMENT.sub("", line)  # strip /*index=N*/ tuple comments
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}" or line.strip().startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_str, op, args, attrs = m.groups()
+            ops = [o for o in _OPERAND.findall(args)]
+            cur.instrs.append(
+                Instr(name, type_str.strip(), op, ops, attrs, args))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in a loop condition — JAX-emitted counted loops
+    compare the induction variable against the trip count.  The constant
+    appears in the args position of the text form: ``%c = s32[] constant(48)``.
+    """
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.match(r"^\s*(\d+)\s*$", ins.raw_args)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, types: Dict[str, str]) -> float:
+    """2 x prod(result) x prod(contracting dims of lhs)."""
+    res_dims = _shape_dims(ins.type_str)
+    if not res_dims:
+        return 0.0
+    res_n = 1
+    for d in res_dims[0]:
+        res_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contract = 1
+    if m and ins.operands:
+        lhs_type = types.get(ins.operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        if lhs_dims:
+            for di in m.group(1).split(","):
+                if di and int(di) < len(lhs_dims[0]):
+                    contract *= lhs_dims[0][int(di)]
+    return 2.0 * res_n * contract
+
+
+def _conv_flops(ins: Instr, types: Dict[str, str]) -> float:
+    res_dims = _shape_dims(ins.type_str)
+    rhs = types.get(ins.operands[1], "") if len(ins.operands) > 1 else ""
+    rhs_dims = _shape_dims(rhs)
+    if not res_dims or not rhs_dims:
+        return 0.0
+    res_n = 1
+    for d in res_dims[0]:
+        res_n *= d
+    rhs_n = 1
+    for d in rhs_dims[0]:
+        rhs_n *= d
+    out_feats = res_dims[0][-1] if res_dims[0] else 1
+    return 2.0 * res_n * (rhs_n / max(out_feats, 1))
+
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose results are pure aliases/metadata — no HBM write
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy-done", "all-reduce-done", "all-gather-done", "custom-call",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class CostResult:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_floor: float = 0.0  # kernel-quality floor: carries + params + io
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "CostResult", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_floor += other.bytes_floor * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0.0) + v * mult
+
+
+def analyse_hlo(text: str) -> Dict[str, float]:
+    comps = parse_hlo(text)
+    memo: Dict[str, CostResult] = {}
+
+    def comp_cost(name: str, depth: int = 0) -> CostResult:
+        if name in memo:
+            return memo[name]
+        if depth > 50 or name not in comps:
+            return CostResult()
+        comp = comps[name]
+        types = {i.name: i.type_str for i in comp.instrs}
+        total = CostResult()
+        for ins in comp.instrs:
+            base = CostResult()
+            if ins.op == "dot":
+                base.flops = _dot_flops(ins, types)
+                base.bytes = _shape_bytes(ins.type_str)
+            elif ins.op == "convolution":
+                base.flops = _conv_flops(ins, types)
+                base.bytes = _shape_bytes(ins.type_str)
+            elif any(ins.op.startswith(c) for c in COLLECTIVES):
+                if not ins.op.endswith("-done"):
+                    b = _shape_bytes(ins.type_str)
+                    kind = next(c for c in COLLECTIVES if ins.op.startswith(c))
+                    base.collective_bytes = b
+                    base.per_collective[kind] = b
+                    base.bytes = b
+            elif ins.op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+                if m:
+                    inner = comp_cost(m.group(1), depth + 1)
+                    base.flops = inner.flops  # dots inside fusions still count
+                base.bytes = _shape_bytes(ins.type_str)
+            elif ins.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                if mb:
+                    trips = _trip_count(comps[mc.group(1)]) if (
+                        mc and mc.group(1) in comps) else 1
+                    inner = comp_cost(mb.group(1), depth + 1)
+                    total.add(inner, mult=trips)
+                    # memory floor: the loop-carried state is read+written
+                    # once per iteration even with perfect in-loop fusion
+                    total.bytes_floor += _shape_bytes(ins.type_str) * trips
+                continue
+            elif ins.op in ("call", "conditional", "async-start"):
+                for m in re.finditer(
+                        r"(?:to_apply|calls|branch_computations=\{)[=%]*([\w\.\-]+)",
+                        ins.attrs):
+                    total.add(comp_cost(m.group(1), depth + 1))
+                base.bytes = _shape_bytes(ins.type_str)
+            elif ins.op in _NO_TRAFFIC:
+                pass
+            else:
+                base.bytes = _shape_bytes(ins.type_str)
+            total.add(base)
+        memo[name] = total
+        return total
+
+    # entry computation: the one named ``main`` or containing ENTRY marker
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None:
+        # fall back: computation not referenced by others
+        entry = list(comps)[-1]
+    res = comp_cost(entry)
+    # floor also pays entry parameters (weights read once) and collectives
+    param_bytes = sum(
+        _shape_bytes(i.type_str)
+        for i in comps[entry].instrs if i.op == "parameter"
+    )
+    return {
+        "flops": res.flops,
+        "bytes": res.bytes,
+        "bytes_floor": res.bytes_floor + param_bytes + res.collective_bytes,
+        "collective_bytes": res.collective_bytes,
+        "collectives": dict(res.per_collective),
+    }

@@ -1,0 +1,24 @@
+"""Production mesh construction (deliverable e).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.  Axes:
+  pod   — outer data parallelism across pods (2 pods = 512 chips)
+  data  — inner data parallelism / ZeRO sharding (16)
+  model — tensor/expert parallelism (16)
+Larger topologies (e.g. (8,16,16) = 2048 chips) only change ``shape``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices exist (CI / smoke tests)."""
+    data = max(1, n_devices // model)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,93 @@
+"""Recompute cell analyses from saved HLO artifacts (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir results/dryrun
+
+Also attaches the *sparse-ideal* FLOPs reference for train cells: the
+minimum work the TinyTrain step needs (forward everywhere + dX through the
+backprop span + dW for selected channels, per the paper's cost model) —
+the denominator for the useful-compute fraction in §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from .. import configs
+from ..core.backbones import lm_backbone
+from ..core.criterion import policy_backward_macs
+from ..models.api import SHAPES_BY_NAME
+from .dryrun import HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS, dryrun_policy, model_flops
+from .hlo_analysis import analyse_hlo
+
+
+def sparse_ideal_flops(arch: str, shape) -> float:
+    """2x(fwd MACs + policy backward MACs) for the dry-run policy."""
+    cfg = configs.get_config(arch)
+    bb = lm_backbone(cfg, tokens_per_batch=1, batch_size=1)
+    per_token = sum(c.macs for c in bb.unit_costs) + cfg.d_model * cfg.vocab
+    tokens = shape.global_batch * shape.seq_len
+    fwd = per_token * tokens
+    policy = dryrun_policy(cfg)
+    sel = {(u.layer, u.kind): u.n_channels for u in policy.units}
+    costs = [
+        type(c)(c.layer, c.kind, c.n_channels, c.n_params,
+                c.macs * tokens, c.act_in_bytes, c.dx_macs * tokens)
+        for c in bb.unit_costs
+    ]
+    bwd = policy_backward_macs(costs, sel, policy.horizon)
+    return 2.0 * (fwd + bwd)
+
+
+def reanalyze(path: str, hlo_dir: str) -> bool:
+    with open(path) as f:
+        rec = json.load(f)
+    if "skipped" in rec or "error" in rec:
+        return False
+    tag = os.path.splitext(os.path.basename(path))[0]
+    hlo_path = os.path.join(hlo_dir, tag + ".txt.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with gzip.open(hlo_path, "rt") as f:
+        txt = f.read()
+    h = analyse_hlo(txt)
+    rec["flops"] = h["flops"]
+    rec["bytes"] = h["bytes"]
+    rec["bytes_floor"] = h.get("bytes_floor", 0.0)
+    rec["t_memory_floor_s"] = h.get("bytes_floor", 0.0) / HBM_BW
+    rec["collective_bytes"] = h["collective_bytes"]
+    rec["collectives"] = h["collectives"]
+    rec["t_compute_s"] = h["flops"] / PEAK_FLOPS
+    rec["t_memory_s"] = h["bytes"] / HBM_BW
+    rec["t_collective_s"] = h["collective_bytes"] / (ICI_LINKS * ICI_BW)
+    terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+             "collective": rec["t_collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    if rec.get("flops"):
+        rec["model_flops_ratio"] = rec["model_flops_total"] / (
+            rec["flops"] * rec["n_chips"])
+    if shape.kind == "train":
+        rec["sparse_ideal_flops"] = sparse_ideal_flops(rec["arch"], shape)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    hlo_dir = os.path.join(args.dir, "hlo")
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reanalyze(path, hlo_dir):
+            n += 1
+            print(f"[reanalyze] {os.path.basename(path)}")
+    print(f"[reanalyze] updated {n} cells")
+
+
+if __name__ == "__main__":
+    main()

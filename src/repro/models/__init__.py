@@ -1,0 +1,3 @@
+"""Model zoo: LM-family transformer/SSM backbones + edge CNNs."""
+from .api import ArchConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME, shape_applicable  # noqa: F401
+from . import layers, ssm, transformer, edge_cnn  # noqa: F401

@@ -1,0 +1,134 @@
+"""Architecture configuration and the model-zoo public surface.
+
+Every assigned architecture is described by a single :class:`ArchConfig`;
+``src/repro/configs/<id>.py`` instantiate them with the exact published
+dimensions, and each provides a ``reduced()`` variant for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Configuration for one LM-family architecture.
+
+    The same dataclass covers dense / MoE / SSM / hybrid / VLM / audio
+    backbones; unused blocks stay at their zero defaults.
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    # --- attention ---
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 = full attention
+    # --- mlp ---
+    d_ff: int = 0
+    act: str = "swiglu"  # swiglu | geglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    moe_start_layer: int = 0  # layers below this use the dense MLP
+    dense_d_ff: int = 0  # d_ff of the dense layers in a MoE model
+    capacity_factor: float = 1.25
+    # --- MLA (deepseek) ---
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp: bool = False  # multi-token-prediction auxiliary head
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    d_conv: int = 4
+    # --- hybrid (zamba2): one weight-shared attn block every k ssm layers ---
+    hybrid_attn_every: int = 0
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    enc_len: int = 0
+    # --- VLM (paligemma) ---
+    n_img_tokens: int = 0
+    img_embed_dim: int = 0
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    # --- long-context capability (decides long_500k applicability) ---
+    subquadratic: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.n_enc_layers > 0
+
+    def validate(self) -> "ArchConfig":
+        assert self.family in {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+        if self.family in {"dense", "moe", "vlm", "audio"}:
+            assert self.n_heads > 0 and self.head_dim > 0
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+        if self.family in {"ssm", "hybrid"}:
+            assert self.ssm_state > 0
+            assert self.d_inner % self.ssm_head_dim == 0
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_training(self) -> bool:
+        return self.kind == "train"
+
+
+# The four assigned shape cells for the LM-family pool.
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason recorded when skipped."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k decode is not sub-quadratic"
+    return True, ""

@@ -1,0 +1,268 @@
+"""Edge CNN backbones — the paper's own model family.
+
+MCUNet / MobileNetV2-0.35 / ProxylessNAS-0.3 style inverted-residual
+backbones (Table 4 of the paper: 42/52/61 conv layers, 14/17/20 blocks,
+0.46M/0.29M/0.36M params).  The exact NAS'd cells are not published in the
+text, so these are *-style* reproductions matched on depth, width multiplier
+and cost envelope; the TinyTrain machinery (Fisher taps, per-layer deltas,
+backprop horizon) is exact.
+
+Used by the paper-reproduction benchmarks (Tables 1–3, Figs. 3/4/6); the
+LM-family archs in ``transformer.py`` are the TPU-scale targets.
+
+Representation: a flat list of conv layers (pointwise / depthwise / dense
+stem+head), each an independently-selectable TinyTrain unit with
+output-channel granularity.  BatchNorm is deploy-time folded (affine scale
+into conv bias), matching MCU deployment practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    kind: str  # conv | dw
+    c_in: int
+    c_out: int
+    k: int
+    stride: int
+    relu: bool
+    block: int  # inverted-residual block id (for Fig. 3-style analysis)
+    residual_with: int = -1  # layer index whose *input* is added (block res)
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    layers: Tuple[ConvSpec, ...]
+    in_res: int
+    feat_dim: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+
+def _c(ch: float, mult: float, div: int = 8) -> int:
+    v = max(div, int(ch * mult + div / 2) // div * div)
+    return v
+
+
+def _build_ir_net(
+    name: str,
+    block_specs: Sequence[Tuple[int, int, int, int, int]],  # (t, c, n, s, k)
+    width: float,
+    stem_c: int,
+    head_c: int,
+    in_res: int,
+) -> CnnConfig:
+    layers: List[ConvSpec] = []
+    c_prev = _c(stem_c, width)
+    layers.append(ConvSpec("conv", 3, c_prev, 3, 2, True, 0))
+    block = 1
+    for (t, c, n, s, k) in block_specs:
+        c_out = _c(c, width)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            c_mid = c_prev * t
+            start = len(layers)
+            res = start if (stride == 1 and c_prev == c_out) else -1
+            if t != 1:
+                layers.append(ConvSpec("conv", c_prev, c_mid, 1, 1, True, block))
+            layers.append(ConvSpec("dw", c_mid, c_mid, k, stride, True, block))
+            layers.append(
+                ConvSpec("conv", c_mid, c_out, 1, 1, False, block,
+                         residual_with=res)
+            )
+            c_prev = c_out
+            block += 1
+    feat = _c(head_c, width) if head_c else c_prev
+    if head_c:
+        layers.append(ConvSpec("conv", c_prev, feat, 1, 1, True, block))
+    return CnnConfig(name, tuple(layers), in_res, feat)
+
+
+def mobilenetv2_035(in_res: int = 84) -> CnnConfig:
+    spec = [
+        (1, 16, 1, 1, 3), (6, 24, 2, 2, 3), (6, 32, 3, 2, 3),
+        (6, 64, 4, 2, 3), (6, 96, 3, 1, 3), (6, 160, 3, 2, 3),
+        (6, 320, 1, 1, 3),
+    ]
+    return _build_ir_net("mobilenetv2-0.35", spec, 0.35, 32, 1280, in_res)
+
+
+def mcunet_5fps(in_res: int = 84) -> CnnConfig:
+    # MCUNet-style: mixed kernels/expansions, 14 blocks / 42 conv layers,
+    # 0.44M params, 28.8M MACs @128 (paper Table 4: 0.46M / 22.5M / 42L).
+    spec = [
+        (1, 16, 1, 1, 3), (4, 24, 2, 2, 7), (5, 40, 3, 2, 3),
+        (4, 48, 2, 2, 7), (5, 96, 3, 1, 5), (4, 160, 2, 2, 5),
+        (6, 320, 1, 1, 3),
+    ]
+    return _build_ir_net("mcunet-5fps", spec, 0.6, 16, 0, in_res)
+
+
+def proxylessnas_03(in_res: int = 84) -> CnnConfig:
+    spec = [
+        (1, 16, 1, 1, 3), (3, 24, 3, 2, 5), (3, 40, 3, 2, 7),
+        (6, 80, 4, 2, 7), (3, 96, 3, 1, 5), (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 5),
+    ]
+    return _build_ir_net("proxylessnas-0.3", spec, 0.3, 32, 1280, in_res)
+
+
+EDGE_CNNS = {
+    "mcunet": mcunet_5fps,
+    "mobilenetv2": mobilenetv2_035,
+    "proxylessnas": proxylessnas_03,
+}
+
+
+# ---------------------------------------------------------------------------
+# init / apply
+# ---------------------------------------------------------------------------
+
+
+def cnn_init(cfg: CnnConfig, key) -> List[Params]:
+    params = []
+    keys = jax.random.split(key, cfg.n_layers)
+    for spec, k in zip(cfg.layers, keys):
+        if spec.kind == "dw":
+            w = jax.random.normal(k, (spec.k, spec.k, 1, spec.c_out)) * (
+                1.0 / math.sqrt(spec.k * spec.k)
+            )
+        else:
+            fan_in = spec.k * spec.k * spec.c_in
+            w = jax.random.normal(k, (spec.k, spec.k, spec.c_in, spec.c_out)) * (
+                1.0 / math.sqrt(fan_in)
+            )
+        params.append({"w": w, "b": jnp.zeros((spec.c_out,))})
+    return params
+
+
+def _conv_pre(x: jax.Array, spec: ConvSpec, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Conv + bias, pre-activation."""
+    groups = spec.c_in if spec.kind == "dw" else 1
+    pad = (spec.k - 1) // 2
+    y = lax.conv_general_dilated(
+        x, w, (spec.stride, spec.stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + b
+
+
+def _conv(x: jax.Array, spec: ConvSpec, w: jax.Array, b: jax.Array) -> jax.Array:
+    y = _conv_pre(x, spec, w, b)
+    return jax.nn.relu6(y) if spec.relu else y
+
+
+def _conv_delta(
+    x: jax.Array, spec: ConvSpec, dw: jax.Array, idx: np.ndarray, y: jax.Array
+) -> jax.Array:
+    """Add the thin-conv channel delta into y[..., idx]."""
+    pad = (spec.k - 1) // 2
+    if spec.kind == "dw":
+        xd = x[..., idx]
+        upd = lax.conv_general_dilated(
+            xd, dw, (spec.stride, spec.stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=len(idx),
+        )
+    else:
+        upd = lax.conv_general_dilated(
+            x, dw, (spec.stride, spec.stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    return y.at[..., idx].add(upd)
+
+
+def cnn_delta_init(cfg: CnnConfig, layer: int, n_sel: int) -> Params:
+    spec = cfg.layers[layer]
+    if spec.kind == "dw":
+        return {"w": jnp.zeros((spec.k, spec.k, 1, n_sel))}
+    return {"w": jnp.zeros((spec.k, spec.k, spec.c_in, n_sel))}
+
+
+def cnn_features(
+    cfg: CnnConfig,
+    params: List[Params],
+    images: jax.Array,  # (B, H, W, 3)
+    *,
+    deltas: Optional[Dict[str, Params]] = None,
+    plan=None,
+    taps: Optional[List[Optional[jax.Array]]] = None,
+    chan_idx=None,
+) -> jax.Array:
+    """Backbone features (B, feat_dim) with TinyTrain hooks.
+
+    - ``plan``: SparseUpdatePolicy; layers < plan.horizon run in
+      stop_gradient, selected layers apply channel deltas.
+    - ``taps``: per-layer (B, C_out) Fisher tap scales (probe mode).
+    """
+    x = images
+    selected = set(plan.selected_layers()) if plan is not None else set()
+    horizon = plan.horizon if plan is not None else 0
+    referenced = {s.residual_with for s in cfg.layers if s.residual_with >= 0}
+    block_inputs: Dict[int, jax.Array] = {}
+
+    for i, (spec, p) in enumerate(zip(cfg.layers, params)):
+        if plan is not None and i < horizon:
+            p = jax.tree_util.tree_map(lax.stop_gradient, p)
+            if i == 0:
+                x = lax.stop_gradient(x)
+        if i in referenced:
+            block_inputs[i] = x  # block input saved for the residual add
+        y = _conv_pre(x, spec, p["w"], p["b"])
+        if i in selected and deltas is not None and f"L{i}" in deltas:
+            # channel delta enters PRE-activation: W_eff = W ⊕ ΔW exactly
+            idx = ((chan_idx or {}).get(i) or plan.channel_idx[i])["conv"]
+            y = _conv_delta(x, spec, deltas[f"L{i}"]["conv"]["w"], idx, y)
+        if spec.relu:
+            y = jax.nn.relu6(y)
+        if taps is not None and taps[i] is not None:
+            y = y * taps[i][:, None, None, :]
+        if spec.residual_with >= 0:
+            y = y + block_inputs[spec.residual_with]
+        x = y
+    feat = jnp.mean(x, axis=(1, 2))
+    return feat
+
+
+# ---------------------------------------------------------------------------
+# Analytical cost model (params & MACs per layer) — drives Eq. 3 and Table 2
+# ---------------------------------------------------------------------------
+
+
+def cnn_layer_costs(cfg: CnnConfig) -> List[Dict[str, int]]:
+    """Per-layer params, forward MACs and activation sizes at cfg.in_res."""
+    res = cfg.in_res
+    out = []
+    for spec in cfg.layers:
+        if spec.stride == 2:
+            res = (res + 1) // 2
+        cin_eff = 1 if spec.kind == "dw" else spec.c_in
+        n_params = spec.k * spec.k * cin_eff * spec.c_out + spec.c_out
+        macs = spec.k * spec.k * cin_eff * spec.c_out * res * res
+        act = res * res * spec.c_out
+        out.append({
+            "params": int(n_params), "macs": int(macs), "act": int(act),
+            "block": spec.block, "kind": spec.kind, "c_out": spec.c_out,
+            "res": res,
+        })
+    return out
+
+
+def cnn_total_costs(cfg: CnnConfig) -> Tuple[int, int]:
+    cs = cnn_layer_costs(cfg)
+    return sum(c["params"] for c in cs), sum(c["macs"] for c in cs)

@@ -1,0 +1,752 @@
+"""Neural-net building blocks shared by all assigned architectures.
+
+All modules are pure functions over explicit parameter dicts.  Every
+weight-bearing op optionally accepts a *channel delta* — the TinyTrain
+sparse-update mechanism: ``W_eff = W ⊕ scatter(ΔW, idx)`` expressed as a thin
+GEMM + static-index scatter, so backward weight-gradient FLOPs and optimizer
+state scale with the number of selected channels K rather than the full width
+(paper Sec. 2.2 / Appendix A.4).
+
+Channel-delta conventions (``idx`` is a *static* numpy int array baked into
+the jitted step by the policy compiler in ``repro/core/sparse.py``):
+  - MLP:       idx over d_ff neurons; deltas ``w_gate/w_up: (D, K)``,
+               ``w_down: (K, D)``.
+  - Attention: idx over query heads; deltas ``wq: (D, K*Dh)``,
+               ``wo: (K*Dh, D)``.
+  - MoE:       idx over experts; deltas are full FFNs of the K selected
+               experts.
+  - SSD:       idx over SSD heads; deltas on in/out projection head slices.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg_norm: str, d: int, dtype=jnp.float32) -> Params:
+    if cfg_norm == "rmsnorm":
+        return {"w": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(cfg_norm: str, p: Params, x: jax.Array) -> jax.Array:
+    if cfg_norm == "rmsnorm":
+        return rms_norm(x, p["w"])
+    return layer_norm(x, p["w"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int -> cos/sin tables (..., S, dim/2), float32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D) with cos/sin (B, S, D/2) (or broadcastable)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Channel-delta helpers (TinyTrain sparse update)
+# ---------------------------------------------------------------------------
+
+
+def delta_out_cols(y: jax.Array, x: jax.Array, dw: jax.Array, idx: np.ndarray) -> jax.Array:
+    """y[..., idx] += x @ dw  (thin GEMM + static scatter)."""
+    return y.at[..., idx].add((x @ dw.astype(x.dtype)))
+
+
+def delta_in_rows(y: jax.Array, h: jax.Array, dw: jax.Array, idx: np.ndarray) -> jax.Array:
+    """y += h[..., idx] @ dw (static gather + thin GEMM)."""
+    return y + h[..., idx] @ dw.astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+
+
+def _act(act: str, x: jax.Array) -> jax.Array:
+    if act == "swiglu":
+        return jax.nn.silu(x)
+    if act == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def mlp_apply(
+    p: Params,
+    x: jax.Array,
+    act: str,
+    delta: Optional[Params] = None,
+    idx: Optional[np.ndarray] = None,
+) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        if delta is not None:
+            g = delta_out_cols(g, x, delta["w_gate"], idx)
+            u = delta_out_cols(u, x, delta["w_up"], idx)
+        h = _act(act, g) * u
+    else:
+        h = x @ p["w_up"]
+        if delta is not None:
+            h = delta_out_cols(h, x, delta["w_up"], idx)
+        h = _act(act, h)
+    y = h @ p["w_down"]
+    if delta is not None:
+        y = delta_in_rows(y, h, delta["w_down"], idx)
+    return y
+
+
+def mlp_delta_init(d_model: int, d_ff_sel: int, act: str, dtype=jnp.float32) -> Params:
+    z = lambda *s: jnp.zeros(s, dtype)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": z(d_model, d_ff_sel),
+            "w_up": z(d_model, d_ff_sel),
+            "w_down": z(d_ff_sel, d_model),
+        }
+    return {"w_up": z(d_model, d_ff_sel), "w_down": z(d_ff_sel, d_model)}
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / SWA, chunked flash-style, KV-cache decode)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def attn_delta_init(cfg, n_sel_heads: int, dtype=jnp.float32) -> Params:
+    k = n_sel_heads * cfg.head_dim
+    return {
+        "wq": jnp.zeros((cfg.d_model, k), dtype),
+        "wo": jnp.zeros((k, cfg.d_model), dtype),
+    }
+
+
+def _head_cols(idx: np.ndarray, head_dim: int) -> np.ndarray:
+    """Flat column indices covering whole heads for static scatter/gather."""
+    return (idx[:, None] * head_dim + np.arange(head_dim)[None, :]).reshape(-1)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def dot_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Plain masked attention. q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask = mask[None]  # (1, sq, sk)
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim == 0:
+            mask = mask & (kpos[None, None, :] < kv_len)
+        else:  # per-sample lengths (continuous batching)
+            mask = mask & (kpos[None, None, :] < kv_len[:, None, None])
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure XLA (scan over chunks).
+
+    Memory is O(S * chunk) instead of O(S^2).  Used for the 32k prefill and
+    4k training shapes; the Pallas kernel in ``repro/kernels`` is the
+    TPU-native version and is validated against the same oracle.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+
+    def _pick(s: int, target: int) -> int:
+        c = min(target, s)
+        while s % c:
+            c -= 1
+        return c
+
+    dv = v.shape[-1]  # MLA: value head dim may differ from qk dim
+    from ..dist import context as _ctx
+    if _ctx.get("seq_parallel"):
+        # sequence-parallel layout: q stays sharded over 'model' on S; a
+        # q-chunk scan would dynamic-slice the sharded dim and force
+        # all-gathers, so scan kv only (q processed whole, per shard).
+        q_chunk = sq
+    q_chunk = _pick(sq, q_chunk)
+    kv_chunk = _pick(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    kr = k.reshape(b, nk, kv_chunk, k.shape[2], d)
+    vr = v.reshape(b, nk, kv_chunk, v.shape[2], dv)
+
+    @jax.checkpoint  # flash-style backward: recompute scores, never store S×S
+    def q_step(_, qi):
+        qc = lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kc = _repeat_kv(kr[:, ki], n_rep)
+            vc = _repeat_kv(vr[:, ki], n_rep)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32) * scale
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), dtype=bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        (acc, m, l), _ = lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None, jnp.arange(nq))
+    # outs: (nq, b, h, q_chunk, dv) -> (b, sq, h, dv)
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, sq, dv)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    causal: bool = True,
+    cross_hidden: Optional[jax.Array] = None,
+    delta: Optional[Params] = None,
+    head_idx: Optional[np.ndarray] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Multi-head attention with GQA/MQA, RoPE, SWA, KV cache and deltas.
+
+    Returns (output, updated_cache).
+    cache = {"k": (B, S_max, Hkv, Dh), "v": ..., "len": ()} decode-style.
+    cross_hidden supplies encoder hidden states for cross-attention
+    (projected with this layer's wk/wv, no RoPE).
+    """
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    if delta is not None:
+        cols = _head_cols(head_idx, dh)
+        q = delta_out_cols(q, x, delta["wq"], cols)
+    q = q.reshape(b, s, h, dh)
+
+    if cross_hidden is not None:
+        se = cross_hidden.shape[1]
+        k = (cross_hidden @ p["wk"]).reshape(b, se, hkv, dh)
+        v = (cross_hidden @ p["wv"]).reshape(b, se, hkv, dh)
+        if s * se > 1024 * 1024:
+            out = chunked_attention(q, k, v, causal=False)
+        else:
+            out = dot_attention(q, k, v, causal=False)
+        new_cache = cache
+    else:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(b, s, hkv, dh)
+        v = v.reshape(b, s, hkv, dh)
+        if cfg.rope_theta > 0:
+            cos, sin = rope_tables(positions, dh, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        if cache is not None:
+            s_max = cache["k"].shape[1]
+            lens = cache["len"]  # (B,) per-slot lengths
+            rolling = cfg.sliding_window > 0 and s_max == cfg.sliding_window
+            if s == 1:
+                pos = (lens % s_max) if rolling else jnp.minimum(lens, s_max - 1)
+                bidx = jnp.arange(b)
+                ck = cache["k"].at[bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
+            else:  # batch-aligned prefill write
+                start = (lens[0] % s_max) if rolling else lens[0]
+                ck = lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), start, axis=1)
+                cv = lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+            new_cache = {"k": ck, "v": cv, "len": lens + s}
+            kv_len = jnp.minimum(lens + s, s_max)
+            out = dot_attention(
+                q, ck, cv, causal=False, kv_len=kv_len,
+            )
+        else:
+            new_cache = None
+            if s * k.shape[1] > 1024 * 1024:  # keep scores O(S*chunk)
+                out = chunked_attention(
+                    q, k, v, causal=causal, window=cfg.sliding_window
+                )
+            else:
+                out = dot_attention(
+                    q, k, v, causal=causal, window=cfg.sliding_window
+                )
+
+    out_flat = out.reshape(b, s, h * dh)
+    y = out_flat @ p["wo"]
+    if delta is not None:
+        cols = _head_cols(head_idx, dh)
+        y = delta_in_rows(y, out_flat, delta["wo"], cols)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3): low-rank latent KV + decoupled RoPE
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], cfg.q_lora_rank, h * qk, dtype),
+        "w_dkv": dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank, dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank, h * cfg.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank, h * cfg.v_head_dim, dtype),
+        "w_kr": dense_init(ks[5], cfg.d_model, cfg.qk_rope_dim, dtype),
+        "wo": dense_init(ks[6], h * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def mla_delta_init(cfg, n_sel_heads: int, dtype=jnp.float32) -> Params:
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_uq": jnp.zeros((cfg.q_lora_rank, n_sel_heads * qk), dtype),
+        "wo": jnp.zeros((n_sel_heads * cfg.v_head_dim, cfg.d_model), dtype),
+    }
+
+
+def mla_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    delta: Optional[Params] = None,
+    head_idx: Optional[np.ndarray] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """MLA forward.  Prefill materialises per-head K/V; decode runs in the
+    *absorbed* form over the compressed latent cache
+    (cache = {"ckv": (B, S, r_kv), "krope": (B, S, d_r), "len": ()}).
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"])
+    q = cq @ p["w_uq"]
+    if delta is not None:
+        cols = _head_cols(head_idx, dn + dr)
+        q = delta_out_cols(q, cq, delta["w_uq"], cols)
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    ckv = rms_norm(x @ p["w_dkv"], p["kv_norm"])
+    k_rope = (x @ p["w_kr"]).reshape(b, s, 1, dr)
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if cache is None:
+        k_nope = (ckv @ p["w_uk"]).reshape(b, s, h, dn)
+        v = (ckv @ p["w_uv"]).reshape(b, s, h, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        if s * s > 4096 * 4096:
+            out = chunked_attention(qq, k, v, causal=True)
+        else:
+            out = dot_attention(qq, k, v, causal=True)
+        new_cache = None
+        out_flat = out.reshape(b, s, h * dv)
+    else:
+        # absorbed decode: logits against latent cache directly
+        lens = cache["len"]  # (B,)
+        s_max = cache["ckv"].shape[1]
+        if s == 1:
+            bidx = jnp.arange(b)
+            pos = jnp.minimum(lens, s_max - 1)
+            cckv = cache["ckv"].at[bidx, pos].set(ckv[:, 0].astype(cache["ckv"].dtype))
+            ckr = cache["krope"].at[bidx, pos].set(
+                k_rope[:, 0, 0, :].astype(cache["krope"].dtype))
+        else:
+            cckv = lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), lens[0], axis=1)
+            ckr = lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope[:, :, 0, :].astype(cache["krope"].dtype),
+                lens[0], axis=1)
+        new_cache = {"ckv": cckv, "krope": ckr, "len": lens + s}
+        kv_len = jnp.minimum(lens + s, s_max)
+        # absorb W_uk into q:  (B,S,H,dn) x (r,H,dn) -> (B,S,H,r)
+        w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, dn)
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+        logits = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                       cckv.astype(jnp.float32))
+            + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                         ckr.astype(jnp.float32))
+        ) * scale
+        tpos = jnp.arange(s_max)
+        logits = jnp.where(
+            tpos[None, None, None, :] < kv_len[:, None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", w.astype(cckv.dtype), cckv)
+        w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, dv)
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)
+        out_flat = out.reshape(b, s, h * dv)
+
+    y = out_flat @ p["wo"]
+    if delta is not None:
+        cols = _head_cols(head_idx, dv)
+        y = delta_in_rows(y, out_flat, delta["wo"], cols)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-free capacity dispatch, EP/TP shardable)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, dtype),
+        "w_gate": jax.random.uniform(ks[1], (e, d, f), dtype, -scale, scale),
+        "w_up": jax.random.uniform(ks[2], (e, d, f), dtype, -scale, scale),
+        "w_down": jax.random.uniform(ks[3], (e, f, d), dtype, -1 / math.sqrt(f), 1 / math.sqrt(f)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, f * cfg.n_shared_experts, "swiglu", dtype)
+    return p
+
+
+def moe_delta_init(cfg, n_sel_experts: int, dtype=jnp.float32) -> Params:
+    d, f = cfg.d_model, cfg.d_expert
+    z = lambda *s: jnp.zeros(s, dtype)
+    return {
+        "w_gate": z(n_sel_experts, d, f),
+        "w_up": z(n_sel_experts, d, f),
+        "w_down": z(n_sel_experts, f, d),
+    }
+
+
+def moe_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    delta: Optional[Params] = None,
+    expert_idx: Optional[np.ndarray] = None,
+    tap: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based token dispatch -> batched expert FFN -> combine.
+
+    Returns (output, aux_load_balance_loss).  Dispatch builds per-expert
+    token index lists via cumsum ranking (no one-hot einsum; gather/scatter
+    cost is O(T·D)).  Two layouts, selected by the sharding context:
+
+    - global (default): one queue over all tokens;
+    - per-row (``moe_row_dispatch``): independent queues per batch row with
+      per-row capacity — the rank/cumsum and gathers stay *local* to the
+      data shard holding the row, so no sequential cross-shard cumsum or
+      global all-to-all is generated (see EXPERIMENTS.md §Perf, mixtral).
+    """
+    from ..dist import context as _ctx
+
+    if _ctx.get("moe_row_dispatch"):
+        return _moe_apply_rows(p, x, cfg, delta=delta, expert_idx=expert_idx,
+                               tap=tap)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = lax.top_k(probs, k)  # (t, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(sel[:, 0], e), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
+
+    cap = int(cfg.capacity_factor * t * k / e)
+    cap = max(cap, 4)
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(sel, e, dtype=jnp.int32)  # (t, k, e)
+    pos_in_expert = jnp.cumsum(onehot.reshape(t * k, e), axis=0) - 1
+    pos_in_expert = jnp.sum(pos_in_expert * onehot.reshape(t * k, e), axis=-1)
+    flat_sel = sel.reshape(t * k)
+    keep = pos_in_expert < cap
+    # overflow (dropped) choices park in a trash slot e*cap
+    slot = jnp.where(keep, flat_sel * cap + pos_in_expert, e * cap)
+
+    # gather-based dispatch: invert slot->token (no token x top_k copies)
+    slot_tok = jnp.zeros((e * cap + 1,), jnp.int32).at[slot].set(
+        jnp.arange(t * k, dtype=jnp.int32) // k)
+    filled = jnp.zeros((e * cap + 1,), bool).at[slot].set(True)
+    buf = jnp.where(filled[: e * cap, None], xt[slot_tok[: e * cap]], 0)
+    buf = buf.reshape(e, cap, d)
+    from ..dist import context as _ctx
+    buf = _ctx.constrain(buf, _ctx.get("moe_dispatch_spec"))
+
+    out_buf = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    up_buf = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(out_buf) * up_buf
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y_buf = _ctx.constrain(y_buf, _ctx.get("moe_dispatch_spec"))
+
+    if delta is not None:
+        # deltas for the K selected experts only (static expert_idx)
+        xb_sel = buf[expert_idx]  # (ksel, cap, d)
+        hg = jnp.einsum("ecd,edf->ecf", xb_sel, delta["w_gate"].astype(xt.dtype))
+        hu = jnp.einsum("ecd,edf->ecf", xb_sel, delta["w_up"].astype(xt.dtype))
+        g_full = out_buf[expert_idx] + hg
+        u_full = up_buf[expert_idx] + hu
+        h_sel = jax.nn.silu(g_full) * u_full
+        y_sel = jnp.einsum("ecf,efd->ecd", h_sel, p["w_down"][expert_idx])
+        y_sel = y_sel + jnp.einsum(
+            "ecf,efd->ecd", h_sel, delta["w_down"].astype(xt.dtype))
+        y_buf = y_buf.at[expert_idx].set(y_sel)
+
+    # gather back and combine
+    gathered = y_buf.reshape(e * cap, d)[slot]  # (t*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    if tap is not None:
+        # Fisher tap (B, E): grad w.r.t. tap[n, e] = Σ_{tokens of sample n
+        # routed to e} a·g — the per-sample per-expert inner sum of Eq. 2.
+        sample_ids = jnp.repeat(jnp.arange(t) // s, k)
+        tap_val = tap[sample_ids, flat_sel]  # (t*k,)
+        gathered = gathered * tap_val[:, None].astype(gathered.dtype)
+    y = jnp.sum(
+        gathered.reshape(t, k, d) * gate_vals[..., None].astype(xt.dtype), axis=1
+    )
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xt, "swiglu")
+    return y.reshape(b, s, d), aux
+
+
+def _moe_apply_rows(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    delta: Optional[Params] = None,
+    expert_idx: Optional[np.ndarray] = None,
+    tap: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-batch-row MoE dispatch (shard-local queues).
+
+    Capacity is per row (production per-device capacity semantics); all
+    ranking/gather/scatter ops carry the batch dim, so with B sharded over
+    data every step is shard-local.  Expert weights may still be E-sharded
+    (EP) or F-sharded (TP) — the expert einsums carry those collectives
+    only.
+    """
+    from ..dist import context as _ctx
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = (x @ p["router"]).astype(jnp.float32)  # (b, s, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = lax.top_k(probs, k)  # (b, s, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    density = jnp.mean(
+        jax.nn.one_hot(sel[..., 0].reshape(-1), e), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs.reshape(-1, e), axis=0))
+
+    cap = max(4, int(cfg.capacity_factor * s * k / e))
+    onehot = jax.nn.one_hot(sel, e, dtype=jnp.int32).reshape(b, s * k, e)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.sum(pos * onehot, axis=-1)  # (b, s*k)
+    flat_sel = sel.reshape(b, s * k)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_sel * cap + pos, e * cap)  # (b, s*k)
+
+    tok_of = jnp.arange(s * k, dtype=jnp.int32) // k  # (s*k,)
+    bidx = jnp.arange(b)[:, None]
+    slot_tok = jnp.zeros((b, e * cap + 1), jnp.int32).at[bidx, slot].set(
+        jnp.broadcast_to(tok_of, (b, s * k)))
+    filled = jnp.zeros((b, e * cap + 1), bool).at[bidx, slot].set(True)
+    buf = jnp.where(
+        filled[:, : e * cap, None],
+        jnp.take_along_axis(
+            x, slot_tok[:, : e * cap, None].astype(jnp.int32), axis=1),
+        0,
+    ).reshape(b, e, cap, d)
+    buf = _ctx.constrain(buf, _ctx.get("moe_dispatch_spec"))
+
+    gbuf = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    ubuf = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(gbuf) * ubuf
+    y_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+    if delta is not None:
+        xb_sel = buf[:, expert_idx]  # (b, ksel, cap, d)
+        hg = jnp.einsum("becd,edf->becf", xb_sel, delta["w_gate"].astype(x.dtype))
+        hu = jnp.einsum("becd,edf->becf", xb_sel, delta["w_up"].astype(x.dtype))
+        g_full = gbuf[:, expert_idx] + hg
+        u_full = ubuf[:, expert_idx] + hu
+        h_sel = jax.nn.silu(g_full) * u_full
+        y_sel = jnp.einsum("becf,efd->becd", h_sel, p["w_down"][expert_idx])
+        y_sel = y_sel + jnp.einsum(
+            "becf,efd->becd", h_sel, delta["w_down"].astype(x.dtype))
+        y_buf = y_buf.at[:, expert_idx].set(y_sel)
+
+    y_flat = y_buf.reshape(b, e * cap, d)
+    gathered = jnp.take_along_axis(
+        y_flat, jnp.minimum(slot, e * cap - 1)[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    if tap is not None:
+        tap_val = jnp.take_along_axis(tap, flat_sel, axis=1)  # (b, s*k)
+        gathered = gathered * tap_val[..., None].astype(gathered.dtype)
+    y = jnp.sum(
+        gathered.reshape(b, s, k, d) * gate_vals[..., None].astype(x.dtype),
+        axis=2,
+    )
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x.reshape(b * s, d), "swiglu").reshape(b, s, d)
+    return y, aux

@@ -1,0 +1,211 @@
+"""Mamba2 SSD (state-space duality) block, chunked for TPUs.
+
+The chunked SSD algorithm (Dao & Gu, 2024) splits the sequence into chunks of
+``Q`` tokens: attention-like intra-chunk matmuls (MXU-friendly) plus a linear
+inter-chunk state recurrence.  The Pallas kernel in
+``repro/kernels/ssd_scan.py`` fuses the intra-chunk path; this module is the
+XLA reference used by training/dry-run, and supports TinyTrain channel deltas
+at SSD-head granularity.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import dense_init, delta_in_rows, delta_out_cols, rms_norm
+
+Params = Dict[str, Any]
+
+
+def ssd_init(key, cfg, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    return {
+        "w_z": dense_init(ks[0], d, di, dtype),
+        "w_x": dense_init(ks[1], d, di, dtype),
+        "w_b": dense_init(ks[2], d, n, dtype),
+        "w_c": dense_init(ks[3], d, n, dtype),
+        "w_dt": dense_init(ks[4], d, h, dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "conv_w": jax.random.normal(ks[5], (cfg.d_conv, di + 2 * n), dtype) * 0.1,
+        "norm_w": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def ssd_delta_init(cfg, n_sel_heads: int, dtype=jnp.float32) -> Params:
+    p = cfg.ssm_head_dim
+    k = n_sel_heads * p
+    return {
+        "w_z": jnp.zeros((cfg.d_model, k), dtype),
+        "w_x": jnp.zeros((cfg.d_model, k), dtype),
+        "w_out": jnp.zeros((k, cfg.d_model), dtype),
+    }
+
+
+def _head_cols(idx: np.ndarray, head_dim: int) -> np.ndarray:
+    return (idx[:, None] * head_dim + np.arange(head_dim)[None, :]).reshape(-1)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(dta: jax.Array) -> jax.Array:
+    """dta: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums."""
+    q = dta.shape[-1]
+    cs = jnp.cumsum(dta, axis=-1)
+    # L[i,j] = sum_{j<k<=i} dta[k]  (decay from j to i, exclusive of j)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) inputs (already dt-scaled NOT applied)
+    dt: jax.Array,  # (B, S, H) softplus'd step sizes
+    a: jax.Array,  # (H,) negative decay rates
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    br = bmat.reshape(b, nc, q, n)
+    cr = cmat.reshape(b, nc, q, n)
+    dta = dtr * a[None, None, None, :]  # (b, nc, q, h) negative
+
+    # intra-chunk: y_intra[i] = sum_{j<=i} C_i.B_j exp(seg(i,j)) dt_j x_j
+    seg = _segsum(jnp.moveaxis(dta, -1, -2))  # (b, nc, h, q, q)
+    l_mat = jnp.exp(seg)
+    scores = jnp.einsum("bcin,bcjn->bcij", cr, br)  # (b, nc, q, q)
+    w = scores[:, :, None] * l_mat  # (b, nc, h, q, q)
+    xdt = xr * dtr[..., None]  # (b, nc, q, h, p)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w.astype(x.dtype), xdt)
+
+    # per-chunk local end states: S_c = sum_j exp(cum_end - cum_j) B_j (dt_j x_j)
+    cum = jnp.cumsum(dta, axis=2)  # (b, nc, q, h)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b, nc, q, h)
+    local_state = jnp.einsum(
+        "bcqn,bcqhp->bchpn", br, (xdt * decay_to_end[..., None]).astype(x.dtype)
+    )
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b, nc, h)
+
+    # inter-chunk recurrence over nc chunks
+    def step(carry, inp):
+        st = carry
+        local, dec = inp
+        out_st = st
+        st = st * dec[:, :, None, None].astype(st.dtype) + local
+        return st, out_st
+
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), x.dtype)
+    )
+    final_state, prev_states = lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(local_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b, nc, h, p, n)
+
+    # inter-chunk contribution: y_inter[i] = C_i exp(cum_i) S_prev
+    decay_in = jnp.exp(cum)  # (b, nc, q, h)
+    y_inter = jnp.einsum(
+        "bcqn,bchpn->bcqhp", cr, prev_states
+    ) * decay_in[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    cache: Optional[Params] = None,
+    delta: Optional[Params] = None,
+    head_idx: Optional[np.ndarray] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Full Mamba2 block: proj -> conv -> SSD -> gated norm -> out proj.
+
+    cache = {"conv": (B, d_conv-1, C), "ssm": (B, H, P, N), "len": ()} for
+    decode.  TinyTrain deltas select SSD heads.
+    """
+    b, s, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    if delta is not None:
+        cols = _head_cols(head_idx, hd)
+        z = delta_out_cols(z, x, delta["w_z"], cols)
+        xs = delta_out_cols(xs, x, delta["w_x"], cols)
+    bb = x @ p["w_b"]
+    cc = x @ p["w_c"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv_state = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xs, bb, cc = conv_out[..., :di], conv_out[..., di : di + n], conv_out[..., di + n :]
+
+    xh = xs.reshape(b, s, h, hd)
+    if cache is not None and s == 1:
+        # single-token recurrent update
+        st = cache["ssm"]  # (B,H,P,N)
+        dta = jnp.exp(dt[:, 0] * a[None, :])  # (B,H)
+        dbx = jnp.einsum(
+            "bn,bhp->bhpn", bb[:, 0], (xh[:, 0] * dt[:, 0, :, None]).astype(st.dtype)
+        )
+        st = st * dta[:, :, None, None].astype(st.dtype) + dbx
+        y = jnp.einsum("bhpn,bn->bhp", st, cc[:, 0].astype(st.dtype))
+        y = y[:, None]  # (B,1,H,P)
+        new_cache = {"conv": new_conv_state, "ssm": st, "len": cache["len"] + 1}
+    else:
+        init = cache["ssm"] if cache is not None else None
+        y, final_state = ssd_chunked(xh, dt, a, bb, cc, cfg.ssm_chunk, init)
+        new_cache = (
+            {"conv": new_conv_state, "ssm": final_state, "len": cache["len"] + s}
+            if cache is not None
+            else None
+        )
+
+    # dt-scaled paths promote to f32; settle back to the model dtype here
+    y = y + xh.astype(y.dtype) * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    gate = jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm((y.astype(jnp.float32) * gate).astype(x.dtype), p["norm_w"])
+    out = y @ p["w_out"]
+    if delta is not None:
+        cols = _head_cols(head_idx, hd)
+        out = delta_in_rows(out, y, delta["w_out"], cols)
+    return out, new_cache

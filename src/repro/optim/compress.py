@@ -1,0 +1,53 @@
+"""Int8 error-feedback gradient compression for DP all-reduces.
+
+Beyond-paper distributed trick (DESIGN.md §6): TinyTrain's delta gradients
+are all-reduced over the data axis every step; quantising them to int8 with
+per-tensor scale and an error-feedback residual cuts the collective payload
+4x vs f32 (2x vs bf16) with no asymptotic accuracy loss (the residual is
+re-added next step, so quantisation error does not accumulate).
+
+The pack/unpack math is mirrored by the Pallas kernel in
+``repro/kernels/grad_quant.py``; this module is the XLA path and oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _quant_one(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_err = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def int8_compress(grads: PyTree, ef: PyTree) -> Tuple[PyTree, PyTree, PyTree]:
+    """Returns (int8 tree, scale tree, new error-feedback tree)."""
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    eflat = jax.tree_util.tree_leaves(ef)
+    qs, ss, es = [], [], []
+    for g, e in zip(flat, eflat):
+        q, s, ne = _quant_one(g, e)
+        qs.append(q)
+        ss.append(s)
+        es.append(ne)
+    un = jax.tree_util.tree_unflatten
+    return un(treedef, qs), un(treedef, ss), un(treedef, es)
+
+
+def int8_decompress(q: PyTree, scales: PyTree, dtype=jnp.float32) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda qi, si: (qi.astype(jnp.float32) * si).astype(dtype), q, scales
+    )
+
+
+def ef_state_init(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )

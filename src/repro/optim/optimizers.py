@@ -1,0 +1,128 @@
+"""Optimizers (optax-like minimal API), built from scratch per the brief.
+
+``init(params) -> state``; ``update(grads, state, params) -> (updates, state)``.
+Updates are *added* to params.  State dtype is configurable — bf16 moments
+halve optimizer HBM (used by the deepseek-v3 dry-run config; see DESIGN.md
+§6 and EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    slots: int = 0  # state arrays per param (for the memory cost model)
+
+
+def _cast_like(x, dtype):
+    return x.astype(dtype) if dtype is not None else x
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array]) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return upd, {"step": step}
+
+    return Optimizer(init, update, slots=0)
+
+
+def momentum(lr, beta: float = 0.9, state_dtype=None) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, state_dtype or p.dtype), params
+            ),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree_util.tree_map(
+            lambda m, g: _cast_like(beta * m.astype(g.dtype) + g, m.dtype),
+            state["mu"], grads,
+        )
+        upd = jax.tree_util.tree_map(lambda m: -lr_t * m.astype(jnp.float32), mu)
+        return upd, {"step": step, "mu": mu}
+
+    return Optimizer(init, update, slots=1)
+
+
+def adam(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype=None,
+) -> Optimizer:
+    """Adam/AdamW.  ``state_dtype`` (e.g. bf16) shrinks m/v memory."""
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype or p.dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd_m(m, g):
+            return _cast_like(b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32), m.dtype)
+
+        def upd_v(v, g):
+            g = g.astype(jnp.float32)
+            return _cast_like(b2 * v.astype(jnp.float32) + (1 - b2) * g * g, v.dtype)
+
+        m = jax.tree_util.tree_map(upd_m, state["m"], grads)
+        v = jax.tree_util.tree_map(upd_v, state["v"], grads)
+
+        def step_fn(m_, v_, p):
+            mh = m_.astype(jnp.float32) / c1
+            vh = v_.astype(jnp.float32) / c2
+            u = -lr_t * mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        upd = jax.tree_util.tree_map(step_fn, m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, slots=2)
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update, slots=opt.slots)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates,
+    )

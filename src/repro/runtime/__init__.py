@@ -1,0 +1,3 @@
+from .trainer import (  # noqa: F401
+    SimulatedFailure, Trainer, TrainerConfig, TrainerState, failure_at,
+)

@@ -1,0 +1,180 @@
+"""Serving engine: continuous-batching decode with per-slot KV caches.
+
+Each cache carries per-sample lengths, so slots advance independently:
+a newly-admitted request consumes its prompt tokens one per tick
+(prefill-as-decode) while neighbouring slots keep generating.  Finished
+sequences free their slot and the next queued request claims it after a
+length reset — no recompilation, fixed shapes throughout.
+
+TinyTrain integration: ``fold_deltas`` folds channel deltas into a serving
+parameter copy (W ⊕ scatter(ΔW)), so adapted models serve at exactly base
+cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.api import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    cursor: int = 0  # next prompt token to feed; >= len(prompt) => generating
+
+
+def _reset_slot_lens(caches: Any, slot: int) -> Any:
+    def fix(path, x):
+        if path.endswith("len"):
+            # len leaves are (B,) or layer-stacked (L, B): slot is last axis
+            return x.at[..., slot].set(0)
+        return x
+
+    from ..utils import named_tree_map
+    return named_tree_map(fix, caches)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: Any,
+        *,
+        slots: int = 8,
+        max_len: int = 1024,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = slots
+        self.max_len = max_len
+        self.caches = T.init_caches(cfg, slots, max_len)
+        self.slots = [_Slot() for _ in range(slots)]
+        self.pos = np.zeros(slots, np.int32)
+        self.queue: List[Request] = []
+        self.ticks = 0
+        self._decode = jax.jit(
+            lambda p, t, c, pos: T.decode_step(cfg, p, t, c, pos)
+        )
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, sl in enumerate(self.slots):
+            if sl.req is None and self.queue:
+                sl.req = self.queue.pop(0)
+                sl.cursor = 0
+                self.pos[i] = 0
+                self.caches = _reset_slot_lens(self.caches, i)
+
+    def step(self) -> None:
+        """One tick: every active slot consumes one token (prompt or gen)."""
+        self._admit()
+        live = [i for i, sl in enumerate(self.slots) if sl.req is not None]
+        if not live:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i in live:
+            sl = self.slots[i]
+            if sl.cursor < len(sl.req.prompt):
+                toks[i, 0] = int(sl.req.prompt[sl.cursor])
+            else:
+                toks[i, 0] = sl.req.out[-1]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.pos, jnp.int32),
+        )
+        logits = np.asarray(logits[:, 0])
+        for i in live:
+            sl = self.slots[i]
+            self.pos[i] += 1
+            if sl.cursor < len(sl.req.prompt):
+                sl.cursor += 1
+                if sl.cursor == len(sl.req.prompt):
+                    sl.req.out.append(int(np.argmax(logits[i])))
+            else:
+                sl.req.out.append(int(np.argmax(logits[i])))
+            if len(sl.req.out) >= sl.req.max_new or self.pos[i] >= self.max_len - 1:
+                sl.req.done = True
+                self.slots[i] = _Slot()
+        self.ticks += 1
+
+    def run(self, requests: List[Request], max_ticks: int = 100_000) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        while (self.queue or any(s.req for s in self.slots)) and self.ticks < max_ticks:
+            self.step()
+        return requests
+
+
+def fold_deltas(cfg: ArchConfig, params: Any, deltas: Any, policy) -> Any:
+    """Fold TinyTrain deltas into a serving copy: W += scatter(ΔW, idx)."""
+    groups = T.stack_groups(cfg)
+    lid_to_group = {}
+    for gi, (_, ids) in enumerate(groups):
+        for j, lid in enumerate(ids):
+            lid_to_group[lid] = (gi, j)
+    new_params = jax.tree_util.tree_map(lambda x: x, params)
+
+    for u in policy.units:
+        gi, j = lid_to_group[u.layer]
+        stack = new_params["stacks"][f"g{gi}"]
+        d = deltas[f"L{u.layer}"][u.kind]
+        idx = np.asarray(u.channels, np.int32)
+        if u.kind == "mlp":
+            mlp = stack["mlp"]
+            if "w_gate" in d:
+                mlp["w_gate"] = mlp["w_gate"].at[j, :, idx].add(
+                    d["w_gate"].T.astype(mlp["w_gate"].dtype))
+            mlp["w_up"] = mlp["w_up"].at[j, :, idx].add(
+                d["w_up"].T.astype(mlp["w_up"].dtype))
+            mlp["w_down"] = mlp["w_down"].at[j, idx, :].add(
+                d["w_down"].astype(mlp["w_down"].dtype))
+        elif u.kind == "attn" and not cfg.mla:
+            attn = stack["attn"]
+            cols = (idx[:, None] * cfg.head_dim
+                    + np.arange(cfg.head_dim)[None, :]).reshape(-1)
+            attn["wq"] = attn["wq"].at[j, :, cols].add(
+                d["wq"].T.astype(attn["wq"].dtype))
+            attn["wo"] = attn["wo"].at[j, cols, :].add(
+                d["wo"].astype(attn["wo"].dtype))
+        elif u.kind == "attn" and cfg.mla:
+            attn = stack["attn"]
+            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+            cols = (idx[:, None] * qk + np.arange(qk)[None, :]).reshape(-1)
+            attn["w_uq"] = attn["w_uq"].at[j, :, cols].add(
+                d["w_uq"].T.astype(attn["w_uq"].dtype))
+            vcols = (idx[:, None] * cfg.v_head_dim
+                     + np.arange(cfg.v_head_dim)[None, :]).reshape(-1)
+            attn["wo"] = attn["wo"].at[j, vcols, :].add(
+                d["wo"].astype(attn["wo"].dtype))
+        elif u.kind == "ssm":
+            ssm = stack["ssm"]
+            cols = (idx[:, None] * cfg.ssm_head_dim
+                    + np.arange(cfg.ssm_head_dim)[None, :]).reshape(-1)
+            ssm["w_z"] = ssm["w_z"].at[j, :, cols].add(
+                d["w_z"].T.astype(ssm["w_z"].dtype))
+            ssm["w_x"] = ssm["w_x"].at[j, :, cols].add(
+                d["w_x"].T.astype(ssm["w_x"].dtype))
+            ssm["w_out"] = ssm["w_out"].at[j, cols, :].add(
+                d["w_out"].astype(ssm["w_out"].dtype))
+        elif u.kind == "moe":
+            moe = stack["moe"]
+            for nm in ("w_gate", "w_up", "w_down"):
+                moe[nm] = moe[nm].at[j, idx].add(d[nm].astype(moe[nm].dtype))
+    return new_params

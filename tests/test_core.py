@@ -1,0 +1,143 @@
+"""TinyTrain core invariants: criterion math, selection under budgets,
+channel top-K, Fisher probe correctness (property-based where it matters)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Budget, UnitCost, fisher_from_activations, multi_objective_scores,
+    select_policy, topk_channels,
+)
+from repro.core.criterion import (
+    full_backward_macs, policy_backward_macs, policy_memory_bytes,
+)
+from repro.core.policy import SelectedUnit, SparseUpdatePolicy
+
+
+def _mk_costs(n=8, ch=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        UnitCost(layer=i, kind="conv", n_channels=ch,
+                 n_params=int(rng.integers(1_000, 100_000)),
+                 macs=int(rng.integers(10_000, 1_000_000)),
+                 act_in_bytes=int(rng.integers(1_000, 50_000)),
+                 dx_macs=int(rng.integers(10_000, 1_000_000)))
+        for i in range(n)
+    ]
+
+
+class TestCriterion:
+    def test_eq3_formula(self):
+        costs = _mk_costs()
+        p = np.abs(np.random.default_rng(0).normal(size=len(costs))) + 0.1
+        s = multi_objective_scores(p, costs, "tinytrain")
+        w = np.array([c.n_params for c in costs], float)
+        m = np.array([c.macs for c in costs], float)
+        want = p / ((w / w.max()) * (m / m.max()))
+        np.testing.assert_allclose(s, want)
+
+    def test_ablation_variants_ordering(self):
+        costs = _mk_costs()
+        p = np.ones(len(costs))
+        # fisher_only with uniform P: all equal
+        assert len(set(multi_objective_scores(p, costs, "fisher_only"))) == 1
+        # fisher_mem: prefers fewer params
+        s = multi_objective_scores(p, costs, "fisher_mem")
+        order = np.argsort(-s)
+        params = [costs[i].n_params for i in order]
+        assert params == sorted(params)
+
+
+class TestSelection:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        mem=st.floats(1e3, 1e7),
+        frac=st.floats(0.05, 1.0),
+        ratio=st.floats(0.1, 1.0),
+        seed=st.integers(0, 100),
+    )
+    def test_budgets_respected(self, mem, frac, ratio, seed):
+        """Property: any selected policy satisfies both budgets (Algorithm 1)."""
+        costs = _mk_costs(seed=seed)
+        rng = np.random.default_rng(seed)
+        pots = np.abs(rng.normal(size=len(costs))) + 1e-3
+        chans = {(c.layer, c.kind): np.abs(rng.normal(size=c.n_channels))
+                 for c in costs}
+        budget = Budget(mem_bytes=mem, compute_frac=frac, channel_ratio=ratio)
+        pol = select_policy(costs, pots, chans, budget)
+        if pol.n_units == 0:
+            return
+        sel = [(c, pol.unit_map()[(c.layer, c.kind)].n_channels)
+               for c in costs if (c.layer, c.kind) in pol.unit_map()]
+        assert policy_memory_bytes(sel, budget) <= mem
+        macs = policy_backward_macs(
+            costs, {(c.layer, c.kind): k for c, k in sel}, pol.horizon)
+        assert macs <= frac * full_backward_macs(costs) + 1
+
+    def test_horizon_is_min_selected(self):
+        costs = _mk_costs()
+        rng = np.random.default_rng(1)
+        pots = np.abs(rng.normal(size=len(costs)))
+        chans = {(c.layer, c.kind): np.abs(rng.normal(size=c.n_channels))
+                 for c in costs}
+        pol = select_policy(costs, pots, chans,
+                            Budget(mem_bytes=1e9, compute_frac=1.0))
+        if pol.n_units:
+            assert pol.horizon == min(u.layer for u in pol.units)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(8, 64), k=st.integers(1, 8), seed=st.integers(0, 99))
+    def test_topk_channels(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        d = rng.normal(size=n) ** 2
+        idx = topk_channels(d, k)
+        assert len(idx) == min(k, n)
+        # chosen set == true top-k set
+        want = set(np.argsort(-d)[:k])
+        assert set(int(i) for i in idx) == want
+
+    def test_shard_local_topk_balanced(self):
+        d = np.random.default_rng(0).normal(size=64) ** 2
+        idx = topk_channels(d, 16, shard_channels=4)
+        # exactly 4 picks per 16-channel shard
+        counts = np.histogram(idx, bins=4, range=(0, 64))[0]
+        assert (counts == 4).all()
+
+
+class TestFisher:
+    def test_eq2_direct(self):
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (5, 7, 3))
+        g = jax.random.normal(jax.random.PRNGKey(1), (5, 7, 3))
+        got = fisher_from_activations(a, g)
+        want = np.zeros(3)
+        an, gn = np.array(a), np.array(g)
+        for o in range(3):
+            u = (an[:, :, o] * gn[:, :, o]).sum(1)
+            want[o] = (u ** 2).sum() / (2 * 5)
+        np.testing.assert_allclose(np.array(got), want, rtol=1e-5)
+
+    def test_tap_trick_equals_direct(self):
+        """grad w.r.t. a ones-tap == Σ_d a·g (the memory-lean probe)."""
+        key = jax.random.PRNGKey(0)
+        w1 = jax.random.normal(key, (4, 8))
+        w2 = jax.random.normal(jax.random.PRNGKey(1), (8, 2))
+        x = jax.random.normal(jax.random.PRNGKey(2), (3, 5, 4))  # (N, D, 4)
+
+        def loss_with_tap(tap):
+            a = jnp.maximum(x @ w1, 0)  # (N, D, 8)
+            a = a * tap[:, None, :]
+            return jnp.sum((a @ w2) ** 2)
+
+        tap = jnp.ones((3, 8))
+        u = jax.grad(loss_with_tap)(tap)  # (N, 8)
+
+        def loss_on_act(a):
+            return jnp.sum((a @ w2) ** 2)
+
+        a0 = jnp.maximum(x @ w1, 0)
+        g = jax.grad(loss_on_act)(a0)
+        want = jnp.sum(a0 * g, axis=1)
+        np.testing.assert_allclose(np.array(u), np.array(want), rtol=1e-4)

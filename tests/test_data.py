@@ -1,0 +1,92 @@
+"""Data pipeline invariants (hypothesis property tests on the episodic
+sampler — Meta-Dataset B.1 constraints) + loader determinism/resume."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    DOMAINS, EpisodeStream, TokenLoader, augment_support, lm_episode,
+    sample_episode,
+)
+
+
+class TestEpisodeSampler:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        domain=st.sampled_from(DOMAINS),
+        seed=st.integers(0, 10_000),
+        max_way=st.integers(5, 12),
+    )
+    def test_b1_constraints(self, domain, seed, max_way):
+        rng = np.random.default_rng(seed)
+        ep = sample_episode(rng, domain, res=16, max_way=max_way,
+                            max_support_total=50, max_support_per_class=10,
+                            query_per_class=4)
+        s_lbl = ep.support["episode_labels"]
+        q_lbl = ep.query["episode_labels"]
+        valid = s_lbl[s_lbl >= 0]
+        assert 5 <= ep.n_way <= max_way
+        assert valid.max() < ep.n_way
+        # every class has >= 1 support sample
+        assert set(range(ep.n_way)) == set(valid.tolist())
+        # per-class caps
+        counts = np.bincount(valid, minlength=ep.n_way)
+        assert counts.max() <= 10
+        assert valid.size <= 50 + ep.n_way  # cap + min-1-per-class slack
+        # class-balanced query
+        qv = q_lbl[q_lbl >= 0]
+        qc = np.bincount(qv, minlength=ep.n_way)
+        assert (qc == 4).all()
+        assert np.isfinite(ep.support["images"]).all()
+
+    def test_padding(self):
+        rng = np.random.default_rng(0)
+        ep = sample_episode(rng, "stripes", res=16, max_way=6,
+                            support_pad=128, query_pad=128)
+        assert ep.support["images"].shape[0] == 128
+        assert (ep.support["episode_labels"] < 6).all()
+        n_pad = np.sum(ep.support["episode_labels"] == -1)
+        assert n_pad > 0  # padded region marked -1
+
+    def test_augment_preserves_labels(self):
+        rng = np.random.default_rng(0)
+        ep = sample_episode(rng, "blobs", res=16, max_way=6, support_pad=64)
+        pq = augment_support(rng, ep.support)
+        assert (pq["episode_labels"] == ep.support["episode_labels"]).all()
+        assert pq["images"].shape == ep.support["images"].shape
+        # but images actually changed
+        assert np.abs(pq["images"] - ep.support["images"]).max() > 0
+
+
+class TestLoaders:
+    def test_token_loader_deterministic_resume(self):
+        l1 = TokenLoader(100, global_batch=4, seq=16, seed=3)
+        batches = [l1.next() for _ in range(5)]
+        l2 = TokenLoader(100, global_batch=4, seq=16, seed=3)
+        l2.load_state_dict({"step": 3, "seed": 3})
+        b3 = l2.next()
+        np.testing.assert_array_equal(b3["tokens"], batches[3]["tokens"])
+
+    def test_token_loader_host_sharding(self):
+        full = TokenLoader(100, global_batch=8, seq=16, seed=0, host_id=0, n_hosts=1)
+        h0 = TokenLoader(100, global_batch=8, seq=16, seed=0, host_id=0, n_hosts=2)
+        h1 = TokenLoader(100, global_batch=8, seq=16, seed=0, host_id=1, n_hosts=2)
+        assert h0.local_batch == 4 and h1.local_batch == 4
+        b0, b1 = h0.next(), h1.next()
+        # different hosts draw different streams
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_episode_stream_resume(self):
+        s1 = EpisodeStream("stripes", seed=1, res=16, support_pad=32, query_pad=32)
+        eps = [s1.next() for _ in range(4)]
+        s2 = EpisodeStream("stripes", seed=1, res=16, support_pad=32, query_pad=32)
+        s2.load_state_dict({"cursor": 2, "seed": 1})
+        ep2 = s2.next()
+        np.testing.assert_array_equal(ep2.support["images"], eps[2].support["images"])
+
+    def test_lm_episode(self):
+        rng = np.random.default_rng(0)
+        ep = lm_episode(rng, vocab=64, seq=32, max_way=6, support_pad=64,
+                        query_pad=64)
+        assert ep.support["tokens"].shape == (64, 32)
+        assert ep.support["tokens"].max() < 64

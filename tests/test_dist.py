@@ -1,0 +1,139 @@
+"""Distribution tests: sharding-rule guards (pure logic) + a real sharded
+sparse train step executed on a multi-device host mesh (subprocess, so the
+device-count flag doesn't leak into other tests)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+SHARDED_STEP = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "{src}")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist.sharding import ShardingRules
+from repro.models import transformer as T
+from repro.models.api import ArchConfig
+from repro.core import lm_backbone
+from repro.core.policy import SelectedUnit, SparseUpdatePolicy
+from repro.optim import adam, apply_updates
+
+cfg = ArchConfig(name="t", family="dense", n_layers=4, d_model=64, vocab=128,
+                 n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                 dtype="float32").validate()
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+rules = ShardingRules(cfg, mesh)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+params = jax.device_put(params, rules.params(params))
+
+policy = SparseUpdatePolicy(horizon=2, units=(
+    SelectedUnit(2, "mlp", tuple(range(64))),
+    SelectedUnit(3, "attn", (0, 2)),
+))
+bb = lm_backbone(cfg, 64, 2)
+deltas = bb.init_deltas(policy)
+deltas = jax.device_put(deltas, rules.deltas(deltas))
+opt = adam(1e-3)
+ost = opt.init(deltas)
+
+def step(params, deltas, ost, batch):
+    loss, g = jax.value_and_grad(
+        lambda d: T.lm_loss(cfg, params, batch, deltas=d, plan=policy))(deltas)
+    upd, ost = opt.update(g, ost, deltas)
+    return apply_updates(deltas, upd), ost, loss
+
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, 128)
+batch = jax.device_put({{"tokens": toks, "labels": toks}},
+                       rules.batch({{"tokens": toks, "labels": toks}}))
+with mesh:
+    jstep = jax.jit(step)
+    l0 = None
+    for i in range(3):
+        deltas, ost, loss = jstep(params, deltas, ost, batch)
+        l0 = l0 or float(loss)
+assert np.isfinite(float(loss)), "loss not finite"
+assert float(loss) < l0 + 1e-3, "loss diverged"
+# verify delta leaves are actually sharded over the model axis
+leaf = deltas["L2"]["mlp"]["w_gate"]
+assert leaf.sharding.num_devices == 4 or len(leaf.sharding.device_set) >= 2
+print("SHARDED_OK", l0, float(loss))
+"""
+
+
+def test_sharded_sparse_train_step(tmp_path):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = SHARDED_STEP.format(src=src)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_OK" in out.stdout
+
+
+class TestShardingRules:
+    def _rules(self, arch, tp=16):
+        # build rules against a fake mesh-shape view (no devices needed)
+        import jax
+        from repro import configs
+        from repro.dist.sharding import ShardingRules
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": tp}
+
+        return ShardingRules(configs.get_config(arch), FakeMesh())
+
+    def test_gemma_heads_replicated_ffn_sharded(self):
+        r = self._rules("gemma-2b")
+        assert not r.shard_q_heads  # 8 heads on 16-way TP
+        assert r.shard_ffn
+        spec = r.param_spec("stacks/g0/attn/wq", (18, 2048, 2048))
+        assert all(s is None for s in spec)
+        spec = r.param_spec("stacks/g0/mlp/w_gate", (18, 2048, 16384))
+        assert spec[-1] == "model"
+
+    def test_deepseek_full_ep(self):
+        r = self._rules("deepseek-v3-671b")
+        assert r.shard_experts_full
+        spec = r.param_spec("stacks/g1/moe/w_gate", (58, 256, 7168, 2048))
+        assert spec[1] == ("model", "data")
+
+    def test_mixtral_expert_tp(self):
+        r = self._rules("mixtral-8x7b")
+        assert not r.shard_experts  # 8 experts on 16-way
+        assert r.shard_expert_ffn
+        spec = r.param_spec("stacks/g0/moe/w_down", (32, 8, 14336, 4096))
+        assert spec[2] == "model"
+
+    def test_vocab_guard(self):
+        r = self._rules("whisper-base")
+        assert not r.shard_vocab  # 51865 % 16 != 0
+        spec = r.param_spec("embed", (51865, 512))
+        assert all(s is None for s in spec)
+
+    def test_ssm_head_sharding(self):
+        r = self._rules("mamba2-1.3b")
+        assert r.shard_ssm  # 64 SSD heads / 16
+        spec = r.param_spec("stacks/g0/ssm/w_x", (48, 2048, 4096))
+        assert spec[-1] == "model"
+
+    def test_seq_parallel_replicates_block_weights(self):
+        import jax
+        from repro import configs
+        from repro.dist.sharding import ShardingRules
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        r = ShardingRules(configs.get_config("gemma-2b"), FakeMesh(),
+                          seq_parallel=True)
+        spec = r.param_spec("stacks/g0/mlp/w_gate", (18, 2048, 16384))
+        assert all(s is None for s in spec)
+        assert r.batch_spec()["tokens"][1] == "model"

@@ -1,0 +1,90 @@
+"""Trip-count-aware HLO analyzer: validated against programs with known
+exact FLOP counts (the roofline's measurement tool must itself be tested)."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.launch.hlo_analysis import analyse_hlo, parse_hlo
+
+
+def _compile_text(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+class TestAnalyzer:
+    def test_plain_matmul(self):
+        f = lambda a, b: a @ b
+        txt = _compile_text(
+            f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+            jax.ShapeDtypeStruct((128, 32), jnp.float32))
+        res = analyse_hlo(txt)
+        assert res["flops"] == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+    def test_scan_trip_count(self):
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = lax.scan(body, x, None, length=10)
+            return jnp.sum(y)
+
+        txt = _compile_text(
+            f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+            jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        res = analyse_hlo(txt)
+        want = 10 * 2 * 64 * 128 * 128
+        assert res["flops"] == pytest.approx(want, rel=0.01)
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def inner(c, _):
+                return c @ w, None
+
+            def outer(c, _):
+                y, _ = lax.scan(inner, c, None, length=10)
+                return y, None
+
+            y, _ = lax.scan(outer, x, None, length=5)
+            return jnp.sum(y)
+
+        txt = _compile_text(
+            f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+            jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        res = analyse_hlo(txt)
+        want = 50 * 2 * 64 * 128 * 128
+        assert res["flops"] == pytest.approx(want, rel=0.01)
+
+    def test_memory_floor_le_bytes(self):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = lax.scan(body, x, None, length=7)
+            return y
+
+        txt = _compile_text(
+            f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32))
+        res = analyse_hlo(txt)
+        assert 0 < res["bytes_floor"]
+        assert res["flops"] == pytest.approx(7 * 2 * 32 * 64 * 64, rel=0.01)
+
+    def test_tuple_type_with_index_comments(self):
+        """while ops with long tuple types carry /*index=N*/ comments that
+        must not break instruction parsing (regression test)."""
+        def f(a, b, c, d, e, x):
+            def body(carry, _):
+                y = carry @ a @ b @ c @ d @ e
+                return y, None
+            y, _ = lax.scan(body, x, None, length=3)
+            return jnp.sum(y)
+
+        specs = [jax.ShapeDtypeStruct((16, 16), jnp.float32)] * 6
+        txt = _compile_text(f, *specs)
+        res = analyse_hlo(txt)
+        want = 3 * 5 * 2 * 16 ** 3
+        assert res["flops"] == pytest.approx(want, rel=0.05)

@@ -1,0 +1,107 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose vs the ref.py oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+class TestFisherKernel:
+    @pytest.mark.parametrize("shape,blocks", [
+        ((2, 256, 128), (256, 128)),
+        ((4, 1024, 512), (512, 256)),
+        ((1, 512, 256), (128, 64)),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, shape, blocks, dtype):
+        n, d, c = shape
+        a = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+        g = (jax.random.normal(jax.random.PRNGKey(1), shape, dtype) * 0.1).astype(dtype)
+        got = ops.fisher(a, g, block_d=blocks[0], block_c=blocks[1])
+        want = ref.fisher_ref(a, g)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=tol, atol=tol)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("cfg", [
+        dict(b=2, s=256, hq=4, hkv=2, d=64, causal=True, window=0),
+        dict(b=1, s=512, hq=4, hkv=1, d=64, causal=True, window=128),
+        dict(b=2, s=256, hq=2, hkv=2, d=128, causal=False, window=0),
+        dict(b=1, s=384, hq=3, hkv=1, d=32, causal=True, window=0),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, cfg, dtype):
+        b, s, hq, hkv, d = cfg["b"], cfg["s"], cfg["hq"], cfg["hkv"], cfg["d"]
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, s, hq, d), dtype)
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d), dtype)
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d), dtype)
+        got = ops.flash_attention(q, k, v, causal=cfg["causal"],
+                                  window=cfg["window"],
+                                  block_q=128, block_k=128)
+        kk = jnp.repeat(k, hq // hkv, 2)
+        vv = jnp.repeat(v, hq // hkv, 2)
+        want = ref.flash_attention_ref(q, kk, vv, causal=cfg["causal"],
+                                       window=cfg["window"])
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.array(got, np.float32), np.array(want, np.float32),
+            rtol=tol, atol=tol)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("cfg", [
+        dict(b=2, s=128, h=2, p=32, n=16, chunk=32),
+        dict(b=1, s=256, h=4, p=64, n=32, chunk=64),
+        dict(b=1, s=64, h=1, p=16, n=8, chunk=64),  # single chunk
+    ])
+    def test_vs_oracle(self, cfg):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (cfg["b"], cfg["s"], cfg["h"], cfg["p"])) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                               (cfg["b"], cfg["s"], cfg["h"])))
+        a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (cfg["h"],)))
+        bm = jax.random.normal(jax.random.PRNGKey(3), (cfg["b"], cfg["s"], cfg["n"])) * 0.5
+        cm = jax.random.normal(jax.random.PRNGKey(4), (cfg["b"], cfg["s"], cfg["n"])) * 0.5
+        y, st = ops.ssd_scan(x, dt, a, bm, cm, chunk=cfg["chunk"])
+        yr, str_ = ref.ssd_scan_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.array(y), np.array(yr), rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.array(st), np.array(str_), rtol=2e-3, atol=2e-3)
+
+
+class TestGradQuant:
+    @pytest.mark.parametrize("n", [100, 1024, 5000])
+    def test_vs_oracle(self, n):
+        g = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 0.01
+        e = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 1e-4
+        q, s, ne = ops.grad_quant(g, e, block=256)
+        qr, sr, nr = ref.grad_quant_ref(g, e)
+        assert bool(jnp.all(q == qr))
+        np.testing.assert_allclose(float(s), float(sr), rtol=1e-6)
+        np.testing.assert_allclose(np.array(ne), np.array(nr), atol=1e-6)
+
+    def test_error_feedback_bounded(self):
+        """|residual| <= scale/2 (round-to-nearest) except clipped values."""
+        g = jax.random.normal(jax.random.PRNGKey(0), (2048,))
+        e = jnp.zeros((2048,))
+        q, s, ne = ops.grad_quant(g, e)
+        unclipped = jnp.abs(q) < 127
+        assert float(jnp.max(jnp.abs(ne) * unclipped)) <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_converges(self):
+        """Summed dequantised grads track summed true grads (EF property)."""
+        rng = jax.random.PRNGKey(0)
+        e = jnp.zeros((64,))
+        total_true = jnp.zeros((64,))
+        total_sent = jnp.zeros((64,))
+        for i in range(20):
+            g = jax.random.normal(jax.random.fold_in(rng, i), (64,)) * 0.1
+            q, s, e = ops.grad_quant(g, e)
+            total_true += g
+            total_sent += q.astype(jnp.float32) * s
+        # residual bounded -> cumulative drift bounded by one quantum
+        drift = float(jnp.max(jnp.abs(total_true - total_sent)))
+        assert drift <= float(s) + 1e-5

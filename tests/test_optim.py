@@ -1,0 +1,79 @@
+"""Optimizer + compression unit/property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adam, apply_updates, clip_by_global_norm, ef_state_init, int8_compress,
+    int8_decompress, momentum, sgd, warmup_cosine,
+)
+
+
+class TestOptimizers:
+    def test_sgd_step(self):
+        opt = sgd(0.1)
+        p = {"w": jnp.ones((3,))}
+        g = {"w": jnp.full((3,), 2.0)}
+        st_ = opt.init(p)
+        upd, st_ = opt.update(g, st_, p)
+        p = apply_updates(p, upd)
+        np.testing.assert_allclose(np.array(p["w"]), 1.0 - 0.2, rtol=1e-6)
+
+    def test_adam_matches_reference(self):
+        opt = adam(1e-2, b1=0.9, b2=0.999, eps=1e-8)
+        p = {"w": jnp.zeros((4,))}
+        st_ = opt.init(p)
+        rng = np.random.default_rng(0)
+        m = v = np.zeros(4)
+        ref = np.zeros(4)
+        for t in range(1, 6):
+            g = rng.normal(size=4).astype(np.float32)
+            upd, st_ = opt.update({"w": jnp.asarray(g)}, st_, p)
+            p = apply_updates(p, upd)
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * g * g
+            mh, vh = m / (1 - 0.9 ** t), v / (1 - 0.999 ** t)
+            ref -= 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+        np.testing.assert_allclose(np.array(p["w"]), ref, rtol=1e-5)
+
+    def test_bf16_state_dtype(self):
+        opt = adam(1e-3, state_dtype=jnp.bfloat16)
+        p = {"w": jnp.zeros((4,), jnp.bfloat16)}
+        st_ = opt.init(p)
+        assert st_["m"]["w"].dtype == jnp.bfloat16
+
+    def test_clip(self):
+        opt = clip_by_global_norm(sgd(1.0), 1.0)
+        p = {"w": jnp.zeros((2,))}
+        g = {"w": jnp.asarray([30.0, 40.0])}  # norm 50
+        upd, _ = opt.update(g, opt.init(p), p)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.array(upd["w"])), 1.0, rtol=1e-4)
+
+    def test_warmup_cosine(self):
+        f = warmup_cosine(1.0, 100, warmup_steps=10)
+        assert float(f(jnp.asarray(0))) == 0.0
+        np.testing.assert_allclose(float(f(jnp.asarray(10))), 1.0, rtol=1e-5)
+        assert float(f(jnp.asarray(100))) < 1e-3
+
+
+class TestCompression:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 1000), scale=st.floats(1e-4, 10.0))
+    def test_quantisation_error_bound(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        g = {"w": jnp.asarray(rng.normal(size=64) * scale, jnp.float32)}
+        ef = ef_state_init(g)
+        q, s, ne = int8_compress(g, ef)
+        # residual bounded by one quantum
+        assert float(jnp.max(jnp.abs(ne["w"]))) <= float(s["w"]) * 1.001
+
+    def test_roundtrip_plus_error_is_exact(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=32), jnp.float32)}
+        ef = ef_state_init(g)
+        q, s, ne = int8_compress(g, ef)
+        deq = int8_decompress(q, s)
+        np.testing.assert_allclose(
+            np.array(deq["w"] + ne["w"]), np.array(g["w"]), atol=1e-6)
