@@ -2,8 +2,9 @@
 
 Pipeline mirrors the paper end-to-end at CPU scale: (1) offline ProtoNet
 meta-training of an edge-CNN backbone on *source* domains; (2) online
-adaptation on held-out *target* domains with each on-device training method;
-(3) query-set accuracy averaged over episodes.
+adaptation on held-out *target* domains with each on-device training method
+through the ``repro.api`` façade; (3) query-set accuracy averaged over
+episodes.
 
 Meta-trained weights are cached under results/cache/ so every table reuses
 the same offline stage (as in the paper).
@@ -18,19 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    Budget, adapt_task, cnn_backbone, evaluate_task, full_policy,
-    last_layer_policy, select_policy, static_channel_policy,
-)
-from repro.core.adapt import AdaptResult
-from repro.core.baselines import (
-    evolutionary_search_policy, make_full_episode_step,
-    make_tinytl_episode_step, tinytl_adapter_init, tinytl_features,
-)
-from repro.core.protonet import episode_accuracy, make_meta_train_step
-from repro.core.sparse import EpisodeStepCache
-from repro.data import DOMAINS, augment_support, sample_episode
-from repro.models.edge_cnn import EDGE_CNNS, _build_ir_net
+from repro import api
+from repro.core.protonet import make_meta_train_step
+from repro.data import DOMAINS, sample_episode
 from repro.optim import adam
 
 RES = 48
@@ -42,22 +33,14 @@ TARGET_DOMAINS = ("glyphs", "stripes", "blobs", "spots", "waves")
 CACHE_DIR = "results/cache"
 
 
-def small_cnn(name: str = "tiny"):
-    if name == "tiny":
-        spec = [(1, 8, 1, 1, 3), (4, 16, 2, 2, 3), (4, 24, 2, 2, 3),
-                (4, 32, 1, 1, 3)]
-        return _build_ir_net("tiny", spec, 1.0, 8, 0, RES)
-    return EDGE_CNNS[name](in_res=RES)
+def small_cnn_backbone(name: str = "tiny"):
+    key = "tiny-cnn" if name == "tiny" else name
+    return api.backbone(key, in_res=RES, batch_size=SUPPORT_PAD)
 
 
-def episode_jnp(ep):
-    sup = {k: jnp.asarray(v) for k, v in ep.support.items()}
-    qry = {k: jnp.asarray(v) for k, v in ep.query.items()}
-    return sup, qry
-
-
-def pseudo_query(rng, ep):
-    return {k: jnp.asarray(v) for k, v in augment_support(rng, ep.support).items()}
+def sample_task(rng, domain, **kw):
+    return api.sample_task(rng, domain, res=RES, max_way=MAX_WAY,
+                           support_pad=SUPPORT_PAD, query_pad=QUERY_PAD, **kw)
 
 
 def meta_train(
@@ -68,8 +51,7 @@ def meta_train(
     cache: bool = True,
 ) -> Tuple[object, list]:
     """Offline stage: ProtoNet meta-training on the source domains."""
-    cfg = small_cnn(arch)
-    bb = cnn_backbone(cfg, batch_size=SUPPORT_PAD)
+    bb = small_cnn_backbone(arch)
     key = jax.random.PRNGKey(seed)
     params = bb.init(key)
 
@@ -89,7 +71,8 @@ def meta_train(
         dom = SOURCE_DOMAINS[i % len(SOURCE_DOMAINS)]
         ep = sample_episode(rng, dom, res=RES, max_way=MAX_WAY,
                             support_pad=SUPPORT_PAD, query_pad=QUERY_PAD)
-        sup, qry = episode_jnp(ep)
+        sup = {k: jnp.asarray(v) for k, v in ep.support.items()}
+        qry = {k: jnp.asarray(v) for k, v in ep.query.items()}
         params, opt_state, loss = step(params, opt_state, sup, qry)
     if cache:
         os.makedirs(CACHE_DIR, exist_ok=True)
@@ -98,11 +81,18 @@ def meta_train(
     return bb, params
 
 
-# paper budgets: "around 1 MB" backward memory (Sec 2.2)
-DEFAULT_BUDGET = Budget(mem_bytes=1e6, compute_frac=0.5, channel_ratio=0.75)
+# paper budgets: "around 1 MB" backward memory (Sec 2.2) — the Pi Zero
+# preset carries exactly that envelope
+DEFAULT_PROFILE = api.RPI_ZERO
+DEFAULT_BUDGET = DEFAULT_PROFILE.budget()
 
 
 FEWSHOT = dict(max_support_total=40, max_support_per_class=8)
+
+
+def make_session(bb, params, lr: float) -> api.TinyTrainSession:
+    return api.TinyTrainSession(bb, params, lr=lr, baseline_lr=1e-3,
+                                max_way=MAX_WAY)
 
 
 def run_method(
@@ -112,117 +102,59 @@ def run_method(
     domains=TARGET_DOMAINS,
     episodes_per_domain: int = 2,
     iters: int = 40,  # paper: 40 iterations
-    budget: Budget = DEFAULT_BUDGET,
+    profile: api.DeviceProfile = DEFAULT_PROFILE,
     lr: float = 1e-3,
     seed: int = 0,
     criterion: str = "tinytrain",
     channel_mode: str = "dynamic",
-    step_cache: Optional[EpisodeStepCache] = None,
+    session: Optional[api.TinyTrainSession] = None,
 ) -> Dict[str, object]:
     """Adapt + evaluate one method over target-domain episodes.
 
-    Returns per-domain accuracies and wall times.  ``method`` in
-    {none, fulltrain, lastlayer, tinytl, adapterdrop<k>, sparseupdate,
-    tinytrain}.
+    Returns per-domain accuracies and wall times.  ``method`` is any
+    ``TinyTrainSession.baseline`` name: {none, fulltrain, lastlayer, tinytl,
+    adapterdrop<k>, sparseupdate, tinytrain}.
     """
     rng = np.random.default_rng(seed + 1000)
     if method in ("tinytrain", "sparseupdate", "lastlayer"):
         lr = 3e-3  # delta params start at zero; tuned per method as in the paper
-    opt = adam(lr)
+    if session is None:
+        session = make_session(bb, params, lr)
+
+    # the ES baseline prepares its static policy offline on a PROXY source
+    # domain (it cannot see target data), as in the paper
+    proxy_task = None
+    if method == "sparseupdate":
+        proxy_rng = np.random.default_rng(seed)
+        proxy_task = sample_task(proxy_rng, SOURCE_DOMAINS[0])
+
+    # resolve the criterion string for Fig. 4 channel-mode ablations
+    crit = criterion
+    if method == "tinytrain" and channel_mode != "dynamic":
+        crit = channel_mode  # "random" | "l2norm" registered criteria
+
     accs: Dict[str, List[float]] = {d: [] for d in domains}
     fisher_times, train_times = [], []
-
-    if step_cache is None:
-        step_cache = EpisodeStepCache(bb, opt, MAX_WAY)
-
-    # static methods prepared once (offline), as in the paper
-    static_policy = None
-    if method == "sparseupdate":
-        # offline ES on a PROXY source domain (cannot see target data)
-        proxy_rng = np.random.default_rng(seed)
-        ep = sample_episode(proxy_rng, SOURCE_DOMAINS[0], res=RES,
-                            max_way=MAX_WAY, support_pad=SUPPORT_PAD,
-                            query_pad=QUERY_PAD)
-        sup, _ = episode_jnp(ep)
-        pq = pseudo_query(proxy_rng, ep)
-        from repro.core.fisher import fisher_probe
-        from repro.core.protonet import episode_loss as el
-
-        def probe_loss(p, b, taps=None):
-            return el(bb.features, p, sup, pq, MAX_WAY, taps=taps)
-
-        n = int(np.sum(np.asarray(ep.support["episode_labels"]) >= 0))
-        potentials, _, _ = fisher_probe(bb, params, probe_loss, sup, n)
-        static_policy = evolutionary_search_policy(
-            bb.unit_costs, potentials, budget, iters=400, seed=seed)
-    elif method == "lastlayer":
-        static_policy = last_layer_policy(bb.unit_costs, len(bb.unit_costs))
-
-    tinytl_step = None
-    dropped = 0
-    if method.startswith("tinytl") or method.startswith("adapterdrop"):
-        if method.startswith("adapterdrop"):
-            frac = int(method.replace("adapterdrop", "") or "50") / 100
-            n_blocks = max(s.block for s in bb.cfg.layers) + 1
-            dropped = int(n_blocks * frac)
-        tinytl_step = make_tinytl_episode_step(bb.cfg, opt, MAX_WAY, dropped)
-
     for dom in domains:
         for e in range(episodes_per_domain):
-            ep = sample_episode(rng, dom, res=RES, max_way=MAX_WAY,
-                                support_pad=SUPPORT_PAD, query_pad=QUERY_PAD,
-                                **FEWSHOT)
-            sup, qry = episode_jnp(ep)
-            pq = pseudo_query(rng, ep)
-
+            task = sample_task(rng, dom, **FEWSHOT)
             if method == "none":
-                acc = float(episode_accuracy(bb.features, params, sup, qry, MAX_WAY))
-            elif method == "fulltrain":
-                step = make_full_episode_step(bb.features, opt, MAX_WAY)
-                # step donates its params argument: train a private copy
-                p = jax.tree_util.tree_map(jnp.copy, params)
-                st = opt.init(p)
-                t0 = time.perf_counter()
-                for _ in range(iters):
-                    p, st, _ = step(p, st, sup, pq)
-                train_times.append(time.perf_counter() - t0)
-                acc = float(episode_accuracy(bb.features, p, sup, qry, MAX_WAY))
-            elif method.startswith("tinytl") or method.startswith("adapterdrop"):
-                adapters = tinytl_adapter_init(bb.cfg, jax.random.PRNGKey(seed))
-                st = opt.init(adapters)
-                t0 = time.perf_counter()
-                for _ in range(iters):
-                    adapters, st, _ = tinytl_step(params, adapters, st, sup, pq)
-                train_times.append(time.perf_counter() - t0)
-                acc = float(episode_accuracy(
-                    lambda a, b: tinytl_features(bb.cfg, params, a, b["images"],
-                                                 dropped_blocks=dropped),
-                    adapters, sup, qry, MAX_WAY))
+                acc = session.evaluate(task)
+            elif method == "tinytrain":
+                a = session.adapt(task, profile, criterion=crit, iters=iters,
+                                  seed=seed)
+                fisher_times.append(a.fisher_seconds)
+                train_times.append(a.train_seconds)
+                acc = a.accuracy()
             else:
-                # policy-based: lastlayer / sparseupdate / tinytrain variants
-                override = static_policy
-                res = adapt_task(
-                    bb, params, sup, pq, budget, opt, iters=iters,
-                    max_way=MAX_WAY, criterion=criterion,
-                    policy_override=override, step_cache=step_cache,
-                )
-                if channel_mode != "dynamic" and override is None:
-                    # Fig. 4 ablation: same layers, static channel choice
-                    l2 = bb.weight_l2(params) if channel_mode == "l2norm" else None
-                    pol = static_channel_policy(
-                        res.policy, bb.unit_costs, channel_mode,
-                        rng=np.random.default_rng(seed), weight_l2=l2)
-                    res = adapt_task(
-                        bb, params, sup, pq, budget, opt, iters=iters,
-                        max_way=MAX_WAY, policy_override=pol,
-                        step_cache=step_cache,
-                    )
-                fisher_times.append(res.fisher_seconds)
-                train_times.append(res.train_seconds)
-                ev = step_cache.evaluate(res.policy)
-                ci = step_cache.chan_idx_arrays(res.policy)
-                acc = float(ev(params, res.deltas, sup, qry, ci))
-            accs[dom].append(acc)
+                a = session.baseline(method, task, profile, iters=iters,
+                                     proxy_task=proxy_task, seed=seed)
+                if a.fisher_seconds:
+                    fisher_times.append(a.fisher_seconds)
+                if a.train_seconds:
+                    train_times.append(a.train_seconds)
+                acc = a.accuracy()
+            accs[dom].append(float(acc))
 
     per_domain = {d: float(np.mean(v)) for d, v in accs.items()}
     return {

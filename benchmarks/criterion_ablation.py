@@ -22,39 +22,24 @@ def run(arch: str = "tiny", episodes_per_domain: int = 2, iters: int = 12):
     rows = []
     for name, crit in VARIANTS:
         if crit == "l2norm":
-            # layer scores = per-unit weight L2 norms instead of Fisher
-            from repro.core import Budget, select_policy
-            from repro.core.sparse import EpisodeStepCache
-            from repro.optim import adam
+            # layer scores = per-unit weight L2 norms instead of Fisher:
+            # build the static policy with core primitives, run it through
+            # the session as a policy override
+            from repro.core import select_policy
             l2 = bb.weight_l2(params)
             pot = np.array([np.linalg.norm(l2[(c.layer, c.kind)])
                             for c in bb.unit_costs])
             pol = select_policy(bb.unit_costs, pot, l2, common.DEFAULT_BUDGET,
                                 criterion="fisher_only")
-            r = common.run_method(bb, params, "static_l2",
-                                  episodes_per_domain=episodes_per_domain,
-                                  iters=iters)
-            # run via policy override
-            cache = EpisodeStepCache(bb, adam(1e-3), common.MAX_WAY)
+            session = common.make_session(bb, params, 3e-3)
             accs = []
             rng = np.random.default_rng(1000)
-            from repro.data import sample_episode
-            from repro.core import adapt_task
             for dom in common.TARGET_DOMAINS:
                 for _ in range(episodes_per_domain):
-                    ep = sample_episode(rng, dom, res=common.RES,
-                                        max_way=common.MAX_WAY,
-                                        support_pad=common.SUPPORT_PAD,
-                                        query_pad=common.QUERY_PAD)
-                    sup, qry = common.episode_jnp(ep)
-                    pq = common.pseudo_query(rng, ep)
-                    res = adapt_task(bb, params, sup, pq, common.DEFAULT_BUDGET,
-                                     adam(1e-3), iters=iters,
-                                     max_way=common.MAX_WAY,
-                                     policy_override=pol, step_cache=cache)
-                    ev = cache.evaluate(res.policy)
-                    ci = cache.chan_idx_arrays(res.policy)
-                    accs.append(float(ev(params, res.deltas, sup, qry, ci)))
+                    task = common.sample_task(rng, dom)
+                    a = session.adapt(task, common.DEFAULT_PROFILE,
+                                      policy_override=pol, iters=iters)
+                    accs.append(a.accuracy())
             rows.append({"variant": name, "avg": float(np.mean(accs))})
         else:
             r = common.run_method(bb, params, "tinytrain", criterion=crit,

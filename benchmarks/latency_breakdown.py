@@ -10,22 +10,19 @@ from . import common
 
 
 def run(arch: str = "tiny", episodes_per_domain: int = 1, iters: int = 12):
-    from repro.core.sparse import EpisodeStepCache
-    from repro.optim import adam
-
     bb, params = common.meta_train(arch)
     rows = []
     for m in ("sparseupdate", "tinytrain"):
-        # warm-up episode first with a shared jit cache: report steady-state
+        # warm-up episode first with a shared session: report steady-state
         # latency (compiles are per-deployment one-offs, amortised over
         # tasks — paper Tables 9/10 likewise measure a warmed runtime)
-        cache = EpisodeStepCache(bb, adam(1e-3), common.MAX_WAY)
+        session = common.make_session(bb, params, 3e-3)
         common.run_method(bb, params, m, domains=common.TARGET_DOMAINS[:1],
                           episodes_per_domain=1, iters=iters,
-                          step_cache=cache)
+                          session=session)
         r = common.run_method(bb, params, m,
                               episodes_per_domain=episodes_per_domain,
-                              iters=iters, step_cache=cache)
+                              iters=iters, session=session)
         total = r["fisher_s"] + r["train_s"]
         rows.append({
             "method": m, "fisher_s": r["fisher_s"], "train_s": r["train_s"],

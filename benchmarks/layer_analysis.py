@@ -7,11 +7,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import adapt_task
 from repro.core.policy import SelectedUnit, SparseUpdatePolicy
-from repro.core.sparse import EpisodeStepCache
-from repro.data import sample_episode
-from repro.optim import adam
 
 from . import common
 
@@ -20,16 +16,9 @@ def run(arch: str = "tiny", iters: int = 10, domain: str = "stripes",
         channel_ratio: float = 0.5, max_layers: int = 0):
     bb, params = common.meta_train(arch)
     rng = np.random.default_rng(7)
-    ep = sample_episode(rng, domain, res=common.RES, max_way=common.MAX_WAY,
-                        support_pad=common.SUPPORT_PAD,
-                        query_pad=common.QUERY_PAD)
-    sup, qry = common.episode_jnp(ep)
-    pq = common.pseudo_query(rng, ep)
-    opt = adam(1e-3)
-    cache = EpisodeStepCache(bb, opt, common.MAX_WAY)
-
-    from repro.core.protonet import episode_accuracy
-    base = float(episode_accuracy(bb.features, params, sup, qry, common.MAX_WAY))
+    task = common.sample_task(rng, domain)
+    session = common.make_session(bb, params, 1e-3)
+    base = session.evaluate(task)
 
     rows = []
     layer_set = bb.unit_costs if not max_layers else bb.unit_costs[-max_layers:]
@@ -39,12 +28,9 @@ def run(arch: str = "tiny", iters: int = 10, domain: str = "stripes",
             horizon=c.layer,
             units=(SelectedUnit(c.layer, c.kind, tuple(range(k))),),
         )
-        res = adapt_task(bb, params, sup, pq, common.DEFAULT_BUDGET, opt,
-                         iters=iters, max_way=common.MAX_WAY,
-                         policy_override=pol, step_cache=cache)
-        ev = cache.evaluate(res.policy)
-        ci = cache.chan_idx_arrays(res.policy)
-        acc = float(ev(params, res.deltas, sup, qry, ci))
+        a = session.adapt(task, common.DEFAULT_PROFILE,
+                          policy_override=pol, iters=iters)
+        acc = a.accuracy()
         gain = acc - base
         rows.append({
             "layer": c.layer, "kind": c.kind, "gain_pp": gain * 100,

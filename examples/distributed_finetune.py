@@ -1,9 +1,11 @@
 """Distributed sparse fine-tuning of an assigned LM architecture.
 
-Uses the same launcher path as production (``repro.launch.train``):
-Fisher probe on the first batch -> budgeted policy -> sparse train steps
-with fault-tolerant checkpointing.  Run at smoke scale on CPU; the full
-configs take the production mesh via --production-mesh on a pod.
+Uses the same launcher path as production (``repro.launch.train``), which
+is wired onto the ``repro.api`` façade: device profile -> Fisher probe ->
+budgeted policy -> sparse train steps with fault-tolerant checkpointing.
+Run at smoke scale on CPU; the full configs take the production mesh via
+--production-mesh on a pod.  Swap ``--mem-budget-mb``/``--compute-frac``
+for ``--device rpi-zero`` (etc.) to use a preset device profile.
 
     PYTHONPATH=src:. python examples/distributed_finetune.py
 """

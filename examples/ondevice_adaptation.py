@@ -1,32 +1,21 @@
 """On-device personalisation flow: one deployed model, many user tasks.
 
-Demonstrates the production adaptation engine: the jit cache compiles one
-sparse step per policy *structure* and reuses it across users; each user
-gets their own delta pack (the base weights are never touched), which can
-be folded into a serving copy per user.
+Demonstrates the production adaptation engine behind the façade: the
+session compiles one sparse step per policy *structure* and reuses it
+across users; each user gets their own delta pack (the base weights are
+never touched), which can be folded into a serving copy per user.
 
     PYTHONPATH=src:. python examples/ondevice_adaptation.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Budget, adapt_task, cnn_backbone, evaluate_task
-from repro.core.sparse import EpisodeStepCache, deltas_param_count
-from repro.data import DOMAINS, augment_support, sample_episode
-from repro.models.edge_cnn import _build_ir_net
-from repro.optim import adam
+from repro import api
 
-cfg = _build_ir_net("demo", [(1, 8, 1, 1, 3), (4, 16, 2, 2, 3),
-                             (4, 24, 2, 2, 3), (4, 32, 1, 1, 3)],
-                    1.0, 8, 0, 32)
-bb = cnn_backbone(cfg, batch_size=64)
-params = bb.init(jax.random.PRNGKey(0))
-opt = adam(1e-3)
-budget = Budget(mem_bytes=512e3, compute_frac=0.3, channel_ratio=0.5)
-cache = EpisodeStepCache(bb, opt, max_way=8)
+bb = api.backbone("tiny-cnn", in_res=32, batch_size=64)
+session = api.TinyTrainSession(bb, max_way=8, seed=0)
+profile = api.STM32F746.scaled(mem=1.6, name="demo-mcu")  # ~512 KB envelope
 
 users = [("user-a", "stripes"), ("user-b", "spots"), ("user-c", "waves"),
          ("user-d", "stripes")]
@@ -34,21 +23,17 @@ rng = np.random.default_rng(0)
 delta_store = {}
 
 for uid, domain in users:
-    ep = sample_episode(rng, domain, res=32, max_way=8,
-                        support_pad=64, query_pad=96)
-    sup = {k: jnp.asarray(v) for k, v in ep.support.items()}
-    qry = {k: jnp.asarray(v) for k, v in ep.query.items()}
-    pq = {k: jnp.asarray(v) for k, v in augment_support(rng, ep.support).items()}
+    task = api.sample_task(rng, domain, res=32, max_way=8,
+                           support_pad=64, query_pad=96)
     t0 = time.perf_counter()
-    res = adapt_task(bb, params, sup, pq, budget, opt, iters=20, max_way=8,
-                     step_cache=cache)
+    adaptation = session.adapt(task, profile, iters=20)
     dt = time.perf_counter() - t0
-    acc = evaluate_task(bb, params, res.deltas, res.policy, sup, qry, max_way=8)
-    delta_store[uid] = (res.deltas, res.policy)
+    # keep only the per-user delta pack + policy, not the episode tensors
+    delta_store[uid] = (adaptation.deltas, adaptation.policy)
     print(f"{uid} ({domain}): adapted in {dt:.1f}s "
-          f"(fisher {res.fisher_seconds:.1f}s), "
-          f"{deltas_param_count(res.deltas)/1e3:.1f}k delta params, "
-          f"query acc {acc*100:.1f}%")
+          f"(fisher {adaptation.fisher_seconds:.1f}s), "
+          f"{adaptation.delta_param_count()/1e3:.1f}k delta params, "
+          f"query acc {adaptation.accuracy()*100:.1f}%")
 
-print(f"\ncompiled step variants: {len(cache._steps)} "
+print(f"\ncompiled step variants: {session.compiled_steps()} "
       f"(vs {len(users)} users — structure reuse)")

@@ -1,52 +1,35 @@
-"""Quickstart: TinyTrain in ~40 lines.
+"""Quickstart: TinyTrain through the public façade in ~25 lines.
 
-Meta-train a tiny edge CNN on source domains, then adapt it to an unseen
-cross-domain task with the task-adaptive sparse update (Algorithm 1) and
-compare against no adaptation.
+Build a small edge CNN, describe the device with a profile, adapt to an
+unseen cross-domain task (Algorithm 1: Fisher probe -> multi-objective
+selection -> sparse fine-tune), and compare against no adaptation.
 
     PYTHONPATH=src:. python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Budget, adapt_task, cnn_backbone, evaluate_task
-from repro.core.sparse import sparse_memory_report
-from repro.data import augment_support, sample_episode
-from repro.models.edge_cnn import _build_ir_net
-from repro.optim import adam
+from repro import api
 
-# 1. a small backbone (use repro.models.edge_cnn.EDGE_CNNS for the paper's)
-cfg = _build_ir_net("demo", [(1, 8, 1, 1, 3), (4, 16, 2, 2, 3),
-                             (4, 24, 2, 2, 3), (4, 32, 1, 1, 3)],
-                    1.0, 8, 0, 32)
-bb = cnn_backbone(cfg, batch_size=64)
-params = bb.init(jax.random.PRNGKey(0))
+# 1. a backbone from the registry (see api.backbones() for the full zoo)
+bb = api.backbone("tiny-cnn", in_res=32, batch_size=64)
+session = api.TinyTrainSession(bb, max_way=8, seed=0)
 
-# 2. an unseen cross-domain few-shot task (support + query)
+# 2. an unseen cross-domain few-shot task (support + query + pseudo-query)
 rng = np.random.default_rng(0)
-ep = sample_episode(rng, "glyphs", res=32, max_way=8,
-                    support_pad=64, query_pad=96)
-support = {k: jnp.asarray(v) for k, v in ep.support.items()}
-query = {k: jnp.asarray(v) for k, v in ep.query.items()}
-pseudo = {k: jnp.asarray(v) for k, v in augment_support(rng, ep.support).items()}
+task = api.sample_task(rng, "glyphs", res=32, max_way=8,
+                       support_pad=64, query_pad=96)
 
-# 3. device budgets: ~0.5 MB backward memory, 30% of full backward compute
-budget = Budget(mem_bytes=512e3, compute_frac=0.30, channel_ratio=0.5)
+# 3. the device envelope: a preset profile (or api.DeviceProfile(...) ad hoc)
+profile = api.RPI_ZERO
 
-acc_before = evaluate_task(bb, params, None, None, support, query, max_way=8)
+# 4. adapt + evaluate + inspect
+acc_before = session.evaluate(task)
+adaptation = session.adapt(task, profile, iters=30)
+report = adaptation.memory_report()
 
-# 4. Algorithm 1: Fisher probe -> multi-objective selection -> sparse tune
-opt = adam(1e-3)
-result = adapt_task(bb, params, support, pseudo, budget, opt,
-                    iters=30, max_way=8)
-acc_after = evaluate_task(bb, params, result.deltas, result.policy,
-                          support, query, max_way=8)
-
-report = sparse_memory_report(bb, result.policy, result.deltas, opt)
-print(f"policy: {result.policy.describe()}")
-print(f"fisher probe: {result.fisher_seconds:.1f}s, "
-      f"fine-tune: {result.train_seconds:.1f}s")
+print(f"policy: {adaptation.policy.describe()}")
+print(f"fisher probe: {adaptation.fisher_seconds:.1f}s, "
+      f"fine-tune: {adaptation.train_seconds:.1f}s")
 print(f"backward memory: {report['total_bytes']/1e3:.0f} KB "
-      f"(budget {budget.mem_bytes/1e3:.0f} KB)")
-print(f"accuracy: {acc_before*100:.1f}% -> {acc_after*100:.1f}%")
+      f"(budget {profile.mem_kb:.0f} KB on {profile.name})")
+print(f"accuracy: {acc_before*100:.1f}% -> {adaptation.accuracy()*100:.1f}%")

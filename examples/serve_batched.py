@@ -1,46 +1,35 @@
 """Serve a TinyTrain-adapted model with continuous batching.
 
-Adapts a small LM to a synthetic task, folds the deltas into a serving
-parameter copy (zero serving overhead), and runs batched requests through
-the slot-multiplexed decode engine.
+Adapts a small LM to a synthetic task through the façade, folds the deltas
+into the serving engine (zero serving overhead), and runs batched requests
+through the slot-multiplexed decode engine.
 
     PYTHONPATH=src:. python examples/serve_batched.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Budget, adapt_task, lm_backbone
-from repro.data import augment_lm_support, lm_episode
-from repro.models import transformer as T
-from repro.models.api import ArchConfig
-from repro.optim import adam
-from repro.serving import Request, ServeEngine, fold_deltas
+from repro import api
 
-cfg = ArchConfig(name="serve-demo", family="dense", n_layers=4, d_model=64,
-                 vocab=256, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
-                 dtype="float32").validate()
-params = T.init_params(cfg, jax.random.PRNGKey(0))
-bb = lm_backbone(cfg, tokens_per_batch=48 * 64, batch_size=48)
+bb = api.backbone("qwen2-1.5b", preset="smoke", batch_size=48, seq=64)
+session = api.TinyTrainSession(bb, max_way=8, seed=0)
 
-# adapt to a synthetic token-distribution task
+# adapt to a synthetic token-distribution task under an edge profile
 rng = np.random.default_rng(0)
-ep = lm_episode(rng, cfg.vocab, 64, max_way=5, support_pad=48, query_pad=48)
-sup = {k: jnp.asarray(v) for k, v in ep.support.items()}
-pq = {k: jnp.asarray(v) for k, v in augment_lm_support(rng, ep.support).items()}
-res = adapt_task(bb, params, sup, pq,
-                 Budget(mem_bytes=4e6, compute_frac=0.5), adam(3e-3),
-                 iters=10, max_way=8)
-print("adapted:", res.policy.describe())
+task = api.sample_lm_task(rng, bb.cfg.vocab, seq=64, max_way=5,
+                          support_pad=48, query_pad=48)
+profile = api.DeviceProfile(name="edge-lm", mem_kb=4000, compute_frac=0.5)
+adaptation = session.adapt(task, profile, iters=10)
+print("adapted:", adaptation.policy.describe())
 
-# fold deltas -> serving copy; engine sees plain weights
-serving_params = fold_deltas(cfg, params, res.deltas, res.policy)
-eng = ServeEngine(cfg, serving_params, slots=4, max_len=96)
-reqs = [Request(uid=i,
-                prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 16))).astype(np.int32),
-                max_new=12)
+# fold deltas into the engine; it sees plain weights at base cost
+eng = api.ServeEngine(bb.cfg, session.params, slots=4, max_len=96)
+adaptation.fold_into(eng)
+reqs = [api.Request(uid=i,
+                    prompt=rng.integers(0, bb.cfg.vocab,
+                                        size=int(rng.integers(4, 16))).astype(np.int32),
+                    max_new=12)
         for i in range(10)]
 t0 = time.perf_counter()
 eng.run(reqs)

@@ -1,0 +1,204 @@
+"""Public TinyTrain façade: device profile → adapt → evaluate → deploy.
+
+One import surface for every workload::
+
+    import numpy as np
+    from repro import api
+
+    bb = api.backbone("tiny-cnn", in_res=32, batch_size=64)
+    sess = api.TinyTrainSession(bb, max_way=8)
+    task = api.sample_task(np.random.default_rng(0), "glyphs", res=32,
+                           max_way=8, support_pad=64, query_pad=96)
+    adaptation = sess.adapt(task, api.STM32F746)
+    print(adaptation.accuracy(), adaptation.memory_report())
+
+Backbones and criteria are string-keyed registries, so a new scenario is
+one ``register_backbone``/``register_criterion`` call, not a new script.
+The ``repro.core`` functions remain the stable low-level layer underneath.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from . import configs
+from .core.backbones import Backbone, cnn_backbone, lm_backbone
+from .core.criterion import Budget  # noqa: F401  (escape hatch, re-exported)
+from .core.fisher import fisher_probe
+from .core.policy import SparseUpdatePolicy
+from .core.selection import select_policy
+from .core.session import (  # noqa: F401  (façade re-exports)
+    Adaptation, DeviceProfile, JETSON_NANO, PROFILES, RPI_ZERO, STM32F746,
+    Task, TinyTrainSession, criteria, device_profile, register_criterion,
+    register_profile,
+)
+from .models import edge_cnn as _edge_cnn
+from .models.api import ArchConfig
+from .serving import Request, ServeEngine  # noqa: F401  (deploy surface)
+
+__all__ = [
+    # session layer
+    "Adaptation", "DeviceProfile", "Task", "TinyTrainSession",
+    "device_profile", "register_profile", "PROFILES",
+    "STM32F746", "RPI_ZERO", "JETSON_NANO",
+    # criteria
+    "criteria", "register_criterion",
+    # backbones
+    "Backbone", "backbone", "backbones", "register_backbone",
+    # tasks
+    "sample_task", "sample_lm_task",
+    # batch workloads
+    "plan_sparse_update",
+    # deploy
+    "Request", "ServeEngine",
+    # low-level escape hatch
+    "Budget",
+]
+
+
+# ---------------------------------------------------------------------------
+# Backbone registry
+# ---------------------------------------------------------------------------
+
+_BACKBONES: Dict[str, Callable[..., Backbone]] = {}
+
+
+def register_backbone(name: str, factory: Callable[..., Backbone]) -> None:
+    """Register ``factory(**kwargs) -> Backbone`` under a string key."""
+    _BACKBONES[name] = factory
+
+
+def backbone(name: str, **kwargs: Any) -> Backbone:
+    """Build a registered backbone adapter.
+
+    Edge CNNs (``tiny-cnn``, ``mcunet``, ``mobilenetv2``, ``proxylessnas``)
+    accept ``in_res`` and ``batch_size``.  LM archs (``qwen2-1.5b``, ...)
+    accept ``preset`` (smoke|100m|full), ``batch_size`` and ``seq``.  The
+    generic ``lm`` key accepts an explicit ``cfg=ArchConfig``.
+    """
+    try:
+        factory = _BACKBONES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backbone {name!r}; known: {backbones()}") from None
+    return factory(**kwargs)
+
+
+def backbones() -> List[str]:
+    return sorted(_BACKBONES)
+
+
+def _cnn_factory(builder: Callable[..., Any]) -> Callable[..., Backbone]:
+    def make(in_res: Optional[int] = None, batch_size: int = 64) -> Backbone:
+        cfg = builder() if in_res is None else builder(in_res=in_res)
+        return cnn_backbone(cfg, batch_size=batch_size)
+
+    return make
+
+
+def _lm_from_cfg(cfg: ArchConfig, batch_size: int = 8, seq: int = 128,
+                 tokens_per_batch: Optional[int] = None) -> Backbone:
+    return lm_backbone(
+        cfg, tokens_per_batch=tokens_per_batch or batch_size * seq,
+        batch_size=batch_size)
+
+
+def _lm_factory(arch: str) -> Callable[..., Backbone]:
+    def make(preset: str = "smoke", **kw: Any) -> Backbone:
+        return _lm_from_cfg(configs.preset_config(arch, preset), **kw)
+
+    return make
+
+
+for _name, _builder in _edge_cnn.EDGE_CNNS.items():
+    register_backbone(_name, _cnn_factory(_builder))
+register_backbone("tiny-cnn", _cnn_factory(_edge_cnn.tiny_cnn))
+for _arch in configs.lm_arch_ids():
+    register_backbone(_arch, _lm_factory(_arch))
+register_backbone("lm", _lm_from_cfg)
+
+
+# ---------------------------------------------------------------------------
+# Task sampling (synthetic CDFSL episodes; see repro.data)
+# ---------------------------------------------------------------------------
+
+
+def sample_task(
+    rng: np.random.Generator,
+    domain: str,
+    *,
+    res: int = 48,
+    max_way: int = 8,
+    support_pad: int = 64,
+    query_pad: int = 80,
+    **episode_kw: Any,
+) -> Task:
+    """Sample a cross-domain vision episode and package it as a Task."""
+    from .data import sample_episode
+
+    ep = sample_episode(rng, domain, res=res, max_way=max_way,
+                        support_pad=support_pad, query_pad=query_pad,
+                        **episode_kw)
+    return Task.from_episode(ep, rng, max_way, name=domain)
+
+
+def sample_lm_task(
+    rng: np.random.Generator,
+    vocab: int,
+    seq: int = 64,
+    *,
+    max_way: int = 5,
+    support_pad: int = 48,
+    query_pad: int = 48,
+) -> Task:
+    """Sample a synthetic token-distribution episode for LM backbones."""
+    from .data import lm_episode
+
+    ep = lm_episode(rng, vocab, seq, max_way=max_way,
+                    support_pad=support_pad, query_pad=query_pad)
+    return Task.from_episode(ep, rng, max_way, name="lm-task")
+
+
+# ---------------------------------------------------------------------------
+# Batch (non-episodic) workloads: probe + budgeted selection in one call
+# ---------------------------------------------------------------------------
+
+
+def plan_sparse_update(
+    bb: Backbone,
+    params: Any,
+    batch: Dict[str, Any],
+    profile: Union[DeviceProfile, Budget, str],
+    *,
+    n_samples: int,
+    criterion: str = "tinytrain",
+    shard_channels: int = 1,
+) -> Tuple[SparseUpdatePolicy, float]:
+    """Fisher probe on one batch → budgeted policy (Algorithm 1 lines 1-4).
+
+    The token-stream path used by ``repro.launch.train``: the backbone's own
+    ``loss`` drives the probe instead of an episodic ProtoNet loss.  Returns
+    (policy, fisher_seconds).
+    """
+    from .core.session import _as_budget, _resolve_criterion
+
+    if bb.loss is None:
+        raise ValueError(
+            f"backbone {bb.kind!r} has no batch loss; use "
+            "TinyTrainSession.adapt for episodic backbones")
+    mode, channel_mode = _resolve_criterion(criterion)
+    if channel_mode != "dynamic":
+        raise ValueError(
+            f"criterion {criterion!r} uses a static channel mode "
+            f"({channel_mode}); batch planning supports dynamic-channel "
+            "criteria only")
+    potentials, chans, dt = fisher_probe(
+        bb, params,
+        lambda p, b, taps=None: bb.loss(p, b, taps=taps),
+        batch, n_samples=n_samples,
+    )
+    policy = select_policy(
+        bb.unit_costs, potentials, chans, _as_budget(profile),
+        criterion=mode, shard_channels=shard_channels)
+    return policy, dt

@@ -7,6 +7,7 @@ TPU dry-run).
 """
 from __future__ import annotations
 
+import dataclasses
 import importlib
 from typing import Dict, List
 
@@ -45,3 +46,20 @@ def get_reduced(arch: str) -> ArchConfig:
 def get_cnn(arch: str):
     from ..models import edge_cnn
     return edge_cnn.EDGE_CNNS[arch]()
+
+
+def preset_config(arch: str, preset: str = "smoke") -> ArchConfig:
+    """Resolve an LM arch at one of three scales: smoke | 100m | full."""
+    if preset == "full":
+        return get_config(arch)
+    cfg = get_reduced(arch)
+    if preset == "100m":
+        # ~100M-param variant of the same family
+        cfg = dataclasses.replace(
+            cfg, name=cfg.name.replace("smoke", "100m"),
+            n_layers=max(8, cfg.n_layers), d_model=768, d_ff=2048,
+            n_heads=12 if cfg.n_heads else 0,
+            n_kv_heads=min(12, max(cfg.n_kv_heads, 1)) if cfg.n_heads else 0,
+            head_dim=64 if cfg.n_heads else 0, vocab=32000,
+        )
+    return cfg

@@ -6,4 +6,8 @@ from .fisher import fisher_probe, fisher_from_activations  # noqa: F401
 from .sparse import make_sparse_train_step, make_episode_sparse_step, sparse_memory_report  # noqa: F401
 from .backbones import Backbone, lm_backbone, cnn_backbone  # noqa: F401
 from .adapt import adapt_task, evaluate_task, AdaptResult  # noqa: F401
+from .session import (  # noqa: F401
+    Adaptation, DeviceProfile, Task, TinyTrainSession, device_profile,
+    register_criterion, register_profile,
+)
 from . import protonet, baselines  # noqa: F401

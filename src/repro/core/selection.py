@@ -26,15 +26,34 @@ from .criterion import (
 from .policy import SelectedUnit, SparseUpdatePolicy
 
 
+def round_to_shard(k: int, shard_channels: int, n: int) -> int:
+    """Round k to the nearest positive multiple of ``shard_channels`` <= n.
+
+    Keeps shard-local top-K well-defined (equal picks per shard) instead of
+    silently falling back to a global top-K whenever k is not already a
+    multiple — the fallback would break the even-TP-sharding guarantee the
+    shard-local path exists to provide.
+    """
+    k = int(round(k / shard_channels)) * shard_channels
+    return int(min(max(k, shard_channels), n))
+
+
 def topk_channels(
     delta_o: np.ndarray, k: int, shard_channels: int = 1
 ) -> np.ndarray:
-    """Top-k channel indices by Fisher information, optionally shard-local."""
+    """Top-k channel indices by Fisher information, optionally shard-local.
+
+    With ``shard_channels > 1`` and a shardable channel count, k is rounded
+    to the nearest shard multiple (see :func:`round_to_shard`) so every
+    shard contributes exactly k/shard_channels picks.
+    """
     n = delta_o.shape[0]
     k = min(k, n)
-    if shard_channels <= 1 or n % shard_channels or k % shard_channels:
+    if shard_channels <= 1 or n % shard_channels:
         idx = np.argsort(-delta_o)[:k]
         return np.sort(idx).astype(np.int32)
+    if k % shard_channels:
+        k = round_to_shard(k, shard_channels, n)
     per = n // shard_channels
     kper = k // shard_channels
     out = []
@@ -62,24 +81,34 @@ def select_policy(
 
     chosen: List[Tuple[UnitCost, int]] = []
     selection: Dict[Tuple[int, str], int] = {}
+    shard_adjustments: Dict[str, Tuple[int, int]] = {}
     for j in order:
         c = costs[int(j)]
-        k = max(1, int(round(c.n_channels * budget.channel_ratio)))
+        k_raw = max(1, int(round(c.n_channels * budget.channel_ratio)))
+        k_options = [k_raw]
         if shard_channels > 1 and c.n_channels % shard_channels == 0:
-            # keep K a multiple of the shard count for even TP sharding
-            kper = max(1, k // shard_channels)
-            k = kper * shard_channels
-        cand = chosen + [(c, k)]
-        cand_sel = dict(selection)
-        cand_sel[(c.layer, c.kind)] = k
-        horizon = min(u.layer for u, _ in cand)
-        horizon = max(horizon, min_horizon)
-        mem = policy_memory_bytes(cand, budget)
-        macs = policy_backward_macs(costs, cand_sel, horizon)
-        if mem > budget.mem_bytes or macs > budget.compute_frac * full_bwd:
-            continue  # paper: progressively add while budgets hold
-        chosen = cand
-        selection = cand_sel
+            # keep K a multiple of the shard count for even TP sharding;
+            # fall back to the floored multiple when the nearest one no
+            # longer fits the budgets (never lose a unit to rounding up)
+            k_near = round_to_shard(k_raw, shard_channels, c.n_channels)
+            k_floor = max(shard_channels,
+                          (k_raw // shard_channels) * shard_channels)
+            k_options = [k_near] if k_near <= k_floor else [k_near, k_floor]
+        for k in k_options:
+            cand = chosen + [(c, k)]
+            cand_sel = dict(selection)
+            cand_sel[(c.layer, c.kind)] = k
+            horizon = min(u.layer for u, _ in cand)
+            horizon = max(horizon, min_horizon)
+            mem = policy_memory_bytes(cand, budget)
+            macs = policy_backward_macs(costs, cand_sel, horizon)
+            if mem > budget.mem_bytes or macs > budget.compute_frac * full_bwd:
+                continue  # paper: progressively add while budgets hold
+            if k != k_raw:
+                shard_adjustments[f"L{c.layer}.{c.kind}"] = (k_raw, k)
+            chosen = cand
+            selection = cand_sel
+            break
 
     units = []
     for c, k in chosen:
@@ -97,6 +126,13 @@ def select_policy(
         "budget": {"mem_bytes": budget.mem_bytes, "compute_frac": budget.compute_frac,
                    "channel_ratio": budget.channel_ratio},
     }
+    if shard_channels > 1:
+        meta["shard_channels"] = shard_channels
+        # (requested, used) K per accepted unit whose top-K was rounded to
+        # a shard multiple — provenance for the even-TP-sharding adjustment
+        meta["shard_k_adjustments"] = {
+            key: list(v) for key, v in shard_adjustments.items()
+        }
     return SparseUpdatePolicy(horizon=horizon, units=tuple(units), meta=meta)
 
 

@@ -1,0 +1,584 @@
+"""Session layer: the stateful objects behind the ``repro.api`` façade.
+
+TinyTrain's contribution is a *pipeline* — Fisher probe → multi-objective
+selection → sparse fine-tune → deploy (Algorithm 1) — but the low-level
+``core/*`` functions leave every workload to hand-wire that chain.  This
+module packages the pipeline behind three objects:
+
+- :class:`DeviceProfile` — a named resource envelope (memory / compute /
+  energy) that replaces raw :class:`~repro.core.criterion.Budget`
+  construction, with presets for common edge targets.
+- :class:`TinyTrainSession` — owns one backbone + frozen meta-trained
+  params + the jit step cache, and amortises compiled steps across every
+  ``adapt()`` / ``baseline()`` / ``evaluate()`` call.
+- :class:`Adaptation` — the result object: accuracy, memory accounting and
+  deployment (``fold_into``) without reaching into core internals.
+
+``core/*`` stays the stable low-level layer; nothing here adds new math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import Optimizer, adam
+from .adapt import AdaptResult, adapt_task
+from .backbones import Backbone
+from .criterion import Budget
+from .policy import SparseUpdatePolicy, last_layer_policy
+from .selection import static_channel_policy
+from .sparse import (
+    EpisodeStepCache, deltas_param_count, sparse_memory_report,
+)
+
+__all__ = [
+    "Adaptation", "DeviceProfile", "PROFILES", "Task", "TinyTrainSession",
+    "criteria", "device_profile", "register_criterion", "register_profile",
+    "JETSON_NANO", "RPI_ZERO", "STM32F746",
+]
+
+
+# ---------------------------------------------------------------------------
+# Device profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Resource envelope of a deployment target.
+
+    The online stage consumes ``mem_kb`` (backward-pass memory: B1 updated
+    weights + B2 optimizer state + B4 saved inputs) and ``compute_frac``
+    (backward MACs as a fraction of a full backward pass).  ``flash_mb`` and
+    ``peak_mw`` are informational (model storage / energy envelope) and feed
+    reporting, not selection.
+    """
+
+    name: str
+    mem_kb: float
+    compute_frac: float
+    channel_ratio: float = 0.5
+    opt_slots: int = 2  # adam: m, v
+    param_bytes: int = 4
+    flash_mb: float = 0.0
+    peak_mw: float = 0.0
+
+    def budget(self) -> Budget:
+        """Lower this profile to the Algorithm-1 budget inputs."""
+        return Budget(
+            mem_bytes=self.mem_kb * 1e3,
+            compute_frac=self.compute_frac,
+            channel_ratio=self.channel_ratio,
+            opt_slots=self.opt_slots,
+            param_bytes=self.param_bytes,
+        )
+
+    def scaled(self, mem: float = 1.0, compute: float = 1.0,
+               name: Optional[str] = None) -> "DeviceProfile":
+        """A derived profile with scaled envelopes (ablation sweeps)."""
+        return dataclasses.replace(
+            self,
+            name=name or f"{self.name}*{mem:g}/{compute:g}",
+            mem_kb=self.mem_kb * mem,
+            compute_frac=min(1.0, self.compute_frac * compute),
+        )
+
+
+# Presets: paper-scale edge targets (Sec. 3.1 uses Pi Zero 2 / Jetson Nano;
+# STM32-class MCUs are the MCUNet deployment point the cost model mirrors).
+STM32F746 = DeviceProfile(
+    name="stm32f746", mem_kb=320, compute_frac=0.25, channel_ratio=0.5,
+    flash_mb=1.0, peak_mw=400.0)
+RPI_ZERO = DeviceProfile(
+    name="rpi-zero", mem_kb=1000, compute_frac=0.5, channel_ratio=0.75,
+    flash_mb=512.0, peak_mw=1200.0)  # the paper's "around 1 MB" envelope
+JETSON_NANO = DeviceProfile(
+    name="jetson-nano", mem_kb=4096, compute_frac=0.8, channel_ratio=1.0,
+    flash_mb=4096.0, peak_mw=10_000.0)
+
+PROFILES: Dict[str, DeviceProfile] = {}
+
+
+def register_profile(profile: DeviceProfile) -> DeviceProfile:
+    # normalise the key exactly as device_profile() normalises lookups
+    PROFILES[profile.name.lower().replace("_", "-")] = profile
+    return profile
+
+
+for _p in (STM32F746, RPI_ZERO, JETSON_NANO):
+    register_profile(_p)
+
+
+def device_profile(name: str) -> DeviceProfile:
+    """Look up a registered profile (case/underscore tolerant)."""
+    key = name.lower().replace("_", "-")
+    try:
+        return PROFILES[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown device profile {name!r}; known: {sorted(PROFILES)}"
+        ) from None
+
+
+def _as_budget(profile: Union[DeviceProfile, Budget, str]) -> Budget:
+    if isinstance(profile, str):
+        profile = device_profile(profile)
+    if isinstance(profile, DeviceProfile):
+        return profile.budget()
+    if isinstance(profile, Budget):
+        return profile
+    raise TypeError(
+        f"expected DeviceProfile, Budget or profile name, got {type(profile)}")
+
+
+# ---------------------------------------------------------------------------
+# Criteria registry: selection criterion + channel mode behind one string
+# ---------------------------------------------------------------------------
+
+# name -> (multi-objective score mode for layer selection, channel mode)
+_CRITERIA: Dict[str, Tuple[str, str]] = {
+    "tinytrain": ("tinytrain", "dynamic"),
+    "fisher_only": ("fisher_only", "dynamic"),
+    "fisher_mem": ("fisher_mem", "dynamic"),
+    "fisher_compute": ("fisher_compute", "dynamic"),
+    # Fig. 4 ablations: TinyTrain layer selection, static channel choice
+    "random": ("tinytrain", "random"),
+    "l2norm": ("tinytrain", "l2norm"),
+}
+
+
+def register_criterion(name: str, score_mode: str,
+                       channel_mode: str = "dynamic") -> None:
+    """Register a selection criterion usable as ``adapt(criterion=name)``."""
+    _CRITERIA[name] = (score_mode, channel_mode)
+
+
+def criteria() -> List[str]:
+    return sorted(_CRITERIA)
+
+
+def _resolve_criterion(name: str) -> Tuple[str, str]:
+    try:
+        return _CRITERIA[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown criterion {name!r}; known: {criteria()}") from None
+
+
+# ---------------------------------------------------------------------------
+# Task
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Task:
+    """One target task: support/query episode plus the augmented
+    pseudo-query set used for backprop (Hu et al. 2022, Appendix C)."""
+
+    name: str
+    support: Dict[str, jax.Array]
+    query: Dict[str, jax.Array]
+    pseudo_query: Dict[str, jax.Array]
+    max_way: int
+
+    @property
+    def n_support(self) -> int:
+        return int(np.sum(np.asarray(self.support["episode_labels"]) >= 0))
+
+    @classmethod
+    def from_episode(cls, ep, rng: np.random.Generator, max_way: int,
+                     name: str = "") -> "Task":
+        """Build a Task from a ``repro.data`` Episode (vision or LM)."""
+        from ..data import augment_lm_support, augment_support
+
+        augment = augment_support if "images" in ep.support else augment_lm_support
+        return cls(
+            name=name or getattr(ep, "domain", "task"),
+            support={k: jnp.asarray(v) for k, v in ep.support.items()},
+            query={k: jnp.asarray(v) for k, v in ep.query.items()},
+            pseudo_query={
+                k: jnp.asarray(v) for k, v in augment(rng, ep.support).items()
+            },
+            max_way=max_way,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Adaptation result
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Adaptation:
+    """Outcome of one adapt()/baseline() call.
+
+    ``deltas`` is the method's trainable pack (channel deltas, TinyTL
+    adapters, or a full fine-tuned parameter copy depending on ``method``);
+    ``policy`` is set for sparse-update methods only.
+    """
+
+    method: str
+    task: Task
+    profile: Optional[DeviceProfile]
+    budget: Optional[Budget]
+    deltas: Any
+    policy: Optional[SparseUpdatePolicy]
+    fisher_seconds: float
+    train_seconds: float
+    losses: List[float]
+    _session: "TinyTrainSession" = dataclasses.field(repr=False)
+    _eval: Callable[[Any, Any], float] = dataclasses.field(repr=False)
+
+    def accuracy(self, task: Optional[Task] = None) -> float:
+        """Query-set accuracy on this task (or another Task's episode)."""
+        t = task or self.task
+        return float(self._eval(t.support, t.query))
+
+    def delta_param_count(self) -> int:
+        return deltas_param_count(self.deltas) if self.deltas is not None else 0
+
+    def memory_report(self) -> Dict[str, float]:
+        """Backward-pass memory accounting (paper Table-2/7 format).
+
+        Uses the profile's ``param_bytes`` so the report is commensurate
+        with the budget the policy was selected under.
+        """
+        if self.policy is None:
+            raise ValueError(
+                f"method {self.method!r} has no sparse-update policy; "
+                "memory_report() applies to policy-based adaptations")
+        pb = (self.profile.param_bytes if self.profile is not None
+              else self.budget.param_bytes if self.budget is not None
+              else 4)
+        return sparse_memory_report(
+            self._session.backbone, self.policy, self.deltas,
+            self._session.optimizer, param_bytes=pb)
+
+    def fold_into(self, target: Any) -> Any:
+        """Fold channel deltas into serving weights: W ⊕ scatter(ΔW, idx).
+
+        ``target`` is either a :class:`~repro.serving.engine.ServeEngine`
+        (its params are replaced in place and the engine returned) or a raw
+        parameter pytree (a folded copy is returned).  Adapted models then
+        serve at exactly base cost.
+        """
+        if self.policy is None or self.deltas is None:
+            raise ValueError(
+                f"method {self.method!r} produced no delta pack to fold")
+        bb = self._session.backbone
+        if hasattr(target, "params") and hasattr(target, "cfg"):
+            from ..serving.engine import fold_deltas
+
+            target.params = fold_deltas(
+                target.cfg, target.params, self.deltas, self.policy)
+            return target
+        if bb.kind == "lm":
+            from ..serving.engine import fold_deltas
+
+            return fold_deltas(bb.cfg, target, self.deltas, self.policy)
+        from ..models.edge_cnn import cnn_fold_deltas
+
+        return cnn_fold_deltas(bb.cfg, target, self.deltas, self.policy)
+
+    def describe(self) -> str:
+        pol = self.policy.describe() if self.policy is not None else "none"
+        return (f"{self.method}: policy={pol} "
+                f"fisher={self.fisher_seconds:.2f}s "
+                f"train={self.train_seconds:.2f}s "
+                f"delta_params={self.delta_param_count()}")
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+
+class TinyTrainSession:
+    """One backbone + frozen params + jit cache, many tasks.
+
+    The session compiles a sparse step once per policy *structure* and
+    reuses it across every subsequent ``adapt()`` — the production
+    adaptation-engine behaviour (one deployed model, many user tasks).
+    """
+
+    def __init__(
+        self,
+        backbone: Backbone,
+        params: Any = None,
+        *,
+        optimizer: Optional[Optimizer] = None,
+        lr: float = 3e-3,
+        baseline_lr: float = 1e-3,
+        max_way: int = 16,
+        seed: int = 0,
+    ):
+        self.backbone = backbone
+        self.params = (params if params is not None
+                       else backbone.init(jax.random.PRNGKey(seed)))
+        # delta packs start at zero -> slightly hotter lr than full tuning
+        self.optimizer = optimizer or adam(lr)
+        self.baseline_optimizer = adam(baseline_lr)
+        self.max_way = max_way
+        self.step_cache = EpisodeStepCache(backbone, self.optimizer, max_way)
+        self._static_policies: Dict[str, SparseUpdatePolicy] = {}
+        # ES baseline cache: one (proxy_task, policy) per budget/proxy/seed
+        # combo; holding the task pins its id() for the key's lifetime.
+        # Grows with distinct proxies — callers reuse one proxy per run.
+        self._es_cache: Dict[Any, Tuple[Task, SparseUpdatePolicy]] = {}
+        self._full_step = None
+        self._tinytl_steps: Dict[int, Any] = {}
+
+    # -- telemetry ---------------------------------------------------------
+
+    def compiled_steps(self) -> int:
+        """Number of distinct jitted sparse-step variants compiled so far."""
+        return len(self.step_cache._steps)
+
+    # -- core pipeline -----------------------------------------------------
+
+    def adapt(
+        self,
+        task: Task,
+        profile: Union[DeviceProfile, Budget, str],
+        *,
+        criterion: str = "tinytrain",
+        iters: int = 40,
+        shard_channels: int = 1,
+        policy_override: Optional[SparseUpdatePolicy] = None,
+        seed: int = 0,
+    ) -> Adaptation:
+        """Algorithm 1 on one task: probe → select → sparse fine-tune."""
+        self._check_task(task)
+        if isinstance(profile, str):
+            profile = device_profile(profile)
+        budget = _as_budget(profile)
+        prof = profile if isinstance(profile, DeviceProfile) else None
+        kw = dict(iters=iters, max_way=self.max_way,
+                  step_cache=self.step_cache)
+
+        if policy_override is not None:
+            res = adapt_task(self.backbone, self.params, task.support,
+                             task.pseudo_query, budget, self.optimizer,
+                             policy_override=policy_override, **kw)
+            method = f"override:{(policy_override.meta or {}).get('source', 'policy')}"
+        else:
+            mode, channel_mode = _resolve_criterion(criterion)
+            if channel_mode == "dynamic":
+                res = adapt_task(self.backbone, self.params, task.support,
+                                 task.pseudo_query, budget, self.optimizer,
+                                 criterion=mode,
+                                 shard_channels=shard_channels, **kw)
+            else:
+                # probe + layer selection only, then a static channel pick
+                # at the same layers/K (Fig. 4 ablations) — no wasted
+                # fine-tune pass on the dynamic channels
+                probe = adapt_task(
+                    self.backbone, self.params, task.support,
+                    task.pseudo_query, budget, self.optimizer,
+                    criterion=mode, shard_channels=shard_channels,
+                    iters=0, max_way=self.max_way,
+                    step_cache=self.step_cache)
+                l2 = (self.backbone.weight_l2(self.params)
+                      if channel_mode == "l2norm" else None)
+                pol = static_channel_policy(
+                    probe.policy, self.backbone.unit_costs, channel_mode,
+                    rng=np.random.default_rng(seed), weight_l2=l2)
+                res = adapt_task(self.backbone, self.params, task.support,
+                                 task.pseudo_query, budget, self.optimizer,
+                                 policy_override=pol, **kw)
+                res = dataclasses.replace(
+                    res, fisher_seconds=probe.fisher_seconds)
+            method = criterion
+        return self._wrap(method, task, prof, res, budget=budget)
+
+    def evaluate(self, task: Task, adaptation: Optional[Adaptation] = None
+                 ) -> float:
+        """Query accuracy: zero-shot when ``adaptation`` is None."""
+        self._check_task(task)
+        if adaptation is not None:
+            return adaptation.accuracy(task)
+        ev = self.step_cache.evaluate(None)
+        return float(ev(self.params, None, task.support, task.query, None))
+
+    # -- baselines (paper Sec. 3.1 zoo) ------------------------------------
+
+    def baseline(
+        self,
+        name: str,
+        task: Task,
+        profile: Union[DeviceProfile, Budget, str],
+        *,
+        iters: int = 40,
+        proxy_task: Optional[Task] = None,
+        seed: int = 0,
+    ) -> Adaptation:
+        """Run one on-device-training baseline on a task.
+
+        ``name``: none | fulltrain | lastlayer | sparseupdate | tinytl |
+        adapterdrop<pct> | any registered criterion (tinytrain, random, ...).
+        """
+        self._check_task(task)
+        if isinstance(profile, str):
+            profile = device_profile(profile)
+        if name in _CRITERIA:
+            return self.adapt(task, profile, criterion=name, iters=iters,
+                              seed=seed)
+        if name == "none":
+            return self._wrap(
+                "none", task,
+                profile if isinstance(profile, DeviceProfile) else None,
+                AdaptResult(None, None, 0.0, 0.0, []),
+                budget=_as_budget(profile))
+        if name == "lastlayer":
+            pol = self._static_policies.setdefault(
+                "lastlayer",
+                last_layer_policy(self.backbone.unit_costs,
+                                  len(self.backbone.unit_costs)))
+            return dataclasses.replace(
+                self.adapt(task, profile, policy_override=pol, iters=iters),
+                method="lastlayer")
+        if name == "sparseupdate":
+            pol = self._sparseupdate_policy(_as_budget(profile), proxy_task,
+                                            seed)
+            return dataclasses.replace(
+                self.adapt(task, profile, policy_override=pol, iters=iters),
+                method="sparseupdate")
+        if name == "fulltrain":
+            return self._fulltrain(task, iters)
+        if name.startswith("tinytl") or name.startswith("adapterdrop"):
+            return self._tinytl(name, task, iters, seed)
+        raise KeyError(
+            f"unknown baseline {name!r}; known: none, fulltrain, lastlayer, "
+            f"sparseupdate, tinytl, adapterdrop<pct>, {criteria()}")
+
+    # -- internals ---------------------------------------------------------
+
+    def _check_task(self, task: Task) -> None:
+        if task.max_way > self.max_way:
+            raise ValueError(
+                f"task {task.name!r} has way {task.max_way} > session "
+                f"max_way {self.max_way}")
+
+    def _wrap(self, method: str, task: Task, profile, res: AdaptResult,
+              budget: Optional[Budget] = None) -> Adaptation:
+        ev = self.step_cache.evaluate(res.policy)
+        if res.policy is not None:
+            ci = self.step_cache.chan_idx_arrays(res.policy)
+        else:
+            ci = None
+
+        def _eval(sup, qry, _ev=ev, _ci=ci, _d=res.deltas):
+            return float(_ev(self.params, _d, sup, qry, _ci))
+
+        return Adaptation(
+            method=method, task=task, profile=profile, budget=budget,
+            deltas=res.deltas, policy=res.policy,
+            fisher_seconds=res.fisher_seconds,
+            train_seconds=res.train_seconds, losses=list(res.losses or []),
+            _session=self, _eval=_eval)
+
+    def _sparseupdate_policy(self, budget: Budget,
+                             proxy_task: Optional[Task], seed: int
+                             ) -> SparseUpdatePolicy:
+        """Offline ES policy (Lin et al. 2022) from a *proxy* task."""
+        if proxy_task is None:
+            raise ValueError(
+                "baseline('sparseupdate') needs proxy_task= — the offline "
+                "evolutionary search runs on proxy data, never the target")
+        key = (budget.mem_bytes, budget.compute_frac,
+               budget.channel_ratio, budget.opt_slots, budget.param_bytes,
+               id(proxy_task), seed)
+        if key not in self._es_cache:
+            from .baselines import evolutionary_search_policy
+            from .fisher import fisher_probe
+            from .protonet import episode_loss
+
+            def probe_loss(p, b, taps=None):
+                return episode_loss(
+                    self.backbone.features, p, proxy_task.support,
+                    proxy_task.pseudo_query, self.max_way, taps=taps)
+
+            potentials, _, _ = fisher_probe(
+                self.backbone, self.params, probe_loss, proxy_task.support,
+                proxy_task.n_support)
+            self._es_cache[key] = (proxy_task, evolutionary_search_policy(
+                self.backbone.unit_costs, potentials, budget, iters=400,
+                seed=seed))
+        return self._es_cache[key][1]
+
+    def _fulltrain(self, task: Task, iters: int) -> Adaptation:
+        from .baselines import make_full_episode_step
+
+        if self._full_step is None:
+            self._full_step = make_full_episode_step(
+                self.backbone.features, self.baseline_optimizer, self.max_way)
+        # the step donates its params argument: train a private copy
+        p = jax.tree_util.tree_map(jnp.copy, self.params)
+        st = self.baseline_optimizer.init(p)
+        t0 = time.perf_counter()
+        losses = []
+        for _ in range(iters):
+            p, st, loss = self._full_step(p, st, task.support,
+                                          task.pseudo_query)
+            losses.append(float(loss))
+        dt = time.perf_counter() - t0
+
+        def _eval(sup, qry, _p=p):
+            from .protonet import episode_accuracy
+
+            return float(episode_accuracy(
+                self.backbone.features, _p, sup, qry, self.max_way))
+
+        return Adaptation(
+            method="fulltrain", task=task, profile=None, budget=None,
+            deltas=p, policy=None, fisher_seconds=0.0, train_seconds=dt,
+            losses=losses, _session=self, _eval=_eval)
+
+    def _tinytl(self, name: str, task: Task, iters: int, seed: int
+                ) -> Adaptation:
+        from .baselines import (
+            make_tinytl_episode_step, tinytl_adapter_init, tinytl_features,
+        )
+
+        if self.backbone.kind != "cnn":
+            raise ValueError("tinytl/adapterdrop baselines are CNN-only")
+        dropped = 0
+        if name.startswith("adapterdrop"):
+            frac = int(name.replace("adapterdrop", "") or "50") / 100
+            n_blocks = max(s.block for s in self.backbone.cfg.layers) + 1
+            dropped = int(n_blocks * frac)
+        if dropped not in self._tinytl_steps:
+            self._tinytl_steps[dropped] = make_tinytl_episode_step(
+                self.backbone.cfg, self.baseline_optimizer, self.max_way,
+                dropped)
+        step = self._tinytl_steps[dropped]
+        adapters = tinytl_adapter_init(self.backbone.cfg,
+                                       jax.random.PRNGKey(seed))
+        st = self.baseline_optimizer.init(adapters)
+        t0 = time.perf_counter()
+        losses = []
+        for _ in range(iters):
+            adapters, st, loss = step(self.params, adapters, st,
+                                      task.support, task.pseudo_query)
+            losses.append(float(loss))
+        dt = time.perf_counter() - t0
+
+        cfg, params, mw = self.backbone.cfg, self.params, self.max_way
+
+        def _eval(sup, qry, _a=adapters):
+            from .protonet import episode_accuracy
+
+            return float(episode_accuracy(
+                lambda a, b: tinytl_features(cfg, params, a, b["images"],
+                                             dropped_blocks=dropped),
+                _a, sup, qry, mw))
+
+        return Adaptation(
+            method=name, task=task, profile=None, budget=None,
+            deltas=adapters, policy=None, fisher_seconds=0.0,
+            train_seconds=dt, losses=losses, _session=self, _eval=_eval)

@@ -1,0 +1,7 @@
+"""Distribution helpers: process-wide sharding context plus the
+sharding-rule planner.  The context is consulted by model code (MoE
+dispatch layout, sequence-parallel attention) so the same forward functions
+serve single-host CPU runs and sharded meshes; :class:`ShardingRules` plans
+TP/DP placement for params, deltas, batches and caches."""
+from . import context  # noqa: F401
+from .sharding import ShardingRules  # noqa: F401

@@ -1,0 +1,60 @@
+"""Process-wide sharding context.
+
+Model code cannot thread mesh/layout decisions through every call signature
+without contaminating jit signatures, so launchers publish them here and
+layer code reads them at trace time:
+
+    with context.sharding_context(moe_row_dispatch=True, seq_parallel=True):
+        jax.jit(step)(...)
+
+Keys in use:
+  - ``seq_parallel``: bool — attention chunking must not slice the sharded
+    sequence dim.
+  - ``moe_row_dispatch``: bool — per-batch-row MoE queues (shard-local).
+  - ``moe_dispatch_spec``: PartitionSpec | None — placement hint for MoE
+    dispatch buffers (applied via :func:`constrain`).
+
+Everything defaults to falsy/None, so single-host code paths never need to
+touch this module.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Iterator, Optional
+
+_STATE: Dict[str, Any] = {}
+
+
+def get(key: str, default: Any = None) -> Any:
+    return _STATE.get(key, default)
+
+
+def set(key: str, value: Any) -> None:  # noqa: A001 - mirrors dict API
+    _STATE[key] = value
+
+
+@contextlib.contextmanager
+def sharding_context(**kwargs: Any) -> Iterator[None]:
+    """Set context keys for the duration of a ``with`` block (re-entrant)."""
+    saved = {k: _STATE.get(k, _MISSING) for k in kwargs}
+    _STATE.update(kwargs)
+    try:
+        yield
+    finally:
+        for k, v in saved.items():
+            if v is _MISSING:
+                _STATE.pop(k, None)
+            else:
+                _STATE[k] = v
+
+
+_MISSING = object()
+
+
+def constrain(x: Any, spec: Optional[Any]) -> Any:
+    """Apply a sharding constraint when a spec is present, else pass through."""
+    if spec is None:
+        return x
+    import jax
+
+    return jax.lax.with_sharding_constraint(x, spec)

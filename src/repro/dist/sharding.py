@@ -1,0 +1,215 @@
+"""Sharding rules: TP/DP placement planner for every registered arch.
+
+One object answers "where does this tensor live" for params, deltas,
+optimizer state, batches and KV caches, with divisibility guards so any
+arch runs on any mesh (a dimension that does not divide the axis size is
+simply replicated):
+
+- attention q/o projections shard over heads (TP) when heads divide;
+- MLP / SSM inner dims shard over 'model' when they divide;
+- MoE experts shard over 'model' (EP), over ('model', 'data') for full-EP
+  archs whose expert count covers the whole mesh (e.g. deepseek), else the
+  per-expert FFN dim shards (expert-TP);
+- vocab/embedding shards only when the vocab divides;
+- ``seq_parallel=True`` replicates block weights and shards the *sequence*
+  dim of the batch over 'model' instead (long-context cells).
+
+Specs are plain tuples (None | axis-name | tuple-of-axes per dim), lowered
+to ``NamedSharding`` only at placement time, so the rules are testable
+against a mesh-shaped fake without devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..models.api import ArchConfig
+from ..utils import named_tree_map
+
+Spec = Tuple[Any, ...]
+
+
+class ShardingRules:
+    def __init__(self, cfg: ArchConfig, mesh: Any, *,
+                 seq_parallel: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.seq_parallel = seq_parallel
+        shape = dict(mesh.shape)
+        self.tp = int(shape.get("model", 1))
+        self.dp = tuple(a for a in mesh.axis_names if a != "model")
+        self.dp_size = int(np.prod([shape[a] for a in self.dp])) if self.dp else 1
+
+    # -- divisibility guards ----------------------------------------------
+
+    @property
+    def shard_q_heads(self) -> bool:
+        return self.cfg.n_heads > 0 and self.cfg.n_heads % self.tp == 0
+
+    @property
+    def shard_ffn(self) -> bool:
+        return self.cfg.d_ff > 0 and self.cfg.d_ff % self.tp == 0
+
+    @property
+    def shard_vocab(self) -> bool:
+        return self.cfg.vocab % self.tp == 0
+
+    @property
+    def shard_ssm(self) -> bool:
+        return (self.cfg.ssm_state > 0 and self.cfg.ssm_head_dim > 0
+                and self.cfg.n_ssm_heads % self.tp == 0)
+
+    @property
+    def shard_experts(self) -> bool:
+        return self.cfg.n_experts > 0 and self.cfg.n_experts % self.tp == 0
+
+    @property
+    def shard_experts_full(self) -> bool:
+        """Full EP: experts cover the whole mesh (model x data)."""
+        return (self.cfg.n_experts > 0
+                and self.cfg.n_experts % (self.tp * self.dp_size) == 0)
+
+    @property
+    def shard_expert_ffn(self) -> bool:
+        return self.cfg.d_expert > 0 and self.cfg.d_expert % self.tp == 0
+
+    # -- per-tensor specs --------------------------------------------------
+
+    def param_spec(self, name: str, shape: Sequence[int]) -> Spec:
+        """Placement of one named parameter; replicated unless matched."""
+        none: Spec = tuple(None for _ in shape)
+        parts = name.split("/")
+        leaf = parts[-1]
+        module = parts[-2] if len(parts) > 1 else ""
+
+        if leaf in ("embed", "unembed", "lm_head") or name == "embed":
+            if self.shard_vocab and len(shape) >= 1:
+                return ("model",) + none[1:]
+            return none
+        if self.seq_parallel and name.startswith("stacks"):
+            # SP replicates block weights; activations shard on sequence
+            return none
+        if module == "attn":
+            if not self.shard_q_heads:
+                return none
+            if leaf in ("wq", "w_uq"):
+                return none[:-1] + ("model",)
+            if leaf == "wo":
+                return none[:-2] + ("model", None)
+            return none
+        if module == "mlp":
+            if not self.shard_ffn:
+                return none
+            if leaf in ("w_gate", "w_up"):
+                return none[:-1] + ("model",)
+            if leaf == "w_down":
+                return none[:-2] + ("model", None)
+            return none
+        if module == "moe":
+            if leaf not in ("w_gate", "w_up", "w_down") or len(shape) < 4:
+                return none
+            if self.shard_experts_full:
+                return (None, ("model",) + self.dp) + none[2:]
+            if self.shard_experts:
+                return (None, "model") + none[2:]
+            if self.shard_expert_ffn:
+                if leaf == "w_down":
+                    return none[:-2] + ("model", None)
+                return none[:-1] + ("model",)
+            return none
+        if module == "ssm":
+            if not self.shard_ssm:
+                return none
+            if leaf in ("w_x", "w_z"):
+                return none[:-1] + ("model",)
+            if leaf == "w_out":
+                return none[:-2] + ("model", None)
+            return none
+        return none
+
+    def delta_spec(self, name: str, shape: Sequence[int]) -> Spec:
+        """Placement of one delta leaf (no layer-stack dim).
+
+        Channel deltas carry the selected-channel dim where the full weight
+        carries its TP dim: shard it over 'model' when it divides.
+        """
+        none: Spec = tuple(None for _ in shape)
+        leaf = name.split("/")[-1]
+        if not shape:
+            return none
+        if leaf in ("w_down", "w_out", "wo") and shape[0] % self.tp == 0:
+            return ("model",) + none[1:]
+        if shape[-1] % self.tp == 0:
+            return none[:-1] + ("model",)
+        return none
+
+    def batch_spec(self) -> Dict[str, Spec]:
+        """(batch, seq) placement for token batches."""
+        dp_axis = self.dp if len(self.dp) > 1 else (self.dp[0] if self.dp
+                                                    else None)
+        seq_axis = "model" if self.seq_parallel else None
+        spec = (dp_axis, seq_axis)
+        return {"tokens": spec, "labels": spec}
+
+    # -- tree placement (requires a real mesh) -----------------------------
+
+    def _named(self, spec: Spec):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return NamedSharding(self.mesh, P(*spec))
+
+    def params(self, params: Any) -> Any:
+        return named_tree_map(
+            lambda name, x: self._named(self.param_spec(name, x.shape)),
+            params)
+
+    def deltas(self, deltas: Any) -> Any:
+        return named_tree_map(
+            lambda name, x: self._named(self.delta_spec(name, x.shape)),
+            deltas)
+
+    def opt_state(self, opt_shapes: Any, deltas_sh: Any = None) -> Any:
+        # moment tensors mirror their delta leaves; scalars replicate
+        return named_tree_map(
+            lambda name, x: self._named(
+                self.delta_spec(name, x.shape) if getattr(x, "ndim", 0)
+                else ()),
+            opt_shapes)
+
+    def batch(self, batch: Any) -> Any:
+        dp_axis = self.dp if len(self.dp) > 1 else (self.dp[0] if self.dp
+                                                    else None)
+
+        def spec(name, x):
+            ndim = getattr(x, "ndim", len(getattr(x, "shape", ())))
+            if ndim == 0:
+                return self._named(())
+            s = [None] * ndim
+            leaves_batch = int(x.shape[0])
+            if dp_axis is not None and leaves_batch % self.dp_size == 0:
+                s[0] = dp_axis
+            if self.seq_parallel and ndim >= 2 and x.shape[1] % self.tp == 0:
+                s[1] = "model"
+            return self._named(tuple(s))
+
+        return named_tree_map(spec, batch)
+
+    def caches(self, caches: Any, seq_sharded: bool = False) -> Any:
+        """KV/state caches: batch-sharded over data; optionally the seq dim
+        over 'model' for batch=1 long-context cells."""
+
+        def spec(name, x):
+            ndim = getattr(x, "ndim", 0)
+            s = [None] * ndim
+            # stacked cache leaves are (L, B, ...); len leaves (B,)/(L, B)
+            if name.endswith("len"):
+                return self._named(tuple(s))
+            if ndim >= 2:
+                if seq_sharded and ndim >= 3 and x.shape[2] % self.tp == 0:
+                    s[2] = "model"
+                elif self.dp and x.shape[1] % self.dp_size == 0:
+                    s[1] = self.dp if len(self.dp) > 1 else self.dp[0]
+            return self._named(tuple(s))
+
+        return named_tree_map(spec, caches)

@@ -1,7 +1,11 @@
 """Serving driver: batched requests through the continuous-batching engine.
 
+With ``--adapt``, first runs TinyTrain through the façade on a synthetic
+task and folds the deltas into the engine before serving (adapted models
+serve at exactly base cost).
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --preset smoke \
-        --requests 16 --max-new 16
+        --requests 16 --max-new 16 [--adapt --device jetson-nano]
 """
 from __future__ import annotations
 
@@ -11,9 +15,8 @@ import time
 import jax
 import numpy as np
 
+from .. import api, configs
 from ..models import transformer as T
-from ..serving import Request, ServeEngine
-from .train import preset_config
 
 
 def main() -> None:
@@ -24,16 +27,38 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--adapt", action="store_true",
+                    help="TinyTrain-adapt to a synthetic task, fold, serve")
+    ap.add_argument("--device", default="jetson-nano",
+                    help="device profile preset used with --adapt")
+    ap.add_argument("--adapt-iters", type=int, default=10)
     args = ap.parse_args()
 
-    cfg = preset_config(args.arch, args.preset)
+    cfg = configs.preset_config(args.arch, args.preset)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(0)
+
+    if args.adapt:
+        bb = api.backbone(args.arch, preset=args.preset, batch_size=48, seq=64)
+        session = api.TinyTrainSession(bb, params, max_way=8)
+        task = api.sample_lm_task(rng, cfg.vocab, seq=64, max_way=5)
+        adaptation = session.adapt(task, api.device_profile(args.device),
+                                   iters=args.adapt_iters)
+        if adaptation.policy.n_units == 0:
+            print(f"[serve] WARNING: {args.device} budget selected no "
+                  "units (probe batch too large for the envelope); "
+                  "serving base weights unchanged")
+        else:
+            adaptation.fold_into(eng)
+            print(f"[serve] adapted on {args.device}: "
+                  f"{adaptation.policy.describe()}")
+
     reqs = [
-        Request(uid=i,
-                prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24))).astype(np.int32),
-                max_new=args.max_new)
+        api.Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24))).astype(np.int32),
+            max_new=args.max_new)
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()

@@ -5,46 +5,32 @@ the synthetic token pipeline, with fault-tolerant checkpointing.  On the CPU
 container use ``--preset smoke`` / ``--preset 100m``; on a real pod the same
 driver runs the full configs with the production mesh.
 
+The device envelope comes from the façade: pick a preset with ``--device
+rpi-zero`` or override it ad hoc with ``--mem-budget-mb``/``--compute-frac``.
+
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
         --preset smoke --steps 50 --mode tinytrain
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import configs
-from ..core import Budget, fisher_probe, lm_backbone, select_policy
-from ..core.sparse import make_sparse_train_step
+from .. import api, configs
 from ..core.baselines import make_full_train_step
+from ..core.sparse import make_sparse_train_step
 from ..data import TokenLoader
-from ..dist.sharding import ShardingRules
 from ..models import transformer as T
-from ..models.api import ArchConfig
 from ..optim import adam, warmup_cosine
 from ..runtime import Trainer, TrainerConfig
 from .mesh import make_debug_mesh, make_production_mesh
 
-
-def preset_config(arch: str, preset: str) -> ArchConfig:
-    if preset == "full":
-        return configs.get_config(arch)
-    cfg = configs.get_reduced(arch)
-    if preset == "100m":
-        # ~100M-param variant of the same family
-        cfg = dataclasses.replace(
-            cfg, name=cfg.name.replace("smoke", "100m"),
-            n_layers=max(8, cfg.n_layers), d_model=768, d_ff=2048,
-            n_heads=12 if cfg.n_heads else 0,
-            n_kv_heads=min(12, max(cfg.n_kv_heads, 1)) if cfg.n_heads else 0,
-            head_dim=64 if cfg.n_heads else 0, vocab=32000,
-        )
-    return cfg
+# kept for older callers; the canonical resolver lives in repro.configs
+preset_config = configs.preset_config
 
 
 def main() -> None:
@@ -55,6 +41,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mode", default="tinytrain", choices=["tinytrain", "full"])
+    ap.add_argument("--device", default=None,
+                    help="device profile preset (e.g. rpi-zero, jetson-nano)")
     ap.add_argument("--mem-budget-mb", type=float, default=64.0)
     ap.add_argument("--compute-frac", type=float, default=0.5)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -63,7 +51,7 @@ def main() -> None:
     ap.add_argument("--production-mesh", action="store_true")
     args = ap.parse_args()
 
-    cfg = preset_config(args.arch, args.preset)
+    cfg = configs.preset_config(args.arch, args.preset)
     mesh = (make_production_mesh() if args.production_mesh
             else make_debug_mesh(len(jax.devices())))
     print(f"[train] arch={cfg.name} mode={args.mode} mesh={dict(mesh.shape)}")
@@ -76,8 +64,18 @@ def main() -> None:
     loader = TokenLoader(cfg.vocab, global_batch=args.batch, seq=args.seq, seed=0)
     lr = warmup_cosine(args.lr, args.steps, warmup_steps=max(1, args.steps // 20))
     opt = adam(lr)
-    bb = lm_backbone(cfg, tokens_per_batch=args.batch * args.seq,
-                     batch_size=args.batch)
+    bb = api.backbone(args.arch, preset=args.preset,
+                      batch_size=args.batch, seq=args.seq)
+
+    if args.device:
+        if args.mem_budget_mb != 64.0 or args.compute_frac != 0.5:
+            print("[train] WARNING: --device overrides "
+                  "--mem-budget-mb/--compute-frac")
+        profile = api.device_profile(args.device)
+    else:
+        profile = api.DeviceProfile(name="cli",
+                                    mem_kb=args.mem_budget_mb * 1e3,
+                                    compute_frac=args.compute_frac)
 
     with mesh:
         if args.mode == "full":
@@ -95,15 +93,9 @@ def main() -> None:
             # TinyTrain Algorithm 1: probe once, select, then sparse steps
             probe = {k: jnp.asarray(v) for k, v in loader.next().items()}
             t0 = time.perf_counter()
-            potentials, chans, fisher_dt = fisher_probe(
-                bb, params,
-                lambda p, b, taps=None: T.lm_loss(cfg, p, b, taps=taps),
-                probe, n_samples=args.batch,
-            )
-            budget = Budget(mem_bytes=args.mem_budget_mb * 1e6,
-                            compute_frac=args.compute_frac)
-            policy = select_policy(bb.unit_costs, potentials, chans, budget)
-            print(f"[train] fisher {fisher_dt:.1f}s "
+            policy, fisher_dt = api.plan_sparse_update(
+                bb, params, probe, profile, n_samples=args.batch)
+            print(f"[train] device={profile.name} fisher {fisher_dt:.1f}s "
                   f"(total selection {time.perf_counter()-t0:.1f}s)")
             print(f"[train] policy: {policy.describe()}")
             deltas = bb.init_deltas(policy)

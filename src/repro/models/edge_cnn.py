@@ -58,7 +58,7 @@ def _c(ch: float, mult: float, div: int = 8) -> int:
     return v
 
 
-def _build_ir_net(
+def build_ir_net(
     name: str,
     block_specs: Sequence[Tuple[int, int, int, int, int]],  # (t, c, n, s, k)
     width: float,
@@ -66,6 +66,12 @@ def _build_ir_net(
     head_c: int,
     in_res: int,
 ) -> CnnConfig:
+    """Public constructor for inverted-residual edge CNNs.
+
+    ``block_specs`` rows are MobileNetV2-style (expansion t, channels c,
+    repeats n, stride s, kernel k).  Use this (or the named builders below)
+    rather than hand-assembling ``ConvSpec`` tuples.
+    """
     layers: List[ConvSpec] = []
     c_prev = _c(stem_c, width)
     layers.append(ConvSpec("conv", 3, c_prev, 3, 2, True, 0))
@@ -98,7 +104,7 @@ def mobilenetv2_035(in_res: int = 84) -> CnnConfig:
         (6, 64, 4, 2, 3), (6, 96, 3, 1, 3), (6, 160, 3, 2, 3),
         (6, 320, 1, 1, 3),
     ]
-    return _build_ir_net("mobilenetv2-0.35", spec, 0.35, 32, 1280, in_res)
+    return build_ir_net("mobilenetv2-0.35", spec, 0.35, 32, 1280, in_res)
 
 
 def mcunet_5fps(in_res: int = 84) -> CnnConfig:
@@ -109,7 +115,7 @@ def mcunet_5fps(in_res: int = 84) -> CnnConfig:
         (4, 48, 2, 2, 7), (5, 96, 3, 1, 5), (4, 160, 2, 2, 5),
         (6, 320, 1, 1, 3),
     ]
-    return _build_ir_net("mcunet-5fps", spec, 0.6, 16, 0, in_res)
+    return build_ir_net("mcunet-5fps", spec, 0.6, 16, 0, in_res)
 
 
 def proxylessnas_03(in_res: int = 84) -> CnnConfig:
@@ -118,14 +124,27 @@ def proxylessnas_03(in_res: int = 84) -> CnnConfig:
         (6, 80, 4, 2, 7), (3, 96, 3, 1, 5), (6, 192, 4, 2, 5),
         (6, 320, 1, 1, 5),
     ]
-    return _build_ir_net("proxylessnas-0.3", spec, 0.3, 32, 1280, in_res)
+    return build_ir_net("proxylessnas-0.3", spec, 0.3, 32, 1280, in_res)
 
 
+def tiny_cnn(in_res: int = 32) -> CnnConfig:
+    """4-block demo backbone used by the quickstart, tests and CI benches."""
+    spec = [
+        (1, 8, 1, 1, 3), (4, 16, 2, 2, 3), (4, 24, 2, 2, 3), (4, 32, 1, 1, 3),
+    ]
+    return build_ir_net("tiny", spec, 1.0, 8, 0, in_res)
+
+
+# the paper's arch family only — benchmark sweeps iterate this dict; the
+# tiny-cnn demo backbone registers separately in repro.api
 EDGE_CNNS = {
     "mcunet": mcunet_5fps,
     "mobilenetv2": mobilenetv2_035,
     "proxylessnas": proxylessnas_03,
 }
+
+# deprecated private alias, kept for older call sites; use build_ir_net
+_build_ir_net = build_ir_net
 
 
 # ---------------------------------------------------------------------------
@@ -266,3 +285,32 @@ def cnn_layer_costs(cfg: CnnConfig) -> List[Dict[str, int]]:
 def cnn_total_costs(cfg: CnnConfig) -> Tuple[int, int]:
     cs = cnn_layer_costs(cfg)
     return sum(c["params"] for c in cs), sum(c["macs"] for c in cs)
+
+
+# ---------------------------------------------------------------------------
+# Deployment: fold channel deltas into a serving weight copy
+# ---------------------------------------------------------------------------
+
+
+def cnn_fold_deltas(
+    cfg: CnnConfig, params: List[Params], deltas: Dict[str, Params], policy
+) -> List[Params]:
+    """Serving copy with W_eff = W ⊕ scatter(ΔW, idx) folded in.
+
+    Exact because the channel delta enters pre-activation (see
+    ``cnn_features``): a folded conv computes bit-identical pre-activations
+    to the delta forward, so adapted CNNs deploy at base cost.
+    """
+    out = [dict(p) for p in params]
+    for u in policy.units:
+        spec = cfg.layers[u.layer]
+        dw = deltas[f"L{u.layer}"][u.kind]["w"]
+        idx = np.asarray(u.channels, np.int32)
+        w = out[u.layer]["w"]
+        if spec.kind == "dw":
+            # per-channel kernels: output channel i convolves input channel i
+            out[u.layer]["w"] = w.at[:, :, 0, idx].add(
+                dw[:, :, 0, :].astype(w.dtype))
+        else:
+            out[u.layer]["w"] = w.at[:, :, :, idx].add(dw.astype(w.dtype))
+    return out

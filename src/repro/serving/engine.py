@@ -122,6 +122,93 @@ class ServeEngine:
         return requests
 
 
+# ---------------------------------------------------------------------------
+# Delta folding: per-unit-kind folders behind a registry, so new unit kinds
+# (or external model families) plug in with one register_unit_folder call
+# instead of another branch in a monolithic function.
+# ---------------------------------------------------------------------------
+
+_UNIT_FOLDERS: Dict[str, Any] = {}
+
+
+def register_unit_folder(kind: str):
+    """Register ``fn(cfg, stack, j, d, idx)`` as the folder for a unit kind.
+
+    ``stack`` is the (mutable) per-group parameter dict, ``j`` the layer's
+    index within its stack, ``d`` the unit's delta pack and ``idx`` the
+    selected channel indices.  Folders fold W ⊕ scatter(ΔW, idx) in place.
+    """
+
+    def deco(fn):
+        _UNIT_FOLDERS[kind] = fn
+        return fn
+
+    return deco
+
+
+def fold_kind(cfg: ArchConfig, kind: str) -> str:
+    """Resolve a policy unit kind to its folder key (attn splits on MLA)."""
+    if kind == "attn" and cfg.mla:
+        return "mla"
+    return kind
+
+
+@register_unit_folder("mlp")
+def _fold_mlp(cfg, stack, j, d, idx):
+    mlp = stack["mlp"]
+    if "w_gate" in d:
+        mlp["w_gate"] = mlp["w_gate"].at[j, :, idx].add(
+            d["w_gate"].T.astype(mlp["w_gate"].dtype))
+    mlp["w_up"] = mlp["w_up"].at[j, :, idx].add(
+        d["w_up"].T.astype(mlp["w_up"].dtype))
+    mlp["w_down"] = mlp["w_down"].at[j, idx, :].add(
+        d["w_down"].astype(mlp["w_down"].dtype))
+
+
+@register_unit_folder("attn")
+def _fold_attn(cfg, stack, j, d, idx):
+    attn = stack["attn"]
+    cols = (idx[:, None] * cfg.head_dim
+            + np.arange(cfg.head_dim)[None, :]).reshape(-1)
+    attn["wq"] = attn["wq"].at[j, :, cols].add(
+        d["wq"].T.astype(attn["wq"].dtype))
+    attn["wo"] = attn["wo"].at[j, cols, :].add(
+        d["wo"].astype(attn["wo"].dtype))
+
+
+@register_unit_folder("mla")
+def _fold_mla(cfg, stack, j, d, idx):
+    attn = stack["attn"]
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    cols = (idx[:, None] * qk + np.arange(qk)[None, :]).reshape(-1)
+    attn["w_uq"] = attn["w_uq"].at[j, :, cols].add(
+        d["w_uq"].T.astype(attn["w_uq"].dtype))
+    vcols = (idx[:, None] * cfg.v_head_dim
+             + np.arange(cfg.v_head_dim)[None, :]).reshape(-1)
+    attn["wo"] = attn["wo"].at[j, vcols, :].add(
+        d["wo"].astype(attn["wo"].dtype))
+
+
+@register_unit_folder("ssm")
+def _fold_ssm(cfg, stack, j, d, idx):
+    ssm = stack["ssm"]
+    cols = (idx[:, None] * cfg.ssm_head_dim
+            + np.arange(cfg.ssm_head_dim)[None, :]).reshape(-1)
+    ssm["w_z"] = ssm["w_z"].at[j, :, cols].add(
+        d["w_z"].T.astype(ssm["w_z"].dtype))
+    ssm["w_x"] = ssm["w_x"].at[j, :, cols].add(
+        d["w_x"].T.astype(ssm["w_x"].dtype))
+    ssm["w_out"] = ssm["w_out"].at[j, cols, :].add(
+        d["w_out"].astype(ssm["w_out"].dtype))
+
+
+@register_unit_folder("moe")
+def _fold_moe(cfg, stack, j, d, idx):
+    moe = stack["moe"]
+    for nm in ("w_gate", "w_up", "w_down"):
+        moe[nm] = moe[nm].at[j, idx].add(d[nm].astype(moe[nm].dtype))
+
+
 def fold_deltas(cfg: ArchConfig, params: Any, deltas: Any, policy) -> Any:
     """Fold TinyTrain deltas into a serving copy: W += scatter(ΔW, idx)."""
     groups = T.stack_groups(cfg)
@@ -136,45 +223,12 @@ def fold_deltas(cfg: ArchConfig, params: Any, deltas: Any, policy) -> Any:
         stack = new_params["stacks"][f"g{gi}"]
         d = deltas[f"L{u.layer}"][u.kind]
         idx = np.asarray(u.channels, np.int32)
-        if u.kind == "mlp":
-            mlp = stack["mlp"]
-            if "w_gate" in d:
-                mlp["w_gate"] = mlp["w_gate"].at[j, :, idx].add(
-                    d["w_gate"].T.astype(mlp["w_gate"].dtype))
-            mlp["w_up"] = mlp["w_up"].at[j, :, idx].add(
-                d["w_up"].T.astype(mlp["w_up"].dtype))
-            mlp["w_down"] = mlp["w_down"].at[j, idx, :].add(
-                d["w_down"].astype(mlp["w_down"].dtype))
-        elif u.kind == "attn" and not cfg.mla:
-            attn = stack["attn"]
-            cols = (idx[:, None] * cfg.head_dim
-                    + np.arange(cfg.head_dim)[None, :]).reshape(-1)
-            attn["wq"] = attn["wq"].at[j, :, cols].add(
-                d["wq"].T.astype(attn["wq"].dtype))
-            attn["wo"] = attn["wo"].at[j, cols, :].add(
-                d["wo"].astype(attn["wo"].dtype))
-        elif u.kind == "attn" and cfg.mla:
-            attn = stack["attn"]
-            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
-            cols = (idx[:, None] * qk + np.arange(qk)[None, :]).reshape(-1)
-            attn["w_uq"] = attn["w_uq"].at[j, :, cols].add(
-                d["w_uq"].T.astype(attn["w_uq"].dtype))
-            vcols = (idx[:, None] * cfg.v_head_dim
-                     + np.arange(cfg.v_head_dim)[None, :]).reshape(-1)
-            attn["wo"] = attn["wo"].at[j, vcols, :].add(
-                d["wo"].astype(attn["wo"].dtype))
-        elif u.kind == "ssm":
-            ssm = stack["ssm"]
-            cols = (idx[:, None] * cfg.ssm_head_dim
-                    + np.arange(cfg.ssm_head_dim)[None, :]).reshape(-1)
-            ssm["w_z"] = ssm["w_z"].at[j, :, cols].add(
-                d["w_z"].T.astype(ssm["w_z"].dtype))
-            ssm["w_x"] = ssm["w_x"].at[j, :, cols].add(
-                d["w_x"].T.astype(ssm["w_x"].dtype))
-            ssm["w_out"] = ssm["w_out"].at[j, cols, :].add(
-                d["w_out"].astype(ssm["w_out"].dtype))
-        elif u.kind == "moe":
-            moe = stack["moe"]
-            for nm in ("w_gate", "w_up", "w_down"):
-                moe[nm] = moe[nm].at[j, idx].add(d[nm].astype(moe[nm].dtype))
+        kind = fold_kind(cfg, u.kind)
+        try:
+            folder = _UNIT_FOLDERS[kind]
+        except KeyError:
+            raise ValueError(
+                f"no unit folder registered for kind {kind!r} "
+                f"(known: {sorted(_UNIT_FOLDERS)})") from None
+        folder(cfg, stack, j, d, idx)
     return new_params

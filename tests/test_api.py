@@ -1,0 +1,161 @@
+"""Façade behaviour: registries resolve, the session amortises compiled
+steps across adapt() calls, results evaluate/report/fold correctly, and
+profiles lower to the Algorithm-1 budgets."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+
+
+@pytest.fixture(scope="module")
+def session():
+    bb = api.backbone("tiny-cnn", in_res=32, batch_size=64)
+    return api.TinyTrainSession(bb, max_way=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def task():
+    rng = np.random.default_rng(0)
+    return api.sample_task(rng, "glyphs", res=32, max_way=8,
+                           support_pad=64, query_pad=96)
+
+
+class TestRegistries:
+    def test_backbone_names(self):
+        names = api.backbones()
+        assert "tiny-cnn" in names and "mcunet" in names
+        assert "qwen2-1.5b" in names and "lm" in names
+
+    def test_unknown_backbone_raises(self):
+        with pytest.raises(KeyError, match="unknown backbone"):
+            api.backbone("resnet-9000")
+
+    def test_criteria(self):
+        cs = api.criteria()
+        for c in ("tinytrain", "fisher_only", "random", "l2norm"):
+            assert c in cs
+
+    def test_unknown_criterion_raises(self, session, task):
+        with pytest.raises(KeyError, match="unknown criterion"):
+            session.adapt(task, api.STM32F746, criterion="astrology")
+
+    def test_device_profile_lookup(self):
+        p = api.device_profile("STM32_F746".replace("_", ""))  # tolerant
+        assert p is api.STM32F746
+        b = p.budget()
+        assert b.mem_bytes == p.mem_kb * 1e3
+        assert b.compute_frac == p.compute_frac
+        with pytest.raises(KeyError, match="unknown device profile"):
+            api.device_profile("abacus")
+
+    def test_profile_scaling(self):
+        p = api.STM32F746.scaled(mem=2.0)
+        assert p.mem_kb == 2 * api.STM32F746.mem_kb
+        assert p.compute_frac == api.STM32F746.compute_frac
+
+
+class TestSession:
+    def test_adapt_improves_and_reuses_compiled_step(self, session, task):
+        """Two consecutive adapt() calls with one policy structure must
+        share exactly one compiled sparse step (acceptance criterion)."""
+        before = session.evaluate(task)
+        a1 = session.adapt(task, api.RPI_ZERO, iters=8)
+        n_after_first = session.compiled_steps()
+        a2 = session.adapt(task, api.RPI_ZERO, iters=8)
+        assert session.compiled_steps() == n_after_first == 1
+        # identical support set -> identical policy structure
+        key = session.step_cache._key
+        assert key(a1.policy) == key(a2.policy)
+        assert a1.policy.n_units > 0
+        assert a1.losses[-1] < a1.losses[0]
+        assert a1.accuracy() > before
+
+    def test_structure_reuse_across_domains(self, session):
+        """Different tasks re-use compiled steps whenever their policies
+        share a structure — compiles never exceed distinct structures."""
+        rng = np.random.default_rng(3)
+        adaptations = []
+        for dom in ("stripes", "waves", "stripes"):
+            t = api.sample_task(rng, dom, res=32, max_way=8,
+                                support_pad=64, query_pad=96)
+            adaptations.append(session.adapt(t, api.RPI_ZERO, iters=2))
+        structures = {session.step_cache._key(a.policy) for a in adaptations}
+        assert session.compiled_steps() <= len(structures) + 1  # +1: prior test
+
+    def test_memory_report_within_profile(self, session, task):
+        a = session.adapt(task, api.STM32F746, iters=2)
+        rep = a.memory_report()
+        assert rep["total_bytes"] <= api.STM32F746.mem_kb * 1e3
+
+    def test_fold_into_matches_delta_forward(self, session, task):
+        """CNN deployment round-trip: folded weights == delta forward."""
+        a = session.adapt(task, api.RPI_ZERO, iters=2)
+        bb = session.backbone
+        f_delta = bb.features(session.params, task.query,
+                              deltas=a.deltas, plan=a.policy)
+        folded = a.fold_into(session.params)
+        f_fold = bb.features(folded, task.query)
+        np.testing.assert_allclose(np.asarray(f_delta), np.asarray(f_fold),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_fold_requires_policy(self, session, task):
+        a = session.baseline("none", task, api.STM32F746)
+        with pytest.raises(ValueError, match="no delta pack"):
+            a.fold_into(session.params)
+        with pytest.raises(ValueError, match="no sparse-update policy"):
+            a.memory_report()
+
+    def test_task_way_guard(self, session):
+        rng = np.random.default_rng(5)
+        big = api.sample_task(rng, "glyphs", res=32, max_way=16,
+                              support_pad=64, query_pad=64)
+        with pytest.raises(ValueError, match="max_way"):
+            session.evaluate(big)
+
+
+class TestBaselines:
+    def test_none_matches_zero_shot(self, session, task):
+        a = session.baseline("none", task, api.STM32F746)
+        assert a.accuracy() == pytest.approx(session.evaluate(task))
+        assert a.delta_param_count() == 0
+
+    def test_lastlayer_and_static_channel_modes(self, session, task):
+        a = session.baseline("lastlayer", task, api.STM32F746, iters=2)
+        assert a.method == "lastlayer"
+        assert a.policy.n_units == 1
+        r = session.adapt(task, api.RPI_ZERO, criterion="random", iters=2)
+        assert r.policy.meta.get("channel_mode") == "random"
+
+    def test_sparseupdate_requires_proxy(self, session, task):
+        with pytest.raises(ValueError, match="proxy_task"):
+            session.baseline("sparseupdate", task, api.STM32F746, iters=1)
+
+    def test_unknown_baseline_raises(self, session, task):
+        with pytest.raises(KeyError, match="unknown baseline"):
+            session.baseline("prompt-engineering", task, api.STM32F746)
+
+
+class TestBatchPlanning:
+    def test_plan_sparse_update_lm(self):
+        import jax
+
+        bb = api.backbone("qwen2-1.5b", preset="smoke", batch_size=2, seq=32)
+        from repro.models import transformer as T
+
+        params = T.init_params(bb.cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                  bb.cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        policy, dt = api.plan_sparse_update(
+            bb, params, batch,
+            api.DeviceProfile(name="t", mem_kb=64e3, compute_frac=0.9),
+            n_samples=2)
+        assert policy.n_units > 0
+        assert dt >= 0.0
+
+    def test_plan_rejects_lossless_backbones(self, session):
+        with pytest.raises(ValueError, match="no batch loss"):
+            api.plan_sparse_update(
+                session.backbone, session.params, {}, api.STM32F746,
+                n_samples=1)

@@ -105,6 +105,62 @@ class TestSelection:
         counts = np.histogram(idx, bins=4, range=(0, 64))[0]
         assert (counts == 4).all()
 
+    def test_shard_topk_rounds_nonmultiple_k(self):
+        """k % shard_channels != 0 must round to the nearest shard multiple
+        and stay shard-balanced — never fall back to a global top-k."""
+        d = np.random.default_rng(1).normal(size=64) ** 2
+        idx = topk_channels(d, 14, shard_channels=4)  # 14 -> nearest 16
+        assert len(idx) == 16
+        counts = np.histogram(idx, bins=4, range=(0, 64))[0]
+        assert (counts == 4).all()
+        idx = topk_channels(d, 1, shard_channels=4)  # floor at one per shard
+        assert len(idx) == 4
+
+    def test_select_policy_records_shard_adjustments(self):
+        from repro.core.selection import round_to_shard
+
+        assert round_to_shard(14, 4, 64) == 16
+        assert round_to_shard(1, 4, 64) == 4
+        assert round_to_shard(63, 4, 64) == 64
+        costs = _mk_costs(n=4, ch=16)
+        rng = np.random.default_rng(2)
+        pots = np.abs(rng.normal(size=len(costs))) + 1e-3
+        chans = {(c.layer, c.kind): np.abs(rng.normal(size=c.n_channels))
+                 for c in costs}
+        # ratio 0.3 of 16 channels -> k=5, not a multiple of 4
+        pol = select_policy(costs, pots, chans,
+                            Budget(mem_bytes=1e9, compute_frac=1.0,
+                                   channel_ratio=0.3),
+                            shard_channels=4)
+        assert pol.n_units > 0
+        for u in pol.units:
+            assert u.n_channels % 4 == 0
+        adj = pol.meta["shard_k_adjustments"]
+        assert adj, "k=5 -> 4 adjustments should be recorded"
+        for requested, used in adj.values():
+            assert requested == 5 and used == 4
+
+    def test_shard_rounding_falls_back_under_tight_budget(self):
+        """Rounding k up must never evict a unit the floored multiple
+        affords: the selector retries at the floored shard multiple."""
+        costs = [UnitCost(layer=0, kind="conv", n_channels=16,
+                          n_params=16_000, macs=100_000,
+                          act_in_bytes=1_000, dx_macs=100_000)]
+        chans = {(0, "conv"): np.arange(16.0)}
+        # ratio 0.45 of 16 -> k=7; nearest multiple 8, floored 4.  A 4-ch
+        # delta costs 4000 params * 4 B * 3 (weights + 2 adam slots) + 1 KB
+        # activations = 49 KB; an 8-ch delta busts the 50 KB budget.
+        tight = Budget(mem_bytes=50_000, compute_frac=1.0,
+                       channel_ratio=0.45)
+        pol = select_policy(costs, np.ones(1), chans, tight,
+                            shard_channels=4)
+        assert pol.n_units == 1 and pol.units[0].n_channels == 4
+        assert pol.meta["shard_k_adjustments"] == {"L0.conv": [7, 4]}
+        loose = Budget(mem_bytes=1e9, compute_frac=1.0, channel_ratio=0.45)
+        pol = select_policy(costs, np.ones(1), chans, loose,
+                            shard_channels=4)
+        assert pol.units[0].n_channels == 8
+
 
 class TestFisher:
     def test_eq2_direct(self):

@@ -1,0 +1,110 @@
+"""Serving round-trip: folding deltas into a serving copy must reproduce
+the unfolded sparse-delta forward bit-for-bit (up to float assoc) for every
+unit kind — mlp, attn (MHA), mla, ssm and moe — and for the CNN family.
+
+This is the deployment guarantee behind ``Adaptation.fold_into``: adapted
+models serve at exactly base cost with no accuracy drift."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import lm_backbone
+from repro.core.policy import SelectedUnit, SparseUpdatePolicy
+from repro.models import transformer as T
+from repro.serving import fold_deltas
+from repro.serving.engine import fold_kind
+
+
+# arch -> the unit kinds its reduced config must exercise
+ARCH_KINDS = {
+    "qwen2-1.5b": {"attn", "mlp"},
+    "mixtral-8x7b": {"attn", "moe"},
+    "deepseek-v3-671b": {"attn", "mlp", "moe"},  # attn resolves to mla
+    "mamba2-1.3b": {"ssm"},
+}
+
+
+def _policy_covering(bb, kinds, k_per_unit=2):
+    """One selected unit per requested kind, a few channels each."""
+    units = []
+    seen = set()
+    for c in reversed(bb.unit_costs):
+        if c.kind in kinds and c.kind not in seen:
+            k = min(k_per_unit, c.n_channels)
+            # non-contiguous channels to exercise real scatter indexing
+            chans = tuple(sorted({0, c.n_channels - 1})) if k > 1 else (0,)
+            units.append(SelectedUnit(c.layer, c.kind, chans))
+            seen.add(c.kind)
+    assert seen == kinds, f"missing kinds: {kinds - seen}"
+    units.sort(key=lambda u: (u.layer, u.kind))
+    return SparseUpdatePolicy(horizon=0, units=tuple(units))
+
+
+def _random_deltas(bb, policy, seed=0):
+    deltas = bb.init_deltas(policy)
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    leaves = [jax.random.normal(k, x.shape, x.dtype) * 0.05
+              for k, x in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_KINDS))
+def test_fold_matches_delta_forward(arch):
+    cfg = configs.get_reduced(arch)
+    kinds = ARCH_KINDS[arch]
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    bb = lm_backbone(cfg, tokens_per_batch=2 * 16, batch_size=2)
+    policy = _policy_covering(bb, kinds)
+    deltas = _random_deltas(bb, policy)
+
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    x, positions, _ = T.build_inputs(cfg, params, batch)
+    h_delta, _, _ = T.forward_hidden(cfg, params, x, positions,
+                                     deltas=deltas, plan=policy)
+    logits_delta = T.unembed(cfg, params, h_delta)
+
+    folded = fold_deltas(cfg, params, deltas, policy)
+    x2, _, _ = T.build_inputs(cfg, folded, batch)
+    h_fold, _, _ = T.forward_hidden(cfg, folded, x2, positions)
+    logits_fold = T.unembed(cfg, folded, h_fold)
+
+    np.testing.assert_allclose(np.asarray(logits_delta),
+                               np.asarray(logits_fold),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mla_resolves_to_its_own_folder():
+    cfg = configs.get_reduced("deepseek-v3-671b")
+    assert cfg.mla
+    assert fold_kind(cfg, "attn") == "mla"
+    assert fold_kind(configs.get_reduced("qwen2-1.5b"), "attn") == "attn"
+
+
+def test_unknown_kind_raises():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    policy = SparseUpdatePolicy(
+        horizon=0, units=(SelectedUnit(0, "hologram", (0,)),))
+    with pytest.raises(ValueError, match="no unit folder"):
+        fold_deltas(cfg, params, {"L0": {"hologram": {}}}, policy)
+
+
+def test_cnn_fold_matches_delta_forward():
+    from repro import api
+
+    bb = api.backbone("tiny-cnn", in_res=32, batch_size=8)
+    sess = api.TinyTrainSession(bb, max_way=8, seed=1)
+    rng = np.random.default_rng(1)
+    task = api.sample_task(rng, "spots", res=32, max_way=8,
+                           support_pad=32, query_pad=32)
+    a = sess.adapt(task, api.RPI_ZERO, iters=2)
+    f_delta = bb.features(sess.params, task.query,
+                          deltas=a.deltas, plan=a.policy)
+    f_fold = bb.features(a.fold_into(sess.params), task.query)
+    np.testing.assert_allclose(np.asarray(f_delta), np.asarray(f_fold),
+                               rtol=1e-5, atol=1e-6)

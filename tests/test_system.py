@@ -14,16 +14,14 @@ from repro.core import (
 )
 from repro.core.sparse import EpisodeStepCache, sparse_memory_report
 from repro.data import TokenLoader, augment_support, sample_episode
-from repro.models.edge_cnn import _build_ir_net
+from repro.models.edge_cnn import tiny_cnn as tiny_cnn_cfg
 from repro.optim import adam, apply_updates
 from repro.runtime import SimulatedFailure, Trainer, TrainerConfig, failure_at
 
 
 @pytest.fixture(scope="module")
 def tiny_cnn():
-    spec = [(1, 8, 1, 1, 3), (4, 16, 2, 2, 3), (4, 24, 2, 2, 3),
-            (4, 32, 1, 1, 3)]
-    cfg = _build_ir_net("tiny", spec, 1.0, 8, 0, 32)
+    cfg = tiny_cnn_cfg(in_res=32)
     bb = cnn_backbone(cfg, batch_size=64)
     params = bb.init(jax.random.PRNGKey(0))
     return bb, params
