@@ -1,0 +1,227 @@
+"""Adaptation-engine throughput: eager loop vs scan-fused vs vmapped fleet.
+
+Measures steady-state (post-compile) tasks/sec and steps/sec for the three
+online-stage execution paths:
+
+- ``eager``: one jitted dispatch + one blocking ``float(loss)`` sync per
+  fine-tune iteration (the pre-fusion behaviour, kept as ``fused=False``);
+- ``fused``: the whole loop as one ``lax.scan`` dispatch, losses
+  transferred once at the end;
+- ``fleet``: ``TinyTrainSession.adapt_many`` — every same-structure task
+  stacked and run through one vmap-of-scanned-steps call.
+
+All paths run the same policy structure so the comparison isolates
+dispatch/sync overhead, which is exactly what device residency removes.
+Results are appended to ``BENCH_adaptation.json`` (one record per run) so
+CI accumulates a perf trajectory per PR.
+
+    PYTHONPATH=src python -m benchmarks.adaptation_throughput --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.core import adapt as adapt_mod
+from repro.core.backbones import cnn_backbone
+from repro.models import edge_cnn as E
+
+DEFAULT_OUT = "BENCH_adaptation.json"
+
+
+def _backbone(arch: str, res: int, batch: int):
+    if arch == "micro":
+        # one IR block: per-step compute small enough that per-dispatch
+        # overhead dominates — the quantity the fusion removes.  The full
+        # run uses the real tiny-cnn demo backbone instead.
+        cfg = E.build_ir_net("micro", [(1, 8, 1, 2, 3)], 1.0, 8, 0, res)
+        return cnn_backbone(cfg, batch_size=batch)
+    return api.backbone(arch, in_res=res, batch_size=batch)
+
+
+def _timed(fn, reps: int):
+    """Best wall-clock of ``reps`` steady-state passes (throttling-robust),
+    plus the host-transfer count of the last pass and its results."""
+    best, results = float("inf"), None
+    for _ in range(reps):
+        adapt_mod.reset_host_sync_count()
+        t0 = time.perf_counter()
+        results = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, adapt_mod.host_sync_count(), results
+
+
+def run(
+    *,
+    arch: str = "micro",
+    n_tasks: int = 8,
+    iters: int = 40,
+    fleet_tasks: int = 16,
+    fleet_iters: int = 10,
+    res: int = 12,
+    max_way: int = 4,
+    support_pad: int = 8,
+    query_pad: int = 8,
+    reps: int = 3,
+    seed: int = 0,
+) -> Dict[str, object]:
+    bb = _backbone(arch, res, support_pad)
+    session = api.TinyTrainSession(bb, max_way=max_way, seed=seed)
+    rng = np.random.default_rng(seed)
+
+    # cap episode sizes at the pads so every task shares one padded shape —
+    # the same-structure fleet case the acceptance criteria measure
+    def make_tasks(n):
+        return [
+            api.sample_task(rng, "stripes", res=res, max_way=max_way,
+                            min_way=max(2, max_way // 2),
+                            support_pad=support_pad, query_pad=query_pad,
+                            max_support_total=support_pad,
+                            max_support_per_class=max(1, support_pad // 2),
+                            query_per_class=max(1, query_pad // max_way))
+            for _ in range(n)
+        ]
+
+    tasks = make_tasks(n_tasks)
+
+    # -- section 1: the fine-tune loop, eager vs scan-fused ----------------
+    # one dynamic adapt picks the shared policy structure and reports the
+    # probe cost; the loop paths then run policy_override so the comparison
+    # isolates exactly what fusion removes (dispatch + per-iter syncs)
+    probe_a = session.adapt(tasks[0], api.RPI_ZERO, iters=1)
+    policy = probe_a.policy
+
+    def eager_pass():
+        return [session.adapt(t, api.RPI_ZERO, iters=iters,
+                              policy_override=policy, fused=False)
+                for t in tasks]
+
+    def fused_pass():
+        return [session.adapt(t, api.RPI_ZERO, iters=iters,
+                              policy_override=policy)
+                for t in tasks]
+
+    paths: Dict[str, object] = {}
+    for name, fn in (("eager", eager_pass), ("fused", fused_pass)):
+        fn()  # warm-up: compiles out of the timed passes
+        dt, syncs, results = _timed(fn, reps)
+        paths[name] = {
+            "iters": iters,
+            "seconds_total": dt,
+            "tasks_per_sec": n_tasks / dt,
+            "steps_per_sec": n_tasks * iters / dt,
+            "host_transfers_per_task": syncs / n_tasks,
+            "final_loss_mean":
+                float(np.mean([r.losses[-1] for r in results])),
+        }
+
+    # -- section 2: fleet (adapt_many) vs sequential adapt, full pipeline --
+    # both sides run probe -> select -> fine-tune per task; the fleet path
+    # batches the probe into one dispatch and the fine-tune into one
+    # compiled call per policy structure
+    ftasks = make_tasks(fleet_tasks)
+
+    def sequential_pass():
+        return [session.adapt(t, api.RPI_ZERO, iters=fleet_iters)
+                for t in ftasks]
+
+    def fleet_pass():
+        return session.adapt_many(ftasks, api.RPI_ZERO, iters=fleet_iters)
+
+    for name, fn in (("sequential", sequential_pass), ("fleet", fleet_pass)):
+        fn()
+        dt, syncs, results = _timed(fn, reps)
+        paths[name] = {
+            "iters": fleet_iters,
+            "n_tasks": fleet_tasks,
+            "seconds_total": dt,
+            "tasks_per_sec": fleet_tasks / dt,
+            "steps_per_sec": fleet_tasks * fleet_iters / dt,
+            "host_transfers_per_task": syncs / fleet_tasks,
+            "final_loss_mean":
+                float(np.mean([r.losses[-1] for r in results])),
+        }
+
+    fisher = {"probe_seconds_single": probe_a.fisher_seconds}
+    # batched probe: N tasks scored in one dispatch + one fetch
+    session.adapt_many(ftasks, api.RPI_ZERO, iters=0)  # warm-up
+    t0 = time.perf_counter()
+    session.adapt_many(ftasks, api.RPI_ZERO, iters=0)
+    fisher["probe_seconds_batched_per_task"] = \
+        (time.perf_counter() - t0) / fleet_tasks
+
+    record = {
+        "bench": "adaptation_throughput",
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "config": {"n_tasks": n_tasks, "iters": iters,
+                   "fleet_tasks": fleet_tasks, "fleet_iters": fleet_iters,
+                   "res": res, "support_pad": support_pad, "backbone": arch},
+        "paths": paths,
+        "fisher": fisher,
+        "speedup": {
+            "fused_vs_eager":
+                paths["fused"]["tasks_per_sec"]
+                / paths["eager"]["tasks_per_sec"],
+            "fleet_vs_sequential":
+                paths["fleet"]["tasks_per_sec"]
+                / paths["sequential"]["tasks_per_sec"],
+        },
+    }
+    return record
+
+
+def write_record(record: Dict[str, object], out_path: str) -> None:
+    """Append the run to the bench trajectory file (a JSON list)."""
+    history: List[Dict[str, object]] = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+            history = prev if isinstance(prev, list) else [prev]
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(record)
+    with open(out_path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
+def main(quick: bool = True, out_path: str = DEFAULT_OUT) -> List[str]:
+    kw = (dict(arch="micro", n_tasks=8, iters=40, fleet_tasks=16,
+               fleet_iters=10, res=12, max_way=4, support_pad=8,
+               query_pad=8)
+          if quick else
+          dict(arch="tiny-cnn", n_tasks=8, iters=40, fleet_tasks=16,
+               fleet_iters=20, res=48, max_way=8, support_pad=64,
+               query_pad=80))
+    record = run(**kw)
+    write_record(record, out_path)
+
+    out = ["path,iters,tasks_per_sec,steps_per_sec,host_transfers_per_task"]
+    for name, p in record["paths"].items():
+        out.append(f"{name},{p['iters']},{p['tasks_per_sec']:.2f},"
+                   f"{p['steps_per_sec']:.1f},"
+                   f"{p['host_transfers_per_task']:.1f}")
+    sp = record["speedup"]
+    out.append(f"speedup,fused_vs_eager={sp['fused_vs_eager']:.2f}x,"
+               f"fleet_vs_sequential={sp['fleet_vs_sequential']:.2f}x,"
+               f"-> {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-scale shapes (CI smoke mode)")
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    for line in main(quick=args.quick, out_path=args.out):
+        print(line)

@@ -135,6 +135,7 @@ def run_method(
 
     accs: Dict[str, List[float]] = {d: [] for d in domains}
     fisher_times, train_times = [], []
+    steps_rates, transfers = [], []
     for dom in domains:
         for e in range(episodes_per_domain):
             task = sample_task(rng, dom, **FEWSHOT)
@@ -145,6 +146,8 @@ def run_method(
                                   seed=seed)
                 fisher_times.append(a.fisher_seconds)
                 train_times.append(a.train_seconds)
+                steps_rates.append(a.steps_per_sec)
+                transfers.append(a.host_transfers)
                 acc = a.accuracy()
             else:
                 a = session.baseline(method, task, profile, iters=iters,
@@ -153,6 +156,8 @@ def run_method(
                     fisher_times.append(a.fisher_seconds)
                 if a.train_seconds:
                     train_times.append(a.train_seconds)
+                    steps_rates.append(a.steps_per_sec)
+                    transfers.append(a.host_transfers)
                 acc = a.accuracy()
             accs[dom].append(float(acc))
 
@@ -163,4 +168,6 @@ def run_method(
         "avg": float(np.mean(list(per_domain.values()))),
         "fisher_s": float(np.mean(fisher_times)) if fisher_times else 0.0,
         "train_s": float(np.mean(train_times)) if train_times else 0.0,
+        "steps_per_sec": float(np.mean(steps_rates)) if steps_rates else 0.0,
+        "host_transfers": float(np.mean(transfers)) if transfers else 0.0,
     }

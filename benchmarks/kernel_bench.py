@@ -14,7 +14,7 @@ from repro.kernels import ops, ref
 
 
 def _time(f, *args, n: int = 5) -> float:
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))  # one warm-up call (compile + transfer)
     t0 = time.perf_counter()
     for _ in range(n):
         out = f(*args)
@@ -26,15 +26,19 @@ def main(quick: bool = True) -> List[str]:
     out = ["kernel,shape,us_per_call,max_err_vs_oracle"]
     key = jax.random.PRNGKey(0)
 
-    # fisher
+    # fisher: time the Pallas op itself (interpret on CPU, Mosaic on TPU)
+    # and the jnp oracle side by side
     n, d, c = (4, 512, 256) if quick else (16, 2048, 1024)
     a = jax.random.normal(key, (n, d, c))
     g = jax.random.normal(jax.random.PRNGKey(1), (n, d, c)) * 0.1
     want = ref.fisher_ref(a, g)
-    got = ops.fisher(a, g, block_d=min(512, d), block_c=min(256, c))
+    bd, bc = min(512, d), min(256, c)
+    got = ops.fisher(a, g, block_d=bd, block_c=bc)
     err = float(jnp.max(jnp.abs(got - want) / (jnp.abs(want) + 1e-6)))
-    us = _time(jax.jit(ref.fisher_ref), a, g)
+    us = _time(lambda a, g: ops.fisher(a, g, block_d=bd, block_c=bc), a, g)
     out.append(f"fisher,({n}x{d}x{c}),{us:.0f},{err:.2e}")
+    us = _time(jax.jit(ref.fisher_ref), a, g)
+    out.append(f"fisher_xla_ref,({n}x{d}x{c}),{us:.0f},0.00e+00")
 
     # flash attention
     b, s, hq, hkv, hd = (1, 512, 4, 2, 64) if quick else (2, 2048, 8, 2, 128)

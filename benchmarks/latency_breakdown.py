@@ -28,16 +28,20 @@ def run(arch: str = "tiny", episodes_per_domain: int = 1, iters: int = 12):
             "method": m, "fisher_s": r["fisher_s"], "train_s": r["train_s"],
             "total_s": total,
             "fisher_pct": 100 * r["fisher_s"] / total if total else 0.0,
+            "steps_per_sec": r["steps_per_sec"],
+            "host_transfers": r["host_transfers"],
         })
     return rows
 
 
 def main(quick: bool = True) -> List[str]:
     rows = run()
-    out = ["method,fisher_s,train_s,total_s,fisher_pct"]
+    out = ["method,fisher_s,train_s,total_s,fisher_pct,"
+           "steps_per_sec,host_transfers"]
     for r in rows:
         out.append(f"{r['method']},{r['fisher_s']:.2f},{r['train_s']:.2f},"
-                   f"{r['total_s']:.2f},{r['fisher_pct']:.1f}")
+                   f"{r['total_s']:.2f},{r['fisher_pct']:.1f},"
+                   f"{r['steps_per_sec']:.1f},{r['host_transfers']:.0f}")
     return out
 
 

@@ -13,6 +13,7 @@ import time
 
 BENCHES = [
     ("memory_compute_table", "Table 2: backward memory & MACs"),
+    ("adaptation_throughput", "Eager vs fused vs fleet adaptation perf"),
     ("kernel_bench", "Kernel oracle sweeps + XLA timings"),
     ("roofline", "Roofline from dry-run cells"),
     ("latency_breakdown", "Tables 9/10: latency breakdown"),

@@ -37,3 +37,17 @@ for uid, domain in users:
 
 print(f"\ncompiled step variants: {session.compiled_steps()} "
       f"(vs {len(users)} users — structure reuse)")
+
+# fleet mode: the same users adapted in O(#policy structures) dispatches —
+# one batched probe per episode shape, one scanned fine-tune per structure
+fleet_tasks = [api.sample_task(rng, domain, res=32, max_way=8,
+                               support_pad=64, query_pad=96,
+                               max_support_total=64,
+                               max_support_per_class=16)
+               for _, domain in users]
+t0 = time.perf_counter()
+fleet = session.adapt_many(fleet_tasks, profile, iters=20)
+dt = time.perf_counter() - t0
+accs = ", ".join(f"{a.accuracy()*100:.0f}%" for a in fleet)
+print(f"fleet adapt_many: {len(fleet)} users in {dt:.1f}s "
+      f"(query accs {accs})")

@@ -12,6 +12,13 @@ One import surface for every workload::
     adaptation = sess.adapt(task, api.STM32F746)
     print(adaptation.accuracy(), adaptation.memory_report())
 
+The online stage is device-resident: ``adapt()`` compiles the whole
+fine-tune loop into one scanned dispatch (two blocking host transfers per
+task — probe scores and final losses; pass ``fused=False`` for the eager
+per-iteration loop), and ``sess.adapt_many(tasks, profile)`` adapts a
+fleet of same-shaped tasks in O(#distinct policy structures) compiled
+calls with a single batched Fisher probe per episode shape.
+
 Backbones and criteria are string-keyed registries, so a new scenario is
 one ``register_backbone``/``register_criterion`` call, not a new script.
 The ``repro.core`` functions remain the stable low-level layer underneath.

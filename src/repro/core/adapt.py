@@ -4,6 +4,13 @@ Given a meta-trained backbone, a target task's support set and the device
 budgets: (1) one gradient probe on the support set; (2) Fisher potential per
 unit; (3) multi-objective scores; (4) budgeted layer selection + top-K
 channel selection; (5) sparse fine-tuning of the selected deltas.
+
+The online stage is device-resident: the probe reduces Eq. 2 on the
+accelerator and ships only per-channel scores, and the fine-tune loop runs
+as one ``lax.scan`` dispatch that transfers the whole loss trajectory once
+at the end — a fused ``adapt_task`` performs exactly two blocking host
+transfers (probe scores + final losses).  ``fused=False`` keeps the eager
+one-dispatch-per-iteration loop as a debugging escape hatch.
 """
 from __future__ import annotations
 
@@ -18,11 +25,37 @@ import numpy as np
 from ..optim import Optimizer
 from .backbones import Backbone
 from .criterion import Budget
-from .fisher import fisher_probe
+from .fisher import fisher_probe, potentials_from_chans
 from .policy import SparseUpdatePolicy
 from .protonet import episode_accuracy, episode_loss
 from .selection import select_policy
-from .sparse import make_episode_sparse_step
+from .sparse import make_episode_sparse_scan, make_episode_sparse_step
+
+
+# Blocking host-transfer telemetry.  Every device->host fetch on the adapt
+# path goes through _fetch()/_fetch_scalar(), so tests and benchmarks can
+# assert the fused path's two-transfer contract instead of trusting it.
+_HOST_SYNCS = [0]
+
+
+def host_sync_count() -> int:
+    """Blocking device->host transfer events since the last reset."""
+    return _HOST_SYNCS[0]
+
+
+def reset_host_sync_count() -> None:
+    _HOST_SYNCS[0] = 0
+
+
+def _fetch(tree: Any) -> Any:
+    """Materialise a pytree on the host: one blocking transfer event."""
+    _HOST_SYNCS[0] += 1
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def _fetch_scalar(x: Any) -> float:
+    _HOST_SYNCS[0] += 1
+    return float(x)
 
 
 @dataclasses.dataclass
@@ -32,6 +65,71 @@ class AdaptResult:
     fisher_seconds: float
     train_seconds: float
     losses: list
+    # blocking device->host transfer events attributable to this task; a
+    # fleet adaptation amortises its per-group fetches, so this is a float
+    host_transfers: float = 0.0
+
+    @property
+    def steps_per_sec(self) -> float:
+        n = len(self.losses or ())
+        return n / self.train_seconds if self.train_seconds > 0 else 0.0
+
+
+def _probe_and_select(
+    backbone: Backbone,
+    params: Any,
+    support: Dict[str, jax.Array],
+    pseudo_query: Dict[str, jax.Array],
+    budget: Budget,
+    *,
+    max_way: int,
+    criterion: str,
+    shard_channels: int,
+    step_cache,
+) -> Tuple[SparseUpdatePolicy, float, int]:
+    """Algorithm 1 lines 1-4: Fisher probe → budgeted policy.
+
+    Returns (policy, fisher_seconds, host_transfers)."""
+    n = int(np.sum(np.asarray(support["episode_labels"]) >= 0))
+
+    if step_cache is not None and backbone.fisher_reduce is not None:
+        # steady-state path: probe + on-device Eq. 2 reduction, one fetch
+        batch_pad = next(
+            v.shape[0] for v in jax.tree_util.tree_leaves(support))
+        taps = backbone.make_taps(batch_pad)
+        t0 = time.perf_counter()
+        chans_dev = step_cache.probe_fisher()(
+            params, support, pseudo_query, taps, jnp.float32(n))
+        chans = _fetch(chans_dev)
+        potentials = potentials_from_chans(backbone.unit_costs, chans)
+        fisher_dt = time.perf_counter() - t0
+        transfers = 1
+    elif step_cache is not None:
+        batch_pad = next(
+            v.shape[0] for v in jax.tree_util.tree_leaves(support))
+        taps = backbone.make_taps(batch_pad)
+        t0 = time.perf_counter()
+        g = step_cache.probe_grad()(params, support, pseudo_query, taps)
+        g = _fetch(g)
+        potentials, chans = backbone.fisher_from_grads(g, n)
+        fisher_dt = time.perf_counter() - t0
+        transfers = 1
+    else:
+        def probe_loss(p, batch, taps=None):
+            return episode_loss(
+                backbone.features, p, support, pseudo_query, max_way,
+                taps=taps)
+
+        potentials, chans, fisher_dt = fisher_probe(
+            backbone, params, probe_loss, support, n
+        )
+        _HOST_SYNCS[0] += 1
+        transfers = 1
+    policy = select_policy(
+        backbone.unit_costs, potentials, chans, budget,
+        criterion=criterion, shard_channels=shard_channels,
+    )
+    return policy, fisher_dt, transfers
 
 
 def adapt_task(
@@ -48,39 +146,24 @@ def adapt_task(
     shard_channels: int = 1,
     policy_override: Optional[SparseUpdatePolicy] = None,
     step_cache=None,  # EpisodeStepCache: reuse compiles across tasks
+    fused: bool = True,
 ) -> AdaptResult:
     """Run Algorithm 1 for one target task.
 
     ``pseudo_query`` is the augmented support set used for backprop (Hu et
     al. 2022 procedure, Appendix C).  ``policy_override`` lets ablations
     inject static policies (random/L2 channels, ES policies, ...).
+
+    ``fused=True`` (default) runs the fine-tune loop as a single scanned
+    dispatch; ``fused=False`` keeps the eager per-iteration loop for
+    debugging and loss-trajectory inspection mid-run.
     """
-    n = int(np.sum(np.asarray(support["episode_labels"]) >= 0))
-
+    transfers = 0
     if policy_override is None:
-        if step_cache is not None:
-            # steady-state path: probe compiled once per backbone
-            batch_pad = next(
-                v.shape[0] for v in jax.tree_util.tree_leaves(support))
-            taps = backbone.make_taps(batch_pad)
-            t0 = time.perf_counter()
-            g = step_cache.probe_grad()(params, support, pseudo_query, taps)
-            g = jax.tree_util.tree_map(np.asarray, g)
-            potentials, chans = backbone.fisher_from_grads(g, n)
-            fisher_dt = time.perf_counter() - t0
-        else:
-            def probe_loss(p, batch, taps=None):
-                return episode_loss(
-                    backbone.features, p, support, pseudo_query, max_way,
-                    taps=taps)
-
-            potentials, chans, fisher_dt = fisher_probe(
-                backbone, params, probe_loss, support, n
-            )
-        policy = select_policy(
-            backbone.unit_costs, potentials, chans, budget,
-            criterion=criterion, shard_channels=shard_channels,
-        )
+        policy, fisher_dt, transfers = _probe_and_select(
+            backbone, params, support, pseudo_query, budget,
+            max_way=max_way, criterion=criterion,
+            shard_channels=shard_channels, step_cache=step_cache)
     else:
         policy = policy_override
         fisher_dt = 0.0
@@ -89,23 +172,42 @@ def adapt_task(
     opt_state = optimizer.init(deltas)
 
     t0 = time.perf_counter()
-    losses = []
-    if step_cache is not None:
+    losses: list = []
+    if iters <= 0:
+        pass
+    elif fused and step_cache is not None:
+        run = step_cache.scan_steps(policy, iters)
+        ci = step_cache.chan_idx_arrays(policy)
+        deltas, opt_state, loss_arr = run(
+            params, deltas, opt_state, support, pseudo_query, ci)
+        losses = [float(x) for x in _fetch(loss_arr)]
+        transfers += 1
+    elif fused:
+        run = make_episode_sparse_scan(
+            backbone.features, policy, optimizer, max_way, iters)
+        deltas, opt_state, loss_arr = run(
+            params, deltas, opt_state, support, pseudo_query)
+        losses = [float(x) for x in _fetch(loss_arr)]
+        transfers += 1
+    elif step_cache is not None:
         step = step_cache.step(policy)
         ci = step_cache.chan_idx_arrays(policy)
         for _ in range(iters):
             deltas, opt_state, loss = step(
                 params, deltas, opt_state, support, pseudo_query, ci)
-            losses.append(float(loss))
+            losses.append(_fetch_scalar(loss))
+        transfers += iters
     else:
         step = make_episode_sparse_step(
             backbone.features, policy, optimizer, max_way)
         for _ in range(iters):
             deltas, opt_state, loss = step(
                 params, deltas, opt_state, support, pseudo_query)
-            losses.append(float(loss))
+            losses.append(_fetch_scalar(loss))
+        transfers += iters
     train_dt = time.perf_counter() - t0
-    return AdaptResult(deltas, policy, fisher_dt, train_dt, losses)
+    return AdaptResult(deltas, policy, fisher_dt, train_dt, losses,
+                       host_transfers=transfers)
 
 
 def evaluate_task(

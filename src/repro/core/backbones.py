@@ -37,6 +37,11 @@ class Backbone:
     fisher_from_grads: Callable[[Any, int], Tuple[np.ndarray, Dict]]
     init_deltas: Callable[[SparseUpdatePolicy], Any]
     weight_l2: Callable[[Params], Dict[Tuple[int, str], np.ndarray]]
+    # device-side Eq. 2 reduction: tap-grads -> {(layer, kind): Δ_o} without
+    # leaving the accelerator (the host then fetches O(L·C) instead of
+    # O(L·B·C)).  Optional so external Backbones keep working; the engine
+    # falls back to fisher_from_grads when absent.
+    fisher_reduce: Optional[Callable[[Any, jax.Array], Dict]] = None
 
     def cost_by_key(self) -> Dict[Tuple[int, str], UnitCost]:
         return {(c.layer, c.kind): c for c in self.unit_costs}
@@ -175,6 +180,21 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
                     out[(lid, "moe")] = np.sqrt((wg**2).sum((1, 2)))
         return out
 
+    def fisher_reduce(tg, n):
+        chans: Dict[Tuple[int, str], jax.Array] = {}
+        for gi, (_, ids) in enumerate(groups):
+            mk, fk, _, _ = _lm_group_kinds(cfg, gi)
+            gm = tg[f"g{gi}"]["mixer"].astype(jnp.float32)  # (L, B, C)
+            d_mix = jnp.sum(gm * gm, axis=1) / (2.0 * n)  # (L, C)
+            for j, lid in enumerate(ids):
+                chans[(lid, mk)] = d_mix[j]
+            if fk != "none":
+                gf = tg[f"g{gi}"]["ffn"].astype(jnp.float32)
+                d_ffn = jnp.sum(gf * gf, axis=1) / (2.0 * n)
+                for j, lid in enumerate(ids):
+                    chans[(lid, fk)] = d_ffn[j]
+        return chans
+
     def features(params, batch, *, deltas=None, plan=None, taps=None, chan_idx=None):
         return T.pooled_features(cfg, params, batch, deltas=deltas, plan=plan,
                                  taps=taps, chan_idx=chan_idx)
@@ -194,6 +214,7 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
         fisher_from_grads=fisher_from_grads,
         init_deltas=init_deltas,
         weight_l2=weight_l2,
+        fisher_reduce=fisher_reduce,
     )
 
 
@@ -247,6 +268,13 @@ def cnn_backbone(cfg: E.CnnConfig, batch_size: int) -> Backbone:
             for i, p in enumerate(params)
         }
 
+    def fisher_reduce(tg, n):
+        return {
+            (i, "conv"): jnp.sum(jnp.square(g.astype(jnp.float32)), axis=0)
+            / (2.0 * n)
+            for i, g in enumerate(tg)
+        }
+
     def features(params, batch, *, deltas=None, plan=None, taps=None, chan_idx=None):
         return E.cnn_features(cfg, params, batch["images"], deltas=deltas,
                               plan=plan, taps=taps, chan_idx=chan_idx)
@@ -262,4 +290,5 @@ def cnn_backbone(cfg: E.CnnConfig, batch_size: int) -> Backbone:
         fisher_from_grads=fisher_from_grads,
         init_deltas=init_deltas,
         weight_l2=weight_l2,
+        fisher_reduce=fisher_reduce,
     )

@@ -61,6 +61,20 @@ def make_full_episode_step(feature_fn, optimizer: Optimizer, max_way: int):
     return jax.jit(step, donate_argnums=(0, 1))
 
 
+def make_full_episode_scan(feature_fn, optimizer: Optimizer, max_way: int,
+                           iters: int):
+    """FullTrain fine-tune loop fused into one ``lax.scan`` dispatch."""
+    from .protonet import episode_loss
+    from .sparse import scan_train_loop
+
+    loop = scan_train_loop(
+        lambda p, support, query: episode_loss(
+            feature_fn, p, support, query, max_way),
+        optimizer, iters)
+
+    return jax.jit(loop, donate_argnums=(0, 1))
+
+
 # ---------------------------------------------------------------------------
 # Static SparseUpdate (Lin et al. 2022): offline evolutionary search
 # ---------------------------------------------------------------------------
@@ -237,3 +251,24 @@ def make_tinytl_episode_step(
         return adapters, opt_state, loss
 
     return jax.jit(step, donate_argnums=(1, 2))
+
+
+def make_tinytl_episode_scan(
+    cfg: E.CnnConfig, optimizer: Optimizer, max_way: int,
+    dropped_blocks: int, iters: int,
+):
+    """TinyTL adapter fine-tune loop fused into one ``lax.scan`` dispatch."""
+    from .protonet import episode_loss
+    from .sparse import scan_train_loop
+
+    loop = scan_train_loop(
+        lambda a, params, support, query: episode_loss(
+            lambda av, b: tinytl_features(cfg, params, av, b["images"],
+                                          dropped_blocks=dropped_blocks),
+            a, support, query, max_way),
+        optimizer, iters)
+
+    def run(params, adapters, opt_state, support, query):
+        return loop(adapters, opt_state, params, support, query)
+
+    return jax.jit(run, donate_argnums=(1, 2))

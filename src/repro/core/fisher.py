@@ -62,7 +62,19 @@ def fisher_probe(
 def fisher_from_activations(a: jax.Array, g: jax.Array) -> jax.Array:
     """Direct Eq. 2 from materialised activations/gradients.
 
-    a, g: (N, D, C) -> Δ: (C,).  Oracle for the Pallas Fisher kernel.
+    a, g: (N, D, C) -> Δ: (C,).  Routed through the fused Pallas kernel
+    (``repro.kernels.ops.fisher``, interpret mode off-TPU); shapes that no
+    block size tiles fall back to the jnp oracle.
     """
-    u = jnp.sum(a * g, axis=1)  # (N, C)
-    return jnp.sum(u * u, axis=0) / (2.0 * a.shape[0])
+    from ..kernels import ops
+
+    return ops.fisher_auto(a, g)
+
+
+def potentials_from_chans(unit_costs, chans: Dict) -> np.ndarray:
+    """Per-unit Fisher potential P = Σ_o Δ_o, aligned with ``unit_costs``."""
+    return np.array(
+        [np.asarray(chans[(c.layer, c.kind)], np.float64).sum()
+         for c in unit_costs],
+        np.float64,
+    )

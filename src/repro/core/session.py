@@ -27,11 +27,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..optim import Optimizer, adam
-from .adapt import AdaptResult, adapt_task
+from .adapt import AdaptResult, adapt_task, _fetch, _fetch_scalar
 from .backbones import Backbone
 from .criterion import Budget
+from .fisher import potentials_from_chans
 from .policy import SparseUpdatePolicy, last_layer_policy
-from .selection import static_channel_policy
+from .selection import select_policy, static_channel_policy
 from .sparse import (
     EpisodeStepCache, deltas_param_count, sparse_memory_report,
 )
@@ -208,6 +209,28 @@ class Task:
         )
 
 
+def _stack_trees(trees: List[Any]) -> Any:
+    """Stack a list of identically-shaped pytrees along a new task axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _episode_shape_key(t: Task) -> Tuple:
+    """Tasks are stackable iff their episode pytrees match exactly."""
+    key = []
+    for tree in (t.support, t.pseudo_query):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        key.append((treedef,
+                    tuple((l.shape, str(l.dtype)) for l in leaves)))
+    return tuple(key)
+
+
+def _group_indices(keys: List[Any]) -> Dict[Any, List[int]]:
+    groups: Dict[Any, List[int]] = {}
+    for i, k in enumerate(keys):
+        groups.setdefault(k, []).append(i)
+    return groups
+
+
 # ---------------------------------------------------------------------------
 # Adaptation result
 # ---------------------------------------------------------------------------
@@ -231,8 +254,15 @@ class Adaptation:
     fisher_seconds: float
     train_seconds: float
     losses: List[float]
+    host_transfers: float
     _session: "TinyTrainSession" = dataclasses.field(repr=False)
     _eval: Callable[[Any, Any], float] = dataclasses.field(repr=False)
+
+    @property
+    def steps_per_sec(self) -> float:
+        """Fine-tune iterations per second (0 when nothing was trained)."""
+        n = len(self.losses)
+        return n / self.train_seconds if self.train_seconds > 0 and n else 0.0
 
     def accuracy(self, task: Optional[Task] = None) -> float:
         """Query-set accuracy on this task (or another Task's episode)."""
@@ -290,6 +320,8 @@ class Adaptation:
         return (f"{self.method}: policy={pol} "
                 f"fisher={self.fisher_seconds:.2f}s "
                 f"train={self.train_seconds:.2f}s "
+                f"steps_per_sec={self.steps_per_sec:.1f} "
+                f"host_transfers={self.host_transfers:g} "
                 f"delta_params={self.delta_param_count()}")
 
 
@@ -331,13 +363,17 @@ class TinyTrainSession:
         # Grows with distinct proxies — callers reuse one proxy per run.
         self._es_cache: Dict[Any, Tuple[Task, SparseUpdatePolicy]] = {}
         self._full_step = None
+        self._full_scans: Dict[int, Any] = {}
         self._tinytl_steps: Dict[int, Any] = {}
+        self._tinytl_scans: Dict[Tuple[int, int], Any] = {}
 
     # -- telemetry ---------------------------------------------------------
 
     def compiled_steps(self) -> int:
-        """Number of distinct jitted sparse-step variants compiled so far."""
-        return len(self.step_cache._steps)
+        """Number of distinct jitted sparse-step variants compiled so far
+        (eager per-iteration steps, fused scan variants and fleet scans)."""
+        return (len(self.step_cache._steps) + len(self.step_cache._scans)
+                + len(self.step_cache._vscans))
 
     # -- core pipeline -----------------------------------------------------
 
@@ -351,15 +387,20 @@ class TinyTrainSession:
         shard_channels: int = 1,
         policy_override: Optional[SparseUpdatePolicy] = None,
         seed: int = 0,
+        fused: bool = True,
     ) -> Adaptation:
-        """Algorithm 1 on one task: probe → select → sparse fine-tune."""
+        """Algorithm 1 on one task: probe → select → sparse fine-tune.
+
+        ``fused=True`` (default) runs the fine-tune loop as one scanned
+        dispatch; ``fused=False`` is the eager per-iteration escape hatch.
+        """
         self._check_task(task)
         if isinstance(profile, str):
             profile = device_profile(profile)
         budget = _as_budget(profile)
         prof = profile if isinstance(profile, DeviceProfile) else None
         kw = dict(iters=iters, max_way=self.max_way,
-                  step_cache=self.step_cache)
+                  step_cache=self.step_cache, fused=fused)
 
         if policy_override is not None:
             res = adapt_task(self.backbone, self.params, task.support,
@@ -392,9 +433,132 @@ class TinyTrainSession:
                                  task.pseudo_query, budget, self.optimizer,
                                  policy_override=pol, **kw)
                 res = dataclasses.replace(
-                    res, fisher_seconds=probe.fisher_seconds)
+                    res, fisher_seconds=probe.fisher_seconds,
+                    host_transfers=probe.host_transfers + res.host_transfers)
             method = criterion
         return self._wrap(method, task, prof, res, budget=budget)
+
+    def adapt_many(
+        self,
+        tasks: List[Task],
+        profile: Union[DeviceProfile, Budget, str],
+        *,
+        criterion: str = "tinytrain",
+        iters: int = 40,
+        shard_channels: int = 1,
+        policy_override: Optional[SparseUpdatePolicy] = None,
+    ) -> List[Adaptation]:
+        """Fleet adaptation: N user tasks in O(#distinct structures) calls.
+
+        Probes every task in one vmapped dispatch per support-shape group,
+        selects a policy per task, then groups tasks by policy *structure*
+        and runs one vmap-of-scanned-steps call per group — support sets,
+        pseudo-query sets and channel indices are stacked along a task
+        axis while the frozen backbone params broadcast.  Returns one
+        :class:`Adaptation` per task, in input order.
+        """
+        if not tasks:
+            return []
+        for t in tasks:
+            self._check_task(t)
+        if isinstance(profile, str):
+            profile = device_profile(profile)
+        budget = _as_budget(profile)
+        prof = profile if isinstance(profile, DeviceProfile) else None
+        method = criterion
+
+        fisher_dt = [0.0] * len(tasks)
+        transfers = [0.0] * len(tasks)  # per-task share of group fetches
+        # stacked episode pytrees keyed by task-index tuple, so the probe
+        # and fine-tune loops ship each task's data to the device once
+        stack_cache: Dict[Tuple[int, ...], Tuple[Any, Any]] = {}
+
+        def stacked(idxs):
+            key = tuple(idxs)
+            if key not in stack_cache:
+                stack_cache[key] = (
+                    _stack_trees([tasks[i].support for i in idxs]),
+                    _stack_trees([tasks[i].pseudo_query for i in idxs]),
+                )
+            return stack_cache[key]
+
+        if policy_override is not None:
+            policies = [policy_override] * len(tasks)
+            method = (f"override:"
+                      f"{(policy_override.meta or {}).get('source', 'policy')}")
+        else:
+            mode, channel_mode = _resolve_criterion(criterion)
+            if channel_mode != "dynamic":
+                raise ValueError(
+                    f"criterion {criterion!r} uses a static channel mode "
+                    f"({channel_mode}); adapt_many supports dynamic-channel "
+                    "criteria (or pass policy_override=)")
+            policies = [None] * len(tasks)
+            if self.backbone.fisher_reduce is None:
+                # external backbone without a device-side reduction: fall
+                # back to the sequential probe path (still one policy per
+                # task; only the probe batching is lost)
+                from .adapt import _probe_and_select
+
+                for i, t in enumerate(tasks):
+                    policies[i], fisher_dt[i], tr = _probe_and_select(
+                        self.backbone, self.params, t.support,
+                        t.pseudo_query, budget, max_way=self.max_way,
+                        criterion=mode, shard_channels=shard_channels,
+                        step_cache=self.step_cache)
+                    transfers[i] = float(tr)
+            else:
+                shape_groups = _group_indices(
+                    [_episode_shape_key(t) for t in tasks])
+                for idxs in shape_groups.values():
+                    sup, pq = stacked(idxs)
+                    ns = jnp.asarray([tasks[i].n_support for i in idxs],
+                                     jnp.float32)
+                    batch_pad = next(v.shape[1] for v in
+                                     jax.tree_util.tree_leaves(sup))
+                    taps = self.backbone.make_taps(batch_pad)
+                    t0 = time.perf_counter()
+                    chans_all = _fetch(self.step_cache.probe_fisher_batch()(
+                        self.params, sup, pq, taps, ns))
+                    dt = (time.perf_counter() - t0) / len(idxs)
+                    for j, i in enumerate(idxs):
+                        chans = {k: v[j] for k, v in chans_all.items()}
+                        policies[i] = select_policy(
+                            self.backbone.unit_costs,
+                            potentials_from_chans(self.backbone.unit_costs,
+                                                  chans),
+                            chans, budget, criterion=mode,
+                            shard_channels=shard_channels)
+                        fisher_dt[i] = dt
+                        transfers[i] = 1.0 / len(idxs)
+
+        # one vmapped scan per (support shapes, policy structure) group
+        out: List[Optional[Adaptation]] = [None] * len(tasks)
+        run_groups = _group_indices(
+            [(_episode_shape_key(t), self.step_cache._key(p))
+             for t, p in zip(tasks, policies)])
+        for idxs in run_groups.values():
+            pol0 = policies[idxs[0]]
+            sup, pq = stacked(idxs)
+            ci = _stack_trees(
+                [self.step_cache.chan_idx_arrays(policies[i]) for i in idxs])
+            run = self.step_cache.vmap_scan_steps(pol0, iters)
+            t0 = time.perf_counter()
+            d_stack, _, loss_stack = run(self.params, sup, pq, ci)
+            # one barrier fetch per group; per-task views are numpy slices
+            d_host, losses = _fetch((d_stack, loss_stack))
+            dt = (time.perf_counter() - t0) / len(idxs)
+            for j, i in enumerate(idxs):
+                res = AdaptResult(
+                    deltas=jax.tree_util.tree_map(lambda x, _j=j: x[_j],
+                                                  d_host),
+                    policy=policies[i], fisher_seconds=fisher_dt[i],
+                    train_seconds=dt,
+                    losses=[float(x) for x in losses[j]],
+                    host_transfers=transfers[i] + 1.0 / len(idxs))
+                out[i] = self._wrap(method, tasks[i], prof, res,
+                                    budget=budget)
+        return out
 
     def evaluate(self, task: Task, adaptation: Optional[Adaptation] = None
                  ) -> float:
@@ -416,6 +580,7 @@ class TinyTrainSession:
         iters: int = 40,
         proxy_task: Optional[Task] = None,
         seed: int = 0,
+        fused: bool = True,
     ) -> Adaptation:
         """Run one on-device-training baseline on a task.
 
@@ -427,7 +592,7 @@ class TinyTrainSession:
             profile = device_profile(profile)
         if name in _CRITERIA:
             return self.adapt(task, profile, criterion=name, iters=iters,
-                              seed=seed)
+                              seed=seed, fused=fused)
         if name == "none":
             return self._wrap(
                 "none", task,
@@ -440,18 +605,20 @@ class TinyTrainSession:
                 last_layer_policy(self.backbone.unit_costs,
                                   len(self.backbone.unit_costs)))
             return dataclasses.replace(
-                self.adapt(task, profile, policy_override=pol, iters=iters),
+                self.adapt(task, profile, policy_override=pol, iters=iters,
+                           fused=fused),
                 method="lastlayer")
         if name == "sparseupdate":
             pol = self._sparseupdate_policy(_as_budget(profile), proxy_task,
                                             seed)
             return dataclasses.replace(
-                self.adapt(task, profile, policy_override=pol, iters=iters),
+                self.adapt(task, profile, policy_override=pol, iters=iters,
+                           fused=fused),
                 method="sparseupdate")
         if name == "fulltrain":
-            return self._fulltrain(task, iters)
+            return self._fulltrain(task, iters, fused=fused)
         if name.startswith("tinytl") or name.startswith("adapterdrop"):
-            return self._tinytl(name, task, iters, seed)
+            return self._tinytl(name, task, iters, seed, fused=fused)
         raise KeyError(
             f"unknown baseline {name!r}; known: none, fulltrain, lastlayer, "
             f"sparseupdate, tinytl, adapterdrop<pct>, {criteria()}")
@@ -479,7 +646,9 @@ class TinyTrainSession:
             method=method, task=task, profile=profile, budget=budget,
             deltas=res.deltas, policy=res.policy,
             fisher_seconds=res.fisher_seconds,
-            train_seconds=res.train_seconds, losses=list(res.losses or []),
+            train_seconds=res.train_seconds,
+            losses=list(res.losses) if res.losses is not None else [],
+            host_transfers=res.host_transfers,
             _session=self, _eval=_eval)
 
     def _sparseupdate_policy(self, budget: Budget,
@@ -511,21 +680,32 @@ class TinyTrainSession:
                 seed=seed))
         return self._es_cache[key][1]
 
-    def _fulltrain(self, task: Task, iters: int) -> Adaptation:
-        from .baselines import make_full_episode_step
+    def _fulltrain(self, task: Task, iters: int,
+                   fused: bool = True) -> Adaptation:
+        from .baselines import make_full_episode_scan, make_full_episode_step
 
-        if self._full_step is None:
-            self._full_step = make_full_episode_step(
-                self.backbone.features, self.baseline_optimizer, self.max_way)
         # the step donates its params argument: train a private copy
         p = jax.tree_util.tree_map(jnp.copy, self.params)
         st = self.baseline_optimizer.init(p)
         t0 = time.perf_counter()
-        losses = []
-        for _ in range(iters):
-            p, st, loss = self._full_step(p, st, task.support,
-                                          task.pseudo_query)
-            losses.append(float(loss))
+        if fused and iters > 0:
+            if iters not in self._full_scans:
+                self._full_scans[iters] = make_full_episode_scan(
+                    self.backbone.features, self.baseline_optimizer,
+                    self.max_way, iters)
+            p, st, loss_arr = self._full_scans[iters](
+                p, st, task.support, task.pseudo_query)
+            losses = [float(x) for x in _fetch(loss_arr)]
+        else:
+            if self._full_step is None:
+                self._full_step = make_full_episode_step(
+                    self.backbone.features, self.baseline_optimizer,
+                    self.max_way)
+            losses = []
+            for _ in range(iters):
+                p, st, loss = self._full_step(p, st, task.support,
+                                              task.pseudo_query)
+                losses.append(_fetch_scalar(loss))
         dt = time.perf_counter() - t0
 
         def _eval(sup, qry, _p=p):
@@ -537,12 +717,14 @@ class TinyTrainSession:
         return Adaptation(
             method="fulltrain", task=task, profile=None, budget=None,
             deltas=p, policy=None, fisher_seconds=0.0, train_seconds=dt,
-            losses=losses, _session=self, _eval=_eval)
+            losses=losses, host_transfers=1 if (fused and iters > 0) else iters,
+            _session=self, _eval=_eval)
 
-    def _tinytl(self, name: str, task: Task, iters: int, seed: int
-                ) -> Adaptation:
+    def _tinytl(self, name: str, task: Task, iters: int, seed: int,
+                fused: bool = True) -> Adaptation:
         from .baselines import (
-            make_tinytl_episode_step, tinytl_adapter_init, tinytl_features,
+            make_tinytl_episode_scan, make_tinytl_episode_step,
+            tinytl_adapter_init, tinytl_features,
         )
 
         if self.backbone.kind != "cnn":
@@ -552,20 +734,30 @@ class TinyTrainSession:
             frac = int(name.replace("adapterdrop", "") or "50") / 100
             n_blocks = max(s.block for s in self.backbone.cfg.layers) + 1
             dropped = int(n_blocks * frac)
-        if dropped not in self._tinytl_steps:
-            self._tinytl_steps[dropped] = make_tinytl_episode_step(
-                self.backbone.cfg, self.baseline_optimizer, self.max_way,
-                dropped)
-        step = self._tinytl_steps[dropped]
         adapters = tinytl_adapter_init(self.backbone.cfg,
                                        jax.random.PRNGKey(seed))
         st = self.baseline_optimizer.init(adapters)
         t0 = time.perf_counter()
-        losses = []
-        for _ in range(iters):
-            adapters, st, loss = step(self.params, adapters, st,
-                                      task.support, task.pseudo_query)
-            losses.append(float(loss))
+        if fused and iters > 0:
+            skey = (dropped, iters)
+            if skey not in self._tinytl_scans:
+                self._tinytl_scans[skey] = make_tinytl_episode_scan(
+                    self.backbone.cfg, self.baseline_optimizer, self.max_way,
+                    dropped, iters)
+            adapters, st, loss_arr = self._tinytl_scans[skey](
+                self.params, adapters, st, task.support, task.pseudo_query)
+            losses = [float(x) for x in _fetch(loss_arr)]
+        else:
+            if dropped not in self._tinytl_steps:
+                self._tinytl_steps[dropped] = make_tinytl_episode_step(
+                    self.backbone.cfg, self.baseline_optimizer, self.max_way,
+                    dropped)
+            step = self._tinytl_steps[dropped]
+            losses = []
+            for _ in range(iters):
+                adapters, st, loss = step(self.params, adapters, st,
+                                          task.support, task.pseudo_query)
+                losses.append(_fetch_scalar(loss))
         dt = time.perf_counter() - t0
 
         cfg, params, mw = self.backbone.cfg, self.params, self.max_way
@@ -581,4 +773,6 @@ class TinyTrainSession:
         return Adaptation(
             method=name, task=task, profile=None, budget=None,
             deltas=adapters, policy=None, fisher_seconds=0.0,
-            train_seconds=dt, losses=losses, _session=self, _eval=_eval)
+            train_seconds=dt, losses=losses,
+            host_transfers=1 if (fused and iters > 0) else iters,
+            _session=self, _eval=_eval)

@@ -71,6 +71,63 @@ def make_episode_sparse_step(
     return jax.jit(step, donate_argnums=(1, 2))
 
 
+def scan_train_loop(
+    loss_fn: Callable[..., jax.Array],
+    optimizer: Optimizer,
+    iters: int,
+):
+    """Fuse a (value_and_grad -> update -> apply) loop into one ``lax.scan``.
+
+    ``loss_fn(x, *ctx) -> scalar`` where ``x`` is the trained pytree and
+    ``ctx`` is static context (frozen params, batches, channel indices).
+    Returns run(x, opt_state, *ctx) -> (x, opt_state, losses) with losses
+    shaped (iters,) — the single-dispatch core shared by the sparse,
+    full-train and TinyTL fused loops (jit/donation is the caller's job).
+    """
+
+    def run(x, opt_state, *ctx):
+        def body(carry, _):
+            x, st = carry
+            loss, grads = jax.value_and_grad(
+                lambda xx: loss_fn(xx, *ctx))(x)
+            updates, st = optimizer.update(grads, st, x)
+            x = apply_updates(x, updates)
+            return (x, st), loss
+
+        (x, opt_state), losses = jax.lax.scan(
+            body, (x, opt_state), None, length=iters)
+        return x, opt_state, losses
+
+    return run
+
+
+def make_episode_sparse_scan(
+    feature_fn: Callable[..., jax.Array],
+    policy: SparseUpdatePolicy,
+    optimizer: Optimizer,
+    max_way: int,
+    iters: int,
+):
+    """Whole fine-tune loop as one compiled ``lax.scan`` call.
+
+    Returns run(params, deltas, opt_state, support, query) -> (deltas,
+    opt_state, losses) with losses shaped (iters,) — a single dispatch and
+    a single host transfer instead of one per iteration.
+    """
+    from .protonet import episode_loss
+
+    loop = scan_train_loop(
+        lambda d, params, support, query: episode_loss(
+            feature_fn, params, support, query, max_way,
+            deltas=d, plan=policy),
+        optimizer, iters)
+
+    def run(params, deltas, opt_state, support, query):
+        return loop(deltas, opt_state, params, support, query)
+
+    return jax.jit(run, donate_argnums=(1, 2))
+
+
 class EpisodeStepCache:
     """Adaptation-engine jit cache: one compile per policy *structure*.
 
@@ -84,8 +141,12 @@ class EpisodeStepCache:
         self.optimizer = optimizer
         self.max_way = max_way
         self._steps: Dict = {}
+        self._scans: Dict = {}
+        self._vscans: Dict = {}
         self._evals: Dict = {}
         self._probe = None
+        self._probe_fisher = None
+        self._probe_fisher_batch = None
 
     def probe_grad(self):
         """Jitted Fisher-probe gradient, compiled once per backbone (episodes
@@ -102,6 +163,47 @@ class EpisodeStepCache:
 
             self._probe = jax.jit(jax.grad(f, argnums=3))
         return self._probe
+
+    def _probe_fisher_fn(self):
+        """Tap-grad + device-side Eq. 2 reduction, fused in one trace.
+
+        pf(params, support, query, taps, n) -> {(layer, kind): Δ_o} — only
+        the O(L·C) channel scores ever cross to the host, not the full
+        (L, B, C) tap-gradient tree.  ``n`` is the valid-sample count,
+        traced so episodes with different shot counts share the compile.
+        """
+        from .protonet import episode_loss
+
+        feature_fn = self.backbone.features
+        max_way = self.max_way
+        reduce = self.backbone.fisher_reduce
+
+        def f(params, support, query, taps):
+            return episode_loss(feature_fn, params, support, query,
+                                max_way, taps=taps)
+
+        def pf(params, support, query, taps, n):
+            g = jax.grad(f, argnums=3)(params, support, query, taps)
+            return reduce(g, n)
+
+        return pf
+
+    def probe_fisher(self):
+        """Jitted single-task probe → per-channel Fisher scores."""
+        if self._probe_fisher is None:
+            self._probe_fisher = jax.jit(self._probe_fisher_fn())
+        return self._probe_fisher
+
+    def probe_fisher_batch(self):
+        """Vmapped probe: one dispatch scores a whole fleet of tasks.
+
+        pfb(params, supports, queries, taps, ns) with task-stacked leading
+        axes on supports/queries/ns; params and taps are broadcast.
+        """
+        if self._probe_fisher_batch is None:
+            self._probe_fisher_batch = jax.jit(jax.vmap(
+                self._probe_fisher_fn(), in_axes=(None, 0, 0, None, 0)))
+        return self._probe_fisher_batch
 
     @staticmethod
     def _key(policy: SparseUpdatePolicy):
@@ -138,6 +240,77 @@ class EpisodeStepCache:
 
             self._steps[key] = jax.jit(step, donate_argnums=(1, 2))
         return self._steps[key]
+
+    def _scan_run_fn(self, policy: SparseUpdatePolicy, iters: int):
+        from .protonet import episode_loss
+
+        feature_fn = self.backbone.features
+        max_way = self.max_way
+        loop = scan_train_loop(
+            lambda d, params, support, query, chan_idx: episode_loss(
+                feature_fn, params, support, query, max_way,
+                deltas=d, plan=policy, chan_idx=chan_idx),
+            self.optimizer, iters)
+
+        def run(params, deltas, opt_state, support, query, chan_idx):
+            return loop(deltas, opt_state, params, support, query, chan_idx)
+
+        return run
+
+    def scan_steps(self, policy: SparseUpdatePolicy, iters: int):
+        """The whole fine-tune loop as one compiled call (keyed on policy
+        structure + iters, carries donated).
+
+        run(params, deltas, opt_state, support, query, chan_idx) ->
+        (deltas, opt_state, losses) with losses shaped (iters,): one
+        dispatch and one loss transfer per adapt() instead of ``iters``.
+        """
+        key = (self._key(policy), int(iters))
+        if key not in self._scans:
+            self._scans[key] = jax.jit(
+                self._scan_run_fn(policy, int(iters)),
+                donate_argnums=(1, 2))
+        return self._scans[key]
+
+    def vmap_scan_steps(self, policy: SparseUpdatePolicy, iters: int,
+                        mode: Optional[str] = None):
+        """Fleet variant of :meth:`scan_steps`: support/query/chan_idx carry
+        a leading task axis, params broadcast, and the zero-initialised
+        delta/optimizer carries are created *inside* the compiled call —
+        run(params, supports, queries, chan_idxs) -> (deltas, opt_state,
+        losses), everything task-stacked.  N same-structure tasks fine-tune
+        in a single dispatch with no per-task host-side init.
+
+        ``mode``: ``"vmap"`` batches the task axis through every op (the
+        accelerator path — batched matmuls/convs fill the hardware);
+        ``"map"`` runs tasks as a sequential on-device loop in the same
+        single dispatch — on CPU, XLA lowers batched-*weight* convs (the
+        per-task delta kernels) poorly, so the loop is faster there.
+        Default: vmap on tpu/gpu, map on cpu.
+        """
+        if mode is None:
+            mode = "vmap" if jax.default_backend() in ("tpu", "gpu") else "map"
+        key = (self._key(policy), int(iters), mode)
+        if key not in self._vscans:
+            run = self._scan_run_fn(policy, int(iters))
+            init_deltas = self.backbone.init_deltas
+            optimizer = self.optimizer
+
+            def run_from_zero(params, support, query, chan_idx):
+                d = init_deltas(policy)
+                st = optimizer.init(d)
+                return run(params, d, st, support, query, chan_idx)
+
+            if mode == "vmap":
+                fleet = jax.vmap(run_from_zero, in_axes=(None, 0, 0, 0))
+            else:
+                def fleet(params, support, query, chan_idx):
+                    return jax.lax.map(
+                        lambda args: run_from_zero(params, *args),
+                        (support, query, chan_idx))
+
+            self._vscans[key] = jax.jit(fleet)
+        return self._vscans[key]
 
     def evaluate(self, policy: Optional[SparseUpdatePolicy]):
         from .protonet import episode_accuracy

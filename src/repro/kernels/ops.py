@@ -27,6 +27,49 @@ def fisher(a, g, *, block_d: int = 512, block_c: int = 256, interpret=None):
                          interpret=interpret)
 
 
+def _divisor_block(dim: int, pref: int) -> int:
+    """Largest block <= pref that tiles ``dim`` exactly (0 if none)."""
+    if dim <= pref:
+        return dim
+    b = pref
+    while b >= 8:
+        if dim % b == 0:
+            return b
+        b //= 2
+    return 0
+
+
+def fisher_auto(a, g, *, block_d: int = 512, block_c: int = 256):
+    """Fisher reduction with automatic kernel/oracle dispatch.
+
+    Routes (N, D, C) activation/gradient pairs through the fused Pallas
+    kernel whenever block sizes tiling (D, C) exist — interpret mode
+    off-TPU — and falls back to the jnp oracle for non-tileable shapes.
+    On the compiled Mosaic path the blocks must additionally be
+    lane-aligned (sublane multiple of 8, lane multiple of 128); unaligned
+    shapes use the oracle rather than failing at lowering time.  This is
+    the production entry point for the materialised-(a, g) probe;
+    ``fisher`` stays the explicit-block escape hatch.
+    """
+    if a.ndim != 3 or a.shape != g.shape:
+        raise ValueError(f"expected matching (N, D, C) operands, got "
+                         f"{a.shape} vs {g.shape}")
+    _, d, c = a.shape
+    bd, bc = _divisor_block(d, block_d), _divisor_block(c, block_c)
+    if not bd or not bc:
+        return _fisher_oracle(a, g)
+    if not _default_interpret() and (bd % 8 or bc % 128):
+        return _fisher_oracle(a, g)
+    return fisher(a, g, block_d=bd, block_c=bc)
+
+
+@jax.jit
+def _fisher_oracle(a, g):
+    from .ref import fisher_ref
+
+    return fisher_ref(a, g)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "interpret"),

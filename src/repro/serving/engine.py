@@ -12,8 +12,9 @@ cost.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,11 +66,16 @@ class ServeEngine:
         self.caches = T.init_caches(cfg, slots, max_len)
         self.slots = [_Slot() for _ in range(slots)]
         self.pos = np.zeros(slots, np.int32)
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.ticks = 0
-        self._decode = jax.jit(
-            lambda p, t, c, pos: T.decode_step(cfg, p, t, c, pos)
-        )
+
+        # greedy sampling happens inside the jitted step: each tick ships a
+        # (slots,) int32 vector to the host instead of (slots, vocab) logits
+        def decode(p, t, c, pos):
+            logits, c = T.decode_step(cfg, p, t, c, pos)
+            return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), c
+
+        self._decode = jax.jit(decode)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -77,7 +83,7 @@ class ServeEngine:
     def _admit(self) -> None:
         for i, sl in enumerate(self.slots):
             if sl.req is None and self.queue:
-                sl.req = self.queue.pop(0)
+                sl.req = self.queue.popleft()
                 sl.cursor = 0
                 self.pos[i] = 0
                 self.caches = _reset_slot_lens(self.caches, i)
@@ -95,20 +101,20 @@ class ServeEngine:
                 toks[i, 0] = int(sl.req.prompt[sl.cursor])
             else:
                 toks[i, 0] = sl.req.out[-1]
-        logits, self.caches = self._decode(
+        next_tok, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches,
             jnp.asarray(self.pos, jnp.int32),
         )
-        logits = np.asarray(logits[:, 0])
+        next_tok = np.asarray(next_tok)
         for i in live:
             sl = self.slots[i]
             self.pos[i] += 1
             if sl.cursor < len(sl.req.prompt):
                 sl.cursor += 1
                 if sl.cursor == len(sl.req.prompt):
-                    sl.req.out.append(int(np.argmax(logits[i])))
+                    sl.req.out.append(int(next_tok[i]))
             else:
-                sl.req.out.append(int(np.argmax(logits[i])))
+                sl.req.out.append(int(next_tok[i]))
             if len(sl.req.out) >= sl.req.max_new or self.pos[i] >= self.max_len - 1:
                 sl.req.done = True
                 self.slots[i] = _Slot()

@@ -1,0 +1,153 @@
+"""Device-resident adaptation engine: the scan-fused fine-tune loop must
+match the eager per-iteration loop, fleet adaptation (``adapt_many``) must
+match sequential ``adapt``, one scanned compile is shared across
+same-structure tasks, and a fused adapt() performs at most two blocking
+host transfers (probe scores + final losses)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, configs
+from repro.core import adapt as adapt_mod
+from repro.core import lm_backbone
+
+
+def _assert_trees_close(a, b, rtol=1e-4, atol=1e-5):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.fixture(scope="module")
+def cnn_session():
+    bb = api.backbone("tiny-cnn", in_res=32, batch_size=64)
+    return api.TinyTrainSession(bb, max_way=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cnn_tasks():
+    # episode sizes capped at the pads -> one padded shape for every task,
+    # so the fleet tests exercise the single-group stacked path
+    rng = np.random.default_rng(7)
+    return [api.sample_task(rng, dom, res=32, max_way=8,
+                            support_pad=64, query_pad=96,
+                            max_support_total=64, max_support_per_class=16)
+            for dom in ("glyphs", "stripes", "waves")]
+
+
+@pytest.fixture(scope="module")
+def lm_session():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    bb = lm_backbone(cfg, tokens_per_batch=32 * 16, batch_size=32)
+    return api.TinyTrainSession(bb, max_way=5, seed=0), cfg
+
+
+class TestScanMatchesEager:
+    def test_cnn(self, cnn_session, cnn_tasks):
+        task = cnn_tasks[0]
+        fused = cnn_session.adapt(task, api.RPI_ZERO, iters=6)
+        eager = cnn_session.adapt(task, api.RPI_ZERO, iters=6, fused=False)
+        # identical probe -> identical policy (structure and channels)
+        assert fused.policy.units == eager.policy.units
+        np.testing.assert_allclose(fused.losses, eager.losses,
+                                   rtol=1e-4, atol=1e-5)
+        _assert_trees_close(fused.deltas, eager.deltas)
+        assert fused.accuracy() == pytest.approx(eager.accuracy(), abs=1e-6)
+
+    def test_lm(self, lm_session):
+        session, cfg = lm_session
+        rng = np.random.default_rng(0)
+        task = api.sample_lm_task(rng, cfg.vocab, seq=16, max_way=5,
+                                  support_pad=32, query_pad=32)
+        fused = session.adapt(task, api.JETSON_NANO, iters=4)
+        eager = session.adapt(task, api.JETSON_NANO, iters=4, fused=False)
+        assert fused.policy.units == eager.policy.units
+        np.testing.assert_allclose(fused.losses, eager.losses,
+                                   rtol=1e-4, atol=1e-4)
+        _assert_trees_close(fused.deltas, eager.deltas,
+                            rtol=2e-3, atol=2e-4)  # bf16-tolerant
+
+    def test_fused_loss_trajectory_decreases(self, cnn_session, cnn_tasks):
+        a = cnn_session.adapt(cnn_tasks[0], api.RPI_ZERO, iters=8)
+        assert len(a.losses) == 8
+        assert a.losses[-1] < a.losses[0]
+        assert a.steps_per_sec > 0
+
+
+class TestFleetAdaptation:
+    def test_adapt_many_matches_sequential_cnn(self, cnn_session, cnn_tasks):
+        fleet = cnn_session.adapt_many(cnn_tasks, api.RPI_ZERO, iters=4)
+        seq = [cnn_session.adapt(t, api.RPI_ZERO, iters=4)
+               for t in cnn_tasks]
+        assert len(fleet) == len(cnn_tasks)
+        for f, s in zip(fleet, seq):
+            assert f.policy.units == s.policy.units
+            np.testing.assert_allclose(f.losses, s.losses,
+                                       rtol=1e-4, atol=1e-5)
+            _assert_trees_close(f.deltas, s.deltas)
+            assert f.accuracy() == pytest.approx(s.accuracy(), abs=1e-5)
+
+    def test_adapt_many_matches_sequential_lm(self, lm_session):
+        session, cfg = lm_session
+        rng = np.random.default_rng(3)
+        tasks = [api.sample_lm_task(rng, cfg.vocab, seq=16, max_way=5,
+                                    support_pad=32, query_pad=32)
+                 for _ in range(3)]
+        fleet = session.adapt_many(tasks, api.JETSON_NANO, iters=3)
+        seq = [session.adapt(t, api.JETSON_NANO, iters=3) for t in tasks]
+        for f, s in zip(fleet, seq):
+            assert f.policy.units == s.policy.units
+            np.testing.assert_allclose(f.losses, s.losses,
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_adapt_many_rejects_static_channel_modes(self, cnn_session,
+                                                     cnn_tasks):
+        with pytest.raises(ValueError, match="static channel mode"):
+            cnn_session.adapt_many(cnn_tasks, api.RPI_ZERO,
+                                   criterion="random", iters=2)
+
+    def test_adapt_many_empty(self, cnn_session):
+        assert cnn_session.adapt_many([], api.RPI_ZERO) == []
+
+
+class TestCompileAndTransferBudget:
+    def test_one_scan_compile_shared_across_tasks(self):
+        """Same policy structure + iters -> exactly one scanned compile,
+        reused by every subsequent task (and by the fleet path's vmap
+        cache, counted separately)."""
+        bb = api.backbone("tiny-cnn", in_res=32, batch_size=64)
+        session = api.TinyTrainSession(bb, max_way=8, seed=0)
+        rng = np.random.default_rng(11)
+        t1, t2 = (api.sample_task(rng, "blobs", res=32, max_way=8,
+                                  support_pad=64, query_pad=96)
+                  for _ in range(2))
+        a1 = session.adapt(t1, api.RPI_ZERO, iters=3)
+        assert len(session.step_cache._scans) == 1
+        session.adapt(t2, api.RPI_ZERO, iters=3,
+                      policy_override=a1.policy)
+        assert len(session.step_cache._scans) == 1
+        assert session.compiled_steps() == 1
+        # different iters is a different scanned program
+        session.adapt(t2, api.RPI_ZERO, iters=2,
+                      policy_override=a1.policy)
+        assert len(session.step_cache._scans) == 2
+
+    def test_fused_adapt_two_host_transfers(self, cnn_session, cnn_tasks):
+        # warm-up so the timed-path compiles don't hide extra syncs
+        cnn_session.adapt(cnn_tasks[1], api.RPI_ZERO, iters=3)
+        adapt_mod.reset_host_sync_count()
+        a = cnn_session.adapt(cnn_tasks[1], api.RPI_ZERO, iters=3)
+        assert adapt_mod.host_sync_count() <= 2
+        assert a.host_transfers == 2
+
+    def test_eager_adapt_syncs_every_iteration(self, cnn_session, cnn_tasks):
+        adapt_mod.reset_host_sync_count()
+        a = cnn_session.adapt(cnn_tasks[1], api.RPI_ZERO, iters=3,
+                              fused=False)
+        assert adapt_mod.host_sync_count() == 1 + 3  # probe + per-iter
+        assert a.host_transfers == 4

@@ -79,9 +79,10 @@ def test_step_cache_reuses_compiles(tiny_cnn):
                          Budget(mem_bytes=512e3, compute_frac=0.3),
                          opt, iters=2, max_way=8, step_cache=cache)
         policies.append(res.policy)
-    # same structure -> exactly one jitted step retained
+    # same structure -> exactly one jitted (scanned) step retained
     keys = {cache._key(p) for p in policies}
-    assert len(cache._steps) == len(keys)
+    assert len(cache._scans) == len(keys)
+    assert len(cache._steps) == 0  # fused default never builds eager steps
 
 
 def test_trainer_failure_recovery(tmp_path):
