@@ -16,8 +16,11 @@ The online stage is device-resident: ``adapt()`` compiles the whole
 fine-tune loop into one scanned dispatch (two blocking host transfers per
 task — probe scores and final losses; pass ``fused=False`` for the eager
 per-iteration loop), and ``sess.adapt_many(tasks, profile)`` adapts a
-fleet of same-shaped tasks in O(#distinct policy structures) compiled
-calls with a single batched Fisher probe per episode shape.
+heterogeneous fleet in O(#buckets x #policy-structures) compiled calls:
+episodes are padded to canonical bucket shapes (masked rows contribute
+exactly zero), probed in one batched dispatch per bucket, and optionally
+sharded across the data axes of a ``jax.sharding`` mesh
+(``adapt_many(..., mesh=mesh)``) with the frozen params replicated.
 
 Backbones and criteria are string-keyed registries, so a new scenario is
 one ``register_backbone``/``register_criterion`` call, not a new script.

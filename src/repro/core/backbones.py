@@ -37,11 +37,14 @@ class Backbone:
     fisher_from_grads: Callable[[Any, int], Tuple[np.ndarray, Dict]]
     init_deltas: Callable[[SparseUpdatePolicy], Any]
     weight_l2: Callable[[Params], Dict[Tuple[int, str], np.ndarray]]
-    # device-side Eq. 2 reduction: tap-grads -> {(layer, kind): Δ_o} without
-    # leaving the accelerator (the host then fetches O(L·C) instead of
-    # O(L·B·C)).  Optional so external Backbones keep working; the engine
-    # falls back to fisher_from_grads when absent.
-    fisher_reduce: Optional[Callable[[Any, jax.Array], Dict]] = None
+    # device-side Eq. 2 reduction: fisher_reduce(tap_grads, n, mask=None)
+    # -> {(layer, kind): Δ_o} without leaving the accelerator (the host
+    # then fetches O(L·C) instead of O(L·B·C)).  ``n`` is the valid-sample
+    # count; ``mask`` is an optional (B,) per-example validity mask so
+    # bucket-padded episodes contribute exactly zero for padded rows
+    # (mask-weighted normalisation).  Optional so external Backbones keep
+    # working; the engine falls back to fisher_from_grads when absent.
+    fisher_reduce: Optional[Callable[..., Dict]] = None
 
     def cost_by_key(self) -> Dict[Tuple[int, str], UnitCost]:
         return {(c.layer, c.kind): c for c in self.unit_costs}
@@ -180,17 +183,24 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
                     out[(lid, "moe")] = np.sqrt((wg**2).sum((1, 2)))
         return out
 
-    def fisher_reduce(tg, n):
+    def fisher_reduce(tg, n, mask=None):
+        # mask-weighted batch reduction: padded episode rows (mask 0)
+        # contribute exactly zero regardless of their tap gradients, and
+        # the normaliser is the valid count — scores are invariant to
+        # bucket padding and match the unpadded oracle.
+        w = None if mask is None else mask.astype(jnp.float32)[None, :, None]
         chans: Dict[Tuple[int, str], jax.Array] = {}
         for gi, (_, ids) in enumerate(groups):
             mk, fk, _, _ = _lm_group_kinds(cfg, gi)
             gm = tg[f"g{gi}"]["mixer"].astype(jnp.float32)  # (L, B, C)
-            d_mix = jnp.sum(gm * gm, axis=1) / (2.0 * n)  # (L, C)
+            g2 = gm * gm if w is None else gm * gm * w
+            d_mix = jnp.sum(g2, axis=1) / (2.0 * n)  # (L, C)
             for j, lid in enumerate(ids):
                 chans[(lid, mk)] = d_mix[j]
             if fk != "none":
                 gf = tg[f"g{gi}"]["ffn"].astype(jnp.float32)
-                d_ffn = jnp.sum(gf * gf, axis=1) / (2.0 * n)
+                g2 = gf * gf if w is None else gf * gf * w
+                d_ffn = jnp.sum(g2, axis=1) / (2.0 * n)
                 for j, lid in enumerate(ids):
                     chans[(lid, fk)] = d_ffn[j]
         return chans
@@ -268,10 +278,13 @@ def cnn_backbone(cfg: E.CnnConfig, batch_size: int) -> Backbone:
             for i, p in enumerate(params)
         }
 
-    def fisher_reduce(tg, n):
+    def fisher_reduce(tg, n, mask=None):
+        # mask-weighted: padded support rows drop out of Eq. 2 exactly
+        w = None if mask is None else mask.astype(jnp.float32)[:, None]
         return {
-            (i, "conv"): jnp.sum(jnp.square(g.astype(jnp.float32)), axis=0)
-            / (2.0 * n)
+            (i, "conv"): jnp.sum(
+                jnp.square(g.astype(jnp.float32)) * (1.0 if w is None else w),
+                axis=0) / (2.0 * n)
             for i, g in enumerate(tg)
         }
 

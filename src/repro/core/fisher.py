@@ -59,16 +59,19 @@ def fisher_probe(
     return potentials, chans, dt
 
 
-def fisher_from_activations(a: jax.Array, g: jax.Array) -> jax.Array:
+def fisher_from_activations(a: jax.Array, g: jax.Array,
+                            mask: Optional[jax.Array] = None) -> jax.Array:
     """Direct Eq. 2 from materialised activations/gradients.
 
     a, g: (N, D, C) -> Δ: (C,).  Routed through the fused Pallas kernel
     (``repro.kernels.ops.fisher``, interpret mode off-TPU); shapes that no
-    block size tiles fall back to the jnp oracle.
+    block size tiles fall back to the jnp oracle.  ``mask`` is an optional
+    (N,) validity vector for bucket-padded batches: padded rows contribute
+    exactly zero and the normaliser is the valid count.
     """
     from ..kernels import ops
 
-    return ops.fisher_auto(a, g)
+    return ops.fisher_auto(a, g, mask=mask)
 
 
 def potentials_from_chans(unit_costs, chans: Dict) -> np.ndarray:

@@ -214,14 +214,16 @@ def _stack_trees(trees: List[Any]) -> Any:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
-def _episode_shape_key(t: Task) -> Tuple:
-    """Tasks are stackable iff their episode pytrees match exactly."""
-    key = []
-    for tree in (t.support, t.pseudo_query):
-        leaves, treedef = jax.tree_util.tree_flatten(tree)
-        key.append((treedef,
-                    tuple((l.shape, str(l.dtype)) for l in leaves)))
-    return tuple(key)
+def _tree_shape_key(tree: Any) -> Tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple((l.shape, str(l.dtype)) for l in leaves))
+
+
+def _episode_shape_key(sup: Any, pq: Any) -> Tuple:
+    """Episodes are stackable iff their (support, pseudo-query) pytrees
+    match exactly; with bucketing the key is computed on the *padded*
+    episodes, so any way/shot mix inside one bucket shares it."""
+    return (_tree_shape_key(sup), _tree_shape_key(pq))
 
 
 def _group_indices(keys: List[Any]) -> Dict[Any, List[int]]:
@@ -229,6 +231,71 @@ def _group_indices(keys: List[Any]) -> Dict[Any, List[int]]:
     for i, k in enumerate(keys):
         groups.setdefault(k, []).append(i)
     return groups
+
+
+# Bucketed episode padding: heterogeneous way/shot traffic is padded up to
+# a small set of canonical row counts (next power of two, floored) so a
+# fleet of arbitrary episode sizes compiles O(#buckets) programs instead of
+# O(#distinct shapes).  Padded rows carry label -1 — the episode loss, the
+# accuracy mask and the Fisher reduction all treat them as invisible, so
+# padding changes no result, only the compiled shape.
+_MIN_BUCKET_ROWS = 8
+
+
+def _bucket_rows(n: int, floor: int = _MIN_BUCKET_ROWS) -> int:
+    """Canonical bucket size: next power of two >= n (>= floor)."""
+    b = max(int(floor), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pad_episode_rows(ep: Dict[str, jax.Array], rows: int
+                      ) -> Dict[str, jax.Array]:
+    """Pad every episode leaf to ``rows`` along axis 0.
+
+    ``episode_labels`` pads with -1 (the validity-mask sentinel shared by
+    the episode loss, accuracy and Fisher reduction); data leaves pad with
+    zeros.  A no-op when the episode already sits on the bucket boundary.
+    """
+    out: Dict[str, jax.Array] = {}
+    for k, v in ep.items():
+        n = int(v.shape[0])
+        if n == rows:
+            out[k] = v
+            continue
+        if n > rows:
+            raise ValueError(
+                f"episode leaf {k!r} has {n} rows > bucket {rows}")
+        width = [(0, rows - n)] + [(0, 0)] * (v.ndim - 1)
+        fill = -1 if k == "episode_labels" else 0
+        out[k] = jnp.pad(v, width, constant_values=fill)
+    return out
+
+
+def _bucket_episode(task: Task) -> Tuple[Any, Any]:
+    """(support, pseudo_query) of a task, padded to one shared bucket.
+
+    Both sets pad to the same row count because the Fisher taps are sized
+    once per episode and threaded through both forward passes.
+    """
+    rows = max(
+        int(v.shape[0])
+        for tree in (task.support, task.pseudo_query)
+        for v in jax.tree_util.tree_leaves(tree)
+    )
+    target = _bucket_rows(rows)
+    return (_pad_episode_rows(task.support, target),
+            _pad_episode_rows(task.pseudo_query, target))
+
+
+def _pad_task_axis(tree: Any, reps: int) -> Any:
+    """Pad a task-stacked pytree's leading axis by repeating the last task
+    (mesh-divisibility padding; the copies' results are sliced off before
+    the fetch)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.concatenate(
+            [x, jnp.repeat(x[-1:], reps, axis=0)]), tree)
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +433,8 @@ class TinyTrainSession:
         self._full_scans: Dict[int, Any] = {}
         self._tinytl_steps: Dict[int, Any] = {}
         self._tinytl_scans: Dict[Tuple[int, int], Any] = {}
+        # grouping summary of the most recent adapt_many() call
+        self.last_fleet_report: Dict[str, Any] = {}
 
     # -- telemetry ---------------------------------------------------------
 
@@ -447,15 +516,37 @@ class TinyTrainSession:
         iters: int = 40,
         shard_channels: int = 1,
         policy_override: Optional[SparseUpdatePolicy] = None,
+        bucket: bool = True,
+        mesh: Optional[Any] = None,
     ) -> List[Adaptation]:
-        """Fleet adaptation: N user tasks in O(#distinct structures) calls.
+        """Fleet adaptation: N user tasks in O(#buckets x #structures) calls.
 
-        Probes every task in one vmapped dispatch per support-shape group,
+        Probes every task in one vmapped dispatch per episode group,
         selects a policy per task, then groups tasks by policy *structure*
         and runs one vmap-of-scanned-steps call per group — support sets,
         pseudo-query sets and channel indices are stacked along a task
         axis while the frozen backbone params broadcast.  Returns one
         :class:`Adaptation` per task, in input order.
+
+        ``bucket=True`` (default) pads each task's support/pseudo-query
+        rows up to a canonical bucket size (next power of two), so
+        heterogeneous way/shot traffic groups by *bucket* instead of exact
+        shape: a 16-task mix with four (way, shot) combinations adapts in
+        O(#buckets x #policy-structures) compiled calls rather than one
+        per distinct shape.  Padded rows carry label -1 and contribute
+        exactly zero to the loss, gradients and Fisher scores.
+        ``bucket=False`` restores exact-shape grouping.
+
+        ``mesh``: an optional ``jax.sharding.Mesh``; each group's stacked
+        task axis is sharded across the mesh's data axes (every axis but
+        'model', per :class:`repro.dist.FleetShardingRules`) with the
+        frozen params replicated, so one host drives all local devices.
+        Groups pad their task axis to a multiple of the data size by
+        repeating the last task; the copies are sliced off before the
+        fetch.  Without a mesh the single-device paths are unchanged.
+
+        A summary of the grouping (buckets, policy structures, compiled
+        scans) is recorded in ``self.last_fleet_report``.
         """
         if not tasks:
             return []
@@ -467,6 +558,22 @@ class TinyTrainSession:
         prof = profile if isinstance(profile, DeviceProfile) else None
         method = criterion
 
+        from ..dist import context as dist_context
+
+        rules = None
+        params_run = self.params
+        if mesh is not None:
+            from ..dist.sharding import FleetShardingRules
+
+            rules = FleetShardingRules(mesh)
+            params_run = rules.place_replicated(self.params)
+
+        # bucket (or pass through) every episode once; keys come from the
+        # padded trees so one bucket serves any way/shot mix inside it
+        eps = [_bucket_episode(t) if bucket else (t.support, t.pseudo_query)
+               for t in tasks]
+        keys = [_episode_shape_key(sup, pq) for sup, pq in eps]
+
         fisher_dt = [0.0] * len(tasks)
         transfers = [0.0] * len(tasks)  # per-task share of group fetches
         # stacked episode pytrees keyed by task-index tuple, so the probe
@@ -477,10 +584,19 @@ class TinyTrainSession:
             key = tuple(idxs)
             if key not in stack_cache:
                 stack_cache[key] = (
-                    _stack_trees([tasks[i].support for i in idxs]),
-                    _stack_trees([tasks[i].pseudo_query for i in idxs]),
+                    _stack_trees([eps[i][0] for i in idxs]),
+                    _stack_trees([eps[i][1] for i in idxs]),
                 )
             return stack_cache[key]
+
+        def mesh_pad(n_real, *trees):
+            """Pad task axes to the mesh data size and place on devices."""
+            if rules is None:
+                return trees
+            reps = rules.padded_count(n_real) - n_real
+            if reps:
+                trees = tuple(_pad_task_axis(t, reps) for t in trees)
+            return tuple(rules.place_tasks(t) for t in trees)
 
         if policy_override is not None:
             policies = [policy_override] * len(tasks)
@@ -508,8 +624,7 @@ class TinyTrainSession:
                         step_cache=self.step_cache)
                     transfers[i] = float(tr)
             else:
-                shape_groups = _group_indices(
-                    [_episode_shape_key(t) for t in tasks])
+                shape_groups = _group_indices(keys)
                 for idxs in shape_groups.values():
                     sup, pq = stacked(idxs)
                     ns = jnp.asarray([tasks[i].n_support for i in idxs],
@@ -517,9 +632,12 @@ class TinyTrainSession:
                     batch_pad = next(v.shape[1] for v in
                                      jax.tree_util.tree_leaves(sup))
                     taps = self.backbone.make_taps(batch_pad)
+                    sup, pq, ns = mesh_pad(len(idxs), sup, pq, ns)
+                    if rules is not None:
+                        taps = rules.place_replicated(taps)
                     t0 = time.perf_counter()
                     chans_all = _fetch(self.step_cache.probe_fisher_batch()(
-                        self.params, sup, pq, taps, ns))
+                        params_run, sup, pq, taps, ns))
                     dt = (time.perf_counter() - t0) / len(idxs)
                     for j, i in enumerate(idxs):
                         chans = {k: v[j] for k, v in chans_all.items()}
@@ -532,19 +650,28 @@ class TinyTrainSession:
                         fisher_dt[i] = dt
                         transfers[i] = 1.0 / len(idxs)
 
-        # one vmapped scan per (support shapes, policy structure) group
+        # one vmapped scan per (bucket, policy structure) group
         out: List[Optional[Adaptation]] = [None] * len(tasks)
         run_groups = _group_indices(
-            [(_episode_shape_key(t), self.step_cache._key(p))
-             for t, p in zip(tasks, policies)])
+            [(k, self.step_cache._key(p)) for k, p in zip(keys, policies)])
+        compiles_before = self.step_cache.fleet_scan_compiles()
         for idxs in run_groups.values():
             pol0 = policies[idxs[0]]
             sup, pq = stacked(idxs)
             ci = _stack_trees(
                 [self.step_cache.chan_idx_arrays(policies[i]) for i in idxs])
-            run = self.step_cache.vmap_scan_steps(pol0, iters)
-            t0 = time.perf_counter()
-            d_stack, _, loss_stack = run(self.params, sup, pq, ci)
+            n_real = len(idxs)
+            sup, pq, ci = mesh_pad(n_real, sup, pq, ci)
+            # publish the fleet mesh so vmap_scan_steps picks the
+            # shard_map path (task axis split across the mesh's data axes)
+            with dist_context.sharding_context(fleet_mesh=mesh):
+                run = self.step_cache.vmap_scan_steps(pol0, iters)
+                t0 = time.perf_counter()
+                d_stack, _, loss_stack = run(params_run, sup, pq, ci)
+            if rules is not None and rules.padded_count(n_real) != n_real:
+                d_stack = jax.tree_util.tree_map(
+                    lambda x: x[:n_real], d_stack)
+                loss_stack = loss_stack[:n_real]
             # one barrier fetch per group; per-task views are numpy slices
             d_host, losses = _fetch((d_stack, loss_stack))
             dt = (time.perf_counter() - t0) / len(idxs)
@@ -558,6 +685,17 @@ class TinyTrainSession:
                     host_transfers=transfers[i] + 1.0 / len(idxs))
                 out[i] = self._wrap(method, tasks[i], prof, res,
                                     budget=budget)
+        self.last_fleet_report = {
+            "tasks": len(tasks),
+            "bucketed": bucket,
+            "buckets": len(set(keys)),
+            "policy_structures": len({self.step_cache._key(p)
+                                      for p in policies}),
+            "groups": len(run_groups),
+            "scan_compiles": (self.step_cache.fleet_scan_compiles()
+                              - compiles_before),
+            "mesh_axes": dict(mesh.shape) if mesh is not None else None,
+        }
         return out
 
     def evaluate(self, task: Task, adaptation: Optional[Adaptation] = None

@@ -171,12 +171,25 @@ class EpisodeStepCache:
         the O(L·C) channel scores ever cross to the host, not the full
         (L, B, C) tap-gradient tree.  ``n`` is the valid-sample count,
         traced so episodes with different shot counts share the compile.
+
+        The per-example validity mask (support labels >= 0) is threaded
+        into the reduction, so bucket-padded episodes score exactly like
+        their unpadded originals: padded rows contribute zero and the
+        1/(2N) normaliser is the valid count, not the padded batch.
         """
+        import inspect
+
         from .protonet import episode_loss
 
         feature_fn = self.backbone.features
         max_way = self.max_way
         reduce = self.backbone.fisher_reduce
+        # external Backbones may still implement the pre-mask two-arg
+        # reduction; only thread the validity mask when it is accepted
+        try:
+            takes_mask = len(inspect.signature(reduce).parameters) >= 3
+        except (TypeError, ValueError):
+            takes_mask = True
 
         def f(params, support, query, taps):
             return episode_loss(feature_fn, params, support, query,
@@ -184,7 +197,10 @@ class EpisodeStepCache:
 
         def pf(params, support, query, taps, n):
             g = jax.grad(f, argnums=3)(params, support, query, taps)
-            return reduce(g, n)
+            if not takes_mask:
+                return reduce(g, n)
+            mask = (support["episode_labels"] >= 0).astype(jnp.float32)
+            return reduce(g, n, mask)
 
         return pf
 
@@ -209,6 +225,18 @@ class EpisodeStepCache:
     def _key(policy: SparseUpdatePolicy):
         return (policy.horizon,
                 tuple((u.layer, u.kind, u.n_channels) for u in policy.units))
+
+    def fleet_scan_compiles(self) -> int:
+        """Total compiled fleet-scan programs (every (bucket shape, task
+        count, policy structure, iters, mode) variant XLA actually built —
+        the quantity the O(#buckets x #structures) contract bounds)."""
+        total = 0
+        for f in self._vscans.values():
+            try:
+                total += f._cache_size()
+            except Exception:  # jit cache introspection is version-coupled
+                total += 1
+        return total
 
     @staticmethod
     def chan_idx_arrays(policy: SparseUpdatePolicy):
@@ -285,12 +313,30 @@ class EpisodeStepCache:
         accelerator path — batched matmuls/convs fill the hardware);
         ``"map"`` runs tasks as a sequential on-device loop in the same
         single dispatch — on CPU, XLA lowers batched-*weight* convs (the
-        per-task delta kernels) poorly, so the loop is faster there.
-        Default: vmap on tpu/gpu, map on cpu.
+        per-task delta kernels) poorly, so the loop is faster there;
+        ``"shard"`` splits the task axis across the data axes of the mesh
+        published via ``dist.context`` (``fleet_mesh``) with ``shard_map``
+        — params replicate, episodes/deltas/opt-state shard — and runs the
+        backend-appropriate single-device path (vmap/map) on each shard,
+        so one host drives every local device in one dispatch.  Default:
+        shard when a fleet mesh is published, else vmap on tpu/gpu, map
+        on cpu.
+
+        Episodes may be bucket-padded: padded rows carry label -1, which
+        the episode loss masks out, so the batched loss/gradients are
+        identical to the unpadded per-task computation.
         """
+        from ..dist import context as dist_context
+
+        mesh = dist_context.get("fleet_mesh")
         if mode is None:
-            mode = "vmap" if jax.default_backend() in ("tpu", "gpu") else "map"
-        key = (self._key(policy), int(iters), mode)
+            if mesh is not None:
+                mode = "shard"
+            else:
+                mode = ("vmap" if jax.default_backend() in ("tpu", "gpu")
+                        else "map")
+        key = (self._key(policy), int(iters), mode,
+               mesh if mode == "shard" else None)
         if key not in self._vscans:
             run = self._scan_run_fn(policy, int(iters))
             init_deltas = self.backbone.init_deltas
@@ -301,13 +347,39 @@ class EpisodeStepCache:
                 st = optimizer.init(d)
                 return run(params, d, st, support, query, chan_idx)
 
+            def map_fleet(params, support, query, chan_idx):
+                return jax.lax.map(
+                    lambda args: run_from_zero(params, *args),
+                    (support, query, chan_idx))
+
+            vmap_fleet = jax.vmap(run_from_zero, in_axes=(None, 0, 0, 0))
+
             if mode == "vmap":
-                fleet = jax.vmap(run_from_zero, in_axes=(None, 0, 0, 0))
+                fleet = vmap_fleet
+            elif mode == "map":
+                fleet = map_fleet
             else:
-                def fleet(params, support, query, chan_idx):
-                    return jax.lax.map(
-                        lambda args: run_from_zero(params, *args),
-                        (support, query, chan_idx))
+                from ..dist.sharding import _dp_axes
+
+                local = (vmap_fleet
+                         if jax.default_backend() in ("tpu", "gpu")
+                         else map_fleet)
+                dp, _ = _dp_axes(mesh)  # FleetShardingRules's convention
+                if not dp:
+                    # pure-'model' mesh: no data axis to split tasks over
+                    # (FleetShardingRules replicates too) — run locally
+                    fleet = local
+                else:
+                    from jax.experimental.shard_map import shard_map
+                    from jax.sharding import PartitionSpec as P
+
+                    ts = P(dp if len(dp) > 1 else dp[0])  # task-axis prefix
+                    # callers pad the stacked task axis to a multiple of
+                    # the data size (FleetShardingRules.padded_count), so
+                    # every shard sees an equal local slice
+                    fleet = shard_map(
+                        local, mesh=mesh, in_specs=(P(), ts, ts, ts),
+                        out_specs=ts, check_rep=False)
 
             self._vscans[key] = jax.jit(fleet)
         return self._vscans[key]

@@ -4,4 +4,4 @@ dispatch layout, sequence-parallel attention) so the same forward functions
 serve single-host CPU runs and sharded meshes; :class:`ShardingRules` plans
 TP/DP placement for params, deltas, batches and caches."""
 from . import context  # noqa: F401
-from .sharding import ShardingRules  # noqa: F401
+from .sharding import FleetShardingRules, ShardingRules  # noqa: F401

@@ -30,6 +30,92 @@ from ..utils import named_tree_map
 Spec = Tuple[Any, ...]
 
 
+def _dp_axes(mesh: Any) -> Tuple[Tuple[str, ...], int]:
+    """(data axes, data size) of a mesh: every axis but 'model'.
+
+    A pure-data mesh (no 'model' axis) uses all of its axes; this is the
+    shared convention between :class:`ShardingRules` (batch placement) and
+    :class:`FleetShardingRules` (task-axis placement)."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    if not axes:
+        return (), 1
+    shape = dict(mesh.shape)
+    return axes, int(np.prod([shape[a] for a in axes]))
+
+
+class FleetShardingRules:
+    """Task-axis data-parallel placement for fleet adaptation.
+
+    ``TinyTrainSession.adapt_many`` stacks N tasks' episodes, channel
+    indices, delta packs and optimizer state along a leading *task* axis;
+    these rules shard that axis across the mesh's data axes while the
+    frozen backbone params replicate — one host drives every local device
+    with a single dispatch per (bucket, policy-structure) group.
+
+    Specs follow the same conventions as :class:`ShardingRules`: a task
+    count that does not divide the data size is replicated rather than
+    erroring (callers pad the task axis with :meth:`padded_count` to avoid
+    that), and lowering to ``NamedSharding`` happens only at placement
+    time so the rules stay testable without devices.
+    """
+
+    def __init__(self, mesh: Any):
+        self.mesh = mesh
+        self.dp, self.dp_size = _dp_axes(mesh)
+
+    # -- specs -------------------------------------------------------------
+
+    def task_spec(self, ndim: int, n_tasks: int) -> Spec:
+        """Leading-axis spec for one task-stacked leaf; () when the task
+        count does not divide the data size (replicate, never error)."""
+        if not ndim or not self.dp or n_tasks % self.dp_size:
+            return ()
+        axis = self.dp if len(self.dp) > 1 else self.dp[0]
+        return (axis,) + tuple(None for _ in range(ndim - 1))
+
+    def padded_count(self, n_tasks: int) -> int:
+        """Smallest multiple of the data size >= ``n_tasks``."""
+        if self.dp_size <= 1:
+            return n_tasks
+        return -(-n_tasks // self.dp_size) * self.dp_size
+
+    # -- tree placement (requires a real mesh) -----------------------------
+
+    def _named(self, spec: Spec):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return NamedSharding(self.mesh, P(*spec))
+
+    def replicated(self, tree: Any) -> Any:
+        """Placement for broadcast operands (frozen params, shared taps)."""
+        import jax
+
+        return jax.tree_util.tree_map(lambda x: self._named(()), tree)
+
+    def tasks(self, tree: Any) -> Any:
+        """Placement for task-stacked operands (episodes, chan idx, ns)."""
+        import jax
+
+        def sh(x):
+            ndim = getattr(x, "ndim", 0)
+            n = int(x.shape[0]) if ndim else 0
+            return self._named(self.task_spec(ndim, n))
+
+        return jax.tree_util.tree_map(sh, tree)
+
+    def place_tasks(self, tree: Any) -> Any:
+        """``device_put`` a task-stacked pytree onto the mesh."""
+        import jax
+
+        return jax.device_put(tree, self.tasks(tree))
+
+    def place_replicated(self, tree: Any) -> Any:
+        """``device_put`` a broadcast pytree onto the mesh (replicated)."""
+        import jax
+
+        return jax.device_put(tree, self.replicated(tree))
+
+
 class ShardingRules:
     def __init__(self, cfg: ArchConfig, mesh: Any, *,
                  seq_parallel: bool = False):
@@ -38,8 +124,7 @@ class ShardingRules:
         self.seq_parallel = seq_parallel
         shape = dict(mesh.shape)
         self.tp = int(shape.get("model", 1))
-        self.dp = tuple(a for a in mesh.axis_names if a != "model")
-        self.dp_size = int(np.prod([shape[a] for a in self.dp])) if self.dp else 1
+        self.dp, self.dp_size = _dp_axes(mesh)
 
     # -- divisibility guards ----------------------------------------------
 

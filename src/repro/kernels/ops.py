@@ -21,8 +21,23 @@ def _default_interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "block_c", "interpret"))
-def fisher(a, g, *, block_d: int = 512, block_c: int = 256, interpret=None):
+def fisher(a, g, *, mask=None, block_d: int = 512, block_c: int = 256,
+           interpret=None):
+    """Fused Eq. 2 reduction; ``mask`` is an optional (N,) validity vector.
+
+    With a mask, padded rows are zeroed before the kernel and the
+    normaliser is rescaled from the padded batch to the valid count
+    (mask-weighted normalisation) — the result matches the unpadded
+    oracle exactly, so bucket-padded probes score like unpadded ones.
+    """
     interpret = _default_interpret() if interpret is None else interpret
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        a = a * m[:, None, None].astype(a.dtype)
+        out = fisher_pallas(a, g, block_d=block_d, block_c=block_c,
+                            interpret=interpret)
+        # kernel bakes 1/(2·N_pad); rescale to 1/(2·n_valid)
+        return out * (a.shape[0] / jnp.maximum(jnp.sum(m), 1.0))
     return fisher_pallas(a, g, block_d=block_d, block_c=block_c,
                          interpret=interpret)
 
@@ -39,7 +54,7 @@ def _divisor_block(dim: int, pref: int) -> int:
     return 0
 
 
-def fisher_auto(a, g, *, block_d: int = 512, block_c: int = 256):
+def fisher_auto(a, g, *, mask=None, block_d: int = 512, block_c: int = 256):
     """Fisher reduction with automatic kernel/oracle dispatch.
 
     Routes (N, D, C) activation/gradient pairs through the fused Pallas
@@ -50,6 +65,10 @@ def fisher_auto(a, g, *, block_d: int = 512, block_c: int = 256):
     shapes use the oracle rather than failing at lowering time.  This is
     the production entry point for the materialised-(a, g) probe;
     ``fisher`` stays the explicit-block escape hatch.
+
+    ``mask`` is an optional (N,) per-row validity vector for bucket-padded
+    batches: masked rows contribute zero and the 1/(2N) normaliser uses
+    the valid count, so scores match the unpadded oracle.
     """
     if a.ndim != 3 or a.shape != g.shape:
         raise ValueError(f"expected matching (N, D, C) operands, got "
@@ -57,17 +76,23 @@ def fisher_auto(a, g, *, block_d: int = 512, block_c: int = 256):
     _, d, c = a.shape
     bd, bc = _divisor_block(d, block_d), _divisor_block(c, block_c)
     if not bd or not bc:
-        return _fisher_oracle(a, g)
+        return _fisher_oracle(a, g, mask)
     if not _default_interpret() and (bd % 8 or bc % 128):
-        return _fisher_oracle(a, g)
-    return fisher(a, g, block_d=bd, block_c=bc)
+        return _fisher_oracle(a, g, mask)
+    return fisher(a, g, mask=mask, block_d=bd, block_c=bc)
 
 
 @jax.jit
-def _fisher_oracle(a, g):
+def _fisher_oracle(a, g, mask=None):
     from .ref import fisher_ref
 
-    return fisher_ref(a, g)
+    if mask is None:
+        return fisher_ref(a, g)
+    # same zero-rows-then-rescale route as the kernel path: one reference
+    # implementation of the Eq. 2 math
+    m = mask.astype(jnp.float32)
+    return fisher_ref(a * m[:, None, None].astype(a.dtype), g) * (
+        a.shape[0] / jnp.maximum(jnp.sum(m), 1.0))
 
 
 @functools.partial(

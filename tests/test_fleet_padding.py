@@ -1,0 +1,146 @@
+"""Property tests for heterogeneous fleet adaptation (bucketed padding).
+
+The contract under test: padding episodes up to canonical bucket sizes is
+*invisible* — a bucketed ``adapt_many`` over a random way/shot mix must
+select the same policies, produce the same deltas/losses and the same
+query accuracies as sequential per-task ``adapt`` on the unpadded
+episodes, and the Fisher probe must be invariant to padding rows.  Runs
+under real hypothesis when installed, else the deterministic conftest
+shim.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import api
+from repro.core.backbones import cnn_backbone
+from repro.core.session import (
+    _bucket_episode, _bucket_rows, _pad_episode_rows,
+)
+from repro.models import edge_cnn as E
+
+
+def _assert_trees_close(a, b, rtol=1e-4, atol=1e-5):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+# lazy module singleton rather than a pytest fixture: the hypothesis shim's
+# @given wrapper hides the test signature, so fixtures cannot be injected
+# into property tests (and real hypothesis prefers non-fixture state too)
+_SESSION = None
+
+
+def micro_session():
+    # one IR block at tiny resolution: compile times stay trivial while the
+    # grouping/padding logic sees the full probe -> select -> scan pipeline
+    global _SESSION
+    if _SESSION is None:
+        cfg = E.build_ir_net("micro", [(1, 8, 1, 2, 3)], 1.0, 8, 0, 12)
+        bb = cnn_backbone(cfg, batch_size=8)
+        _SESSION = api.TinyTrainSession(bb, max_way=4, seed=0)
+    return _SESSION
+
+
+def _het_task(rng, way, shots, domain="stripes"):
+    """One unpadded task with a chosen (way, shot) point — raw episode
+    shapes, so only bucketing can make tasks stackable."""
+    return api.sample_task(
+        rng, domain, res=12, max_way=4, min_way=way,
+        support_pad=None, query_pad=None,
+        max_support_total=way * shots, max_support_per_class=shots,
+        query_per_class=2)
+
+
+class TestBucketedFleetMatchesPerTask:
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           way_a=st.sampled_from([2, 3, 4]),
+           way_b=st.sampled_from([2, 3, 4]),
+           shots_a=st.integers(min_value=1, max_value=5),
+           shots_b=st.integers(min_value=1, max_value=5))
+    def test_accuracies_and_deltas_match(self, seed, way_a, way_b,
+                                         shots_a, shots_b):
+        session = micro_session()
+        rng = np.random.default_rng(seed)
+        tasks = [_het_task(rng, way_a, shots_a),
+                 _het_task(rng, way_b, shots_b),
+                 _het_task(rng, way_a, shots_b, domain="spots")]
+        fleet = session.adapt_many(tasks, api.RPI_ZERO, iters=3)
+        seq = [session.adapt(t, api.RPI_ZERO, iters=3) for t in tasks]
+        for f, s in zip(fleet, seq):
+            assert f.policy.units == s.policy.units
+            np.testing.assert_allclose(f.losses, s.losses,
+                                       rtol=1e-4, atol=1e-5)
+            _assert_trees_close(f.deltas, s.deltas)
+            assert f.accuracy() == pytest.approx(s.accuracy(), abs=1e-5)
+        rep = session.last_fleet_report
+        assert rep["groups"] <= rep["buckets"] * rep["policy_structures"]
+        assert rep["scan_compiles"] <= rep["groups"]
+
+
+class TestFisherPaddingInvariance:
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           way=st.sampled_from([2, 3, 4]),
+           shots=st.integers(min_value=1, max_value=5),
+           extra=st.integers(min_value=1, max_value=9))
+    def test_probe_scores_invariant_to_padding_rows(self, seed, way,
+                                                    shots, extra):
+        """Eq. 2 channel scores from a padded episode == unpadded scores:
+        padded rows carry zero mask weight and the normaliser is the valid
+        count, not the padded batch."""
+        session = micro_session()
+        rng = np.random.default_rng(seed)
+        task = _het_task(rng, way, shots)
+        bb = session.backbone
+        cache = session.step_cache
+        n = task.n_support
+        rows = int(task.support["episode_labels"].shape[0])
+
+        def probe(sup, pq):
+            batch = int(sup["episode_labels"].shape[0])
+            taps = bb.make_taps(batch)
+            return jax.tree_util.tree_map(
+                np.asarray,
+                cache.probe_fisher()(session.params, sup, pq, taps,
+                                     np.float32(n)))
+
+        want = probe(task.support, task.pseudo_query)
+        got = probe(_pad_episode_rows(task.support, rows + extra),
+                    _pad_episode_rows(task.pseudo_query, rows + extra))
+        assert set(got) == set(want)
+        for k in want:
+            np.testing.assert_allclose(got[k], want[k],
+                                       rtol=1e-4, atol=1e-7)
+
+
+class TestBucketHelpers:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=4096))
+    def test_bucket_rows_is_canonical(self, n):
+        b = _bucket_rows(n)
+        assert b >= max(n, 8)
+        assert b & (b - 1) == 0  # power of two
+        assert b == _bucket_rows(b)  # idempotent: buckets are fixed points
+
+    def test_bucket_episode_pads_labels_with_sentinel(self):
+        rng = np.random.default_rng(0)
+        task = _het_task(rng, 3, 3)
+        sup, pq = _bucket_episode(task)
+        rows = int(sup["episode_labels"].shape[0])
+        assert rows == _bucket_rows(
+            int(task.support["episode_labels"].shape[0]))
+        assert pq["episode_labels"].shape[0] == rows
+        valid = int(task.support["episode_labels"].shape[0])
+        assert np.all(np.asarray(sup["episode_labels"][valid:]) == -1)
+        assert np.all(np.asarray(sup["images"][valid:]) == 0)
+        # task itself is untouched (padding works on copies)
+        assert task.support["episode_labels"].shape[0] == valid

@@ -1,0 +1,141 @@
+"""Mesh-sharded fleet adaptation: ``adapt_many(mesh=...)`` must match the
+single-device path bit-for-tolerance on an 8-way CPU mesh, and a 16-task
+heterogeneous fleet must stay inside the O(#buckets x #policy-structures)
+compiled-scan contract.
+
+The parity check needs 8 host-platform devices (``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``, as the CI mesh job sets); when
+the current process has fewer devices it re-runs itself in a subprocess
+with the flag so the test works everywhere.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.backbones import cnn_backbone
+from repro.dist.sharding import FleetShardingRules
+from repro.models import edge_cnn as E
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _micro_session():
+    cfg = E.build_ir_net("micro", [(1, 8, 1, 2, 3)], 1.0, 8, 0, 12)
+    bb = cnn_backbone(cfg, batch_size=8)
+    return api.TinyTrainSession(bb, max_way=4, seed=0)
+
+
+def _het_tasks(rng, combos, n):
+    """n unpadded tasks cycling through (way, shots) combos."""
+    tasks = []
+    for i in range(n):
+        way, shots = combos[i % len(combos)]
+        tasks.append(api.sample_task(
+            rng, "stripes", res=12, max_way=4, min_way=way,
+            support_pad=None, query_pad=None,
+            max_support_total=way * shots, max_support_per_class=shots,
+            query_per_class=2))
+    return tasks
+
+
+def _run_mesh_parity():
+    """adapt_many on an 8-way data mesh == single-device adapt_many."""
+    session = _micro_session()
+    rng = np.random.default_rng(0)
+    tasks = _het_tasks(rng, [(2, 2), (3, 3), (4, 3), (2, 7)], 8)
+    mesh = jax.make_mesh((8,), ("data",))
+    fleet_m = session.adapt_many(tasks, api.RPI_ZERO, iters=2, mesh=mesh)
+    rep_m = dict(session.last_fleet_report)
+    fleet_1 = session.adapt_many(tasks, api.RPI_ZERO, iters=2)
+    assert rep_m["mesh_axes"] == {"data": 8}
+    for m, s in zip(fleet_m, fleet_1):
+        assert m.policy.units == s.policy.units
+        np.testing.assert_allclose(m.losses, s.losses, rtol=1e-4, atol=1e-5)
+        assert abs(m.accuracy() - s.accuracy()) < 1e-5
+
+
+class TestMeshParity:
+    def test_adapt_many_mesh_matches_single_device(self):
+        if jax.device_count() >= 8:
+            _run_mesh_parity()
+            return
+        # re-run this module's parity body under the 8-device flag
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8")
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = (
+            os.path.join(_REPO, "src") + os.pathsep + _REPO
+            + os.pathsep + env.get("PYTHONPATH", ""))
+        code = ("import tests.test_fleet_sharding as t; "
+                "t._run_mesh_parity(); print('MESH_PARITY_OK')")
+        proc = subprocess.run(
+            [sys.executable, "-c", code], env=env, cwd=_REPO,
+            capture_output=True, text=True, timeout=900)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        assert "MESH_PARITY_OK" in proc.stdout
+
+
+class TestCompileBudget:
+    def test_16_task_heterogeneous_fleet_compile_bound(self):
+        """A 16-task fleet with 4 distinct (way, shot) combinations adapts
+        in <= #buckets x #policy-structures compiled scan programs — the
+        bucketed-padding contract (exact-shape grouping would need one per
+        distinct shape)."""
+        session = _micro_session()
+        rng = np.random.default_rng(1)
+        tasks = _het_tasks(rng, [(2, 2), (3, 3), (4, 3), (2, 7)], 16)
+        raw_shapes = {t.support["episode_labels"].shape[0] for t in tasks}
+        assert len(raw_shapes) >= 4  # genuinely heterogeneous traffic
+        before = session.step_cache.fleet_scan_compiles()
+        session.adapt_many(tasks, api.RPI_ZERO, iters=2)
+        rep = session.last_fleet_report
+        compiles = session.step_cache.fleet_scan_compiles() - before
+        bound = rep["buckets"] * rep["policy_structures"]
+        assert compiles <= bound, (compiles, rep)
+        assert rep["groups"] <= bound
+        # bucketing actually coalesced shapes (not one bucket per shape)
+        assert rep["buckets"] < len(raw_shapes)
+
+    def test_exact_grouping_compiles_per_shape(self):
+        """bucket=False restores exact-shape grouping: one group per
+        distinct episode shape (the behaviour bucketing replaces)."""
+        session = _micro_session()
+        rng = np.random.default_rng(2)
+        tasks = _het_tasks(rng, [(2, 2), (3, 3), (4, 3), (2, 7)], 8)
+        raw_shapes = {t.support["episode_labels"].shape[0] for t in tasks}
+        session.adapt_many(tasks, api.RPI_ZERO, iters=2, bucket=False)
+        rep = session.last_fleet_report
+        assert rep["buckets"] == len(raw_shapes)
+
+
+class TestFleetShardingRules:
+    def test_specs_without_devices(self):
+        """Specs are plain tuples computable against a mesh-shaped fake."""
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 4, "model": 2}
+
+        r = FleetShardingRules(FakeMesh())
+        assert r.dp == ("data",) and r.dp_size == 4
+        assert r.task_spec(3, 8) == ("data", None, None)
+        assert r.task_spec(3, 6) == ()  # indivisible -> replicate
+        assert r.task_spec(0, 8) == ()
+        assert r.padded_count(6) == 8
+        assert r.padded_count(8) == 8
+
+    def test_pure_model_mesh_replicates(self):
+        class FakeMesh:
+            axis_names = ("model",)
+            shape = {"model": 4}
+
+        r = FleetShardingRules(FakeMesh())
+        assert r.dp == () and r.dp_size == 1
+        assert r.task_spec(2, 8) == ()
+        assert r.padded_count(5) == 5

@@ -25,6 +25,35 @@ class TestFisherKernel:
         np.testing.assert_allclose(np.array(got), np.array(want),
                                    rtol=tol, atol=tol)
 
+    @pytest.mark.parametrize("n_valid,n_pad", [(3, 8), (4, 4), (5, 16)])
+    def test_masked_padding_matches_unpadded_oracle(self, n_valid, n_pad):
+        """Mask-weighted normalisation: a bucket-padded batch (zero mask on
+        the padding rows) must score exactly like the unpadded batch — the
+        padded rows drop out of the sum AND of the 1/(2N) normaliser, even
+        when the padding rows hold garbage rather than zeros."""
+        d, c = 256, 128
+        a = jax.random.normal(jax.random.PRNGKey(0), (n_pad, d, c))
+        g = jax.random.normal(jax.random.PRNGKey(1), (n_pad, d, c)) * 0.1
+        mask = (jnp.arange(n_pad) < n_valid).astype(jnp.float32)
+        want = ref.fisher_ref(a[:n_valid], g[:n_valid])
+        got_kernel = ops.fisher(a, g, mask=mask, block_d=256, block_c=128)
+        got_auto = ops.fisher_auto(a, g, mask=mask)
+        np.testing.assert_allclose(np.array(got_kernel), np.array(want),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.array(got_auto), np.array(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_masked_oracle_fallback_matches(self):
+        """Non-tileable shapes route the masked reduction through the jnp
+        oracle; same mask-weighted result."""
+        a = jax.random.normal(jax.random.PRNGKey(2), (6, 7, 5))
+        g = jax.random.normal(jax.random.PRNGKey(3), (6, 7, 5))
+        mask = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+        got = ops.fisher_auto(a, g, mask=mask)
+        want = ref.fisher_ref(a[:4], g[:4])
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=1e-5, atol=1e-6)
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("cfg", [
