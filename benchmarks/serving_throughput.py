@@ -1,0 +1,150 @@
+"""Serving-engine throughput: eager per-tick dispatch vs fused ``scan_ticks``.
+
+Measures steady-state (post-compile) tokens/sec for the two serving-tick
+execution paths:
+
+- ``eager``: one jitted dispatch + one blocking (slots,) token fetch per
+  engine tick (the pre-fusion behaviour, kept as ``fused=False``);
+- ``fused``: ``chunk`` ticks per dispatch via the device-resident
+  ``lax.scan`` (admit/evict on device), per-tick events transferred once
+  per chunk.
+
+Both paths decode identical request streams through the same weights, so
+the comparison isolates exactly what device residency removes: per-tick
+dispatch latency and the per-tick blocking host sync.
+
+Results are appended to ``BENCH_serving.json`` (one record per run) so CI
+accumulates a perf trajectory per PR, mirroring ``BENCH_adaptation.json``.
+
+    PYTHONPATH=src python -m benchmarks.serving_throughput --quick
+"""
+from __future__ import annotations
+
+import argparse
+import platform
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.adaptation_throughput import write_record
+from repro import configs
+from repro.core import adapt as adapt_mod
+from repro.models import transformer as T
+from repro.models.api import ArchConfig
+from repro.serving import Request, ServeEngine
+
+DEFAULT_OUT = "BENCH_serving.json"
+
+
+def _config(arch: str) -> ArchConfig:
+    if arch == "micro":
+        # dispatch-overhead regime: per-tick compute small enough that the
+        # host round-trip dominates — the quantity the fused scan removes
+        return ArchConfig(
+            name="micro", family="dense", n_layers=2, d_model=32, vocab=128,
+            n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+            dtype="float32").validate()
+    return configs.get_reduced(arch)
+
+
+def _requests(rng, vocab: int, n: int, max_new: int):
+    return [
+        Request(uid=i,
+                prompt=rng.integers(0, vocab, size=int(rng.integers(4, 12)))
+                .astype(np.int32),
+                max_new=max_new)
+        for i in range(n)
+    ]
+
+
+def run(
+    *,
+    arch: str = "micro",
+    n_requests: int = 16,
+    slots: int = 4,
+    max_new: int = 16,
+    max_len: int = 64,
+    chunk: int = 32,
+    reps: int = 3,
+    seed: int = 0,
+) -> Dict[str, object]:
+    cfg = _config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompts = [r.prompt for r in _requests(rng, cfg.vocab, n_requests, max_new)]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+
+    paths: Dict[str, object] = {}
+    streams = {}
+    for name, fused in (("eager", False), ("fused", True)):
+        eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                          fused=fused, chunk=chunk)
+        eng.run(mk())  # warm-up: compiles out of the timed passes
+        best, toks, syncs, reqs = float("inf"), 0, 0, None
+        for _ in range(reps):
+            reqs = mk()
+            adapt_mod.reset_host_sync_count()
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            best = min(best, time.perf_counter() - t0)
+            syncs = adapt_mod.host_sync_count()
+            toks = sum(len(r.out) for r in reqs)
+        assert all(r.done for r in reqs)
+        streams[name] = [r.out for r in reqs]
+        paths[name] = {
+            "requests": n_requests,
+            "slots": slots,
+            "chunk": chunk if fused else 1,
+            "new_tokens": toks,
+            "seconds_total": best,
+            "tokens_per_sec": toks / best,
+            "host_syncs_per_token": syncs / toks,
+        }
+    assert streams["eager"] == streams["fused"], "eager/fused stream mismatch"
+
+    return {
+        "bench": "serving_throughput",
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "config": {"arch": arch, "n_requests": n_requests, "slots": slots,
+                   "max_new": max_new, "max_len": max_len, "chunk": chunk},
+        "paths": paths,
+        "speedup": {
+            "fused_vs_eager":
+                paths["fused"]["tokens_per_sec"]
+                / paths["eager"]["tokens_per_sec"],
+        },
+    }
+
+
+def main(quick: bool = True, out_path: str = DEFAULT_OUT) -> List[str]:
+    kw = (dict(arch="micro", n_requests=16, slots=4, max_new=16, max_len=64,
+               chunk=32)
+          if quick else
+          dict(arch="qwen2-1.5b", n_requests=32, slots=8, max_new=32,
+               max_len=128, chunk=32))
+    record = run(**kw)
+    write_record(record, out_path)
+
+    out = ["path,chunk,new_tokens,tokens_per_sec,host_syncs_per_token"]
+    for name, p in record["paths"].items():
+        out.append(f"{name},{p['chunk']},{p['new_tokens']},"
+                   f"{p['tokens_per_sec']:.1f},{p['host_syncs_per_token']:.3f}")
+    sp = record["speedup"]["fused_vs_eager"]
+    out.append(f"speedup,fused_vs_eager={sp:.2f}x -> {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-scale shapes (CI smoke mode)")
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    for line in main(quick=args.quick, out_path=args.out):
+        print(line)

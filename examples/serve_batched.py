@@ -2,7 +2,9 @@
 
 Adapts a small LM to a synthetic task through the façade, folds the deltas
 into the serving engine (zero serving overhead), and runs batched requests
-through the slot-multiplexed decode engine.
+through the slot-multiplexed decode engine.  Serving is device-resident by
+default: the engine scans ``chunk`` decode ticks per dispatch, admitting
+and evicting requests on device and syncing to the host once per chunk.
 
     PYTHONPATH=src:. python examples/serve_batched.py
 """
@@ -24,7 +26,7 @@ adaptation = session.adapt(task, profile, iters=10)
 print("adapted:", adaptation.policy.describe())
 
 # fold deltas into the engine; it sees plain weights at base cost
-eng = api.ServeEngine(bb.cfg, session.params, slots=4, max_len=96)
+eng = api.ServeEngine(bb.cfg, session.params, slots=4, max_len=96, chunk=16)
 adaptation.fold_into(eng)
 reqs = [api.Request(uid=i,
                     prompt=rng.integers(0, bb.cfg.vocab,
@@ -36,5 +38,6 @@ eng.run(reqs)
 dt = time.perf_counter() - t0
 toks = sum(len(r.out) for r in reqs)
 print(f"served {len(reqs)} requests / {toks} tokens in {dt:.1f}s "
-      f"({toks/dt:.1f} tok/s, {eng.ticks} ticks, 4 slots)")
+      f"({toks/dt:.1f} tok/s, {eng.ticks} ticks, 4 slots, "
+      f"{eng.last_run_report['host_syncs']} host syncs)")
 assert all(r.done for r in reqs)

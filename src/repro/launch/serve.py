@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="decode ticks per fused scan dispatch")
+    ap.add_argument("--eager", action="store_true",
+                    help="host-driven per-tick loop instead of scan_ticks")
     ap.add_argument("--adapt", action="store_true",
                     help="TinyTrain-adapt to a synthetic task, fold, serve")
     ap.add_argument("--device", default="jetson-nano",
@@ -36,7 +40,8 @@ def main() -> None:
 
     cfg = configs.preset_config(args.arch, args.preset)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                          fused=not args.eager, chunk=args.chunk)
     rng = np.random.default_rng(0)
 
     if args.adapt:
@@ -65,10 +70,16 @@ def main() -> None:
     eng.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in reqs)
+    mode = ("eager" if args.eager else
+            f"fused chunk={args.chunk}, "
+            f"{eng.last_run_report.get('host_syncs', 0)} host syncs")
     print(f"[serve] {args.requests} requests, {toks} new tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s, {eng.ticks} engine ticks, "
-          f"{args.slots} slots)")
+          f"{args.slots} slots, {mode})")
     assert all(r.done for r in reqs)
+    if any(r.truncated for r in reqs):
+        print(f"[serve] {sum(r.truncated for r in reqs)} requests truncated "
+              f"at max_len={args.max_len}")
 
 
 if __name__ == "__main__":

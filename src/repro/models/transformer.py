@@ -707,6 +707,40 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> Dict[s
     return caches
 
 
+def reset_slot_state(caches: Dict[str, Any], mask: jax.Array) -> Dict[str, Any]:
+    """Reset per-slot decode state for masked slots of a cache batch.
+
+    ``mask`` is ``(B,)`` bool over the cache slot (batch) axis; masked slots
+    are reset so a re-admitted request starts from a clean length-0 cache.
+    Works both eagerly (host-side admission) and traced inside the serving
+    ``lax.scan`` (device-side re-admission).
+
+    Length leaves zero: attention masks K/V reads by ``kv_len``, so stale
+    entries beyond the reset length are never attended to.  SSM recurrent
+    state (conv window + state matrix) must zero outright — unlike K/V it
+    feeds forward with no length masking, so a reused slot would otherwise
+    leak the previous request's state into the new stream.
+    """
+    from ..utils import named_tree_map
+
+    mask = jnp.asarray(mask)
+    keep = (~mask)
+
+    def fix(path, x):
+        if path.endswith("len"):
+            # len leaves are (B,) or layer-stacked (L, B): slot is last axis
+            return jnp.where(mask, 0, x)
+        parts = path.split("/")
+        if "ssm" in parts:
+            # recurrent state: slot axis sits after the stacked layer axis
+            shape = [1] * x.ndim
+            shape[1] = mask.shape[0]
+            return x * keep.reshape(shape).astype(x.dtype)
+        return x
+
+    return named_tree_map(fix, caches)
+
+
 def decode_step(
     cfg: ArchConfig,
     params: Params,

@@ -1,1 +1,3 @@
-from .engine import Request, ServeEngine, fold_deltas  # noqa: F401
+from .engine import (  # noqa: F401
+    PendingBuffer, Request, ServeEngine, SlotState, fold_deltas,
+)

@@ -4,7 +4,20 @@ Each cache carries per-sample lengths, so slots advance independently:
 a newly-admitted request consumes its prompt tokens one per tick
 (prefill-as-decode) while neighbouring slots keep generating.  Finished
 sequences free their slot and the next queued request claims it after a
-length reset — no recompilation, fixed shapes throughout.
+state reset — no recompilation, fixed shapes throughout.
+
+The engine is **device-resident** by default (``fused=True``): per-slot
+request state (prompt buffer, cursor, position, last token, remaining
+``max_new`` budget, active flag) lives in fixed-shape device arrays
+(:class:`SlotState`) and :meth:`ServeEngine.scan_ticks` compiles a
+multi-tick ``lax.scan`` that decodes, greedy-samples in-graph, advances
+prefill-vs-generate per slot, decrements budgets and evicts + re-admits
+from a device-side :class:`PendingBuffer` — one dispatch and at most one
+blocking host transfer per chunk, mirroring the adaptation engine's
+``scan_steps`` (keyed compile cache, donated carries, ``host_sync_count``
+telemetry).  ``fused=False`` keeps the eager one-dispatch-per-tick loop as
+a debugging escape hatch; both paths share one lifecycle specification and
+produce identical token streams.
 
 TinyTrain integration: ``fold_deltas`` folds channel deltas into a serving
 parameter copy (W ⊕ scatter(ΔW)), so adapted models serve at exactly base
@@ -14,12 +27,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
+from ..core import adapt as _telemetry
 from ..models import transformer as T
 from ..models.api import ArchConfig
 
@@ -31,6 +46,8 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # evicted by the max_len cutoff before reaching max_new generated tokens
+    truncated: bool = False
 
 
 @dataclasses.dataclass
@@ -39,15 +56,28 @@ class _Slot:
     cursor: int = 0  # next prompt token to feed; >= len(prompt) => generating
 
 
-def _reset_slot_lens(caches: Any, slot: int) -> Any:
-    def fix(path, x):
-        if path.endswith("len"):
-            # len leaves are (B,) or layer-stacked (L, B): slot is last axis
-            return x.at[..., slot].set(0)
-        return x
+class SlotState(NamedTuple):
+    """Per-slot request lifecycle state, device-resident for the fused scan."""
 
-    from ..utils import named_tree_map
-    return named_tree_map(fix, caches)
+    prompt: jax.Array      # (slots, max_prompt) int32 prompt buffer
+    prompt_len: jax.Array  # (slots,) int32
+    cursor: jax.Array      # (slots,) int32; >= prompt_len => generating
+    pos: jax.Array         # (slots,) int32 absolute decode position
+    last_tok: jax.Array    # (slots,) int32 feedback token while generating
+    remaining: jax.Array   # (slots,) int32 max_new budget left
+    active: jax.Array      # (slots,) bool
+    rid: jax.Array         # (slots,) int32 engine-internal request id; -1 free
+
+
+class PendingBuffer(NamedTuple):
+    """Device-side admission queue, drained FIFO by the scan between syncs."""
+
+    prompt: jax.Array   # (P, max_prompt) int32
+    length: jax.Array   # (P,) int32
+    max_new: jax.Array  # (P,) int32
+    rid: jax.Array      # (P,) int32
+    head: jax.Array     # () int32 next entry to admit
+    count: jax.Array    # () int32 valid entries
 
 
 class ServeEngine:
@@ -58,16 +88,45 @@ class ServeEngine:
         *,
         slots: int = 8,
         max_len: int = 1024,
+        fused: bool = True,
+        chunk: int = 32,
+        pending: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
         self.n_slots = slots
         self.max_len = max_len
+        self.max_prompt = max_len
+        self.fused = fused
+        self.chunk = chunk
+        # device pending-buffer capacity: bounds re-admissions per chunk
+        # (if it drains mid-chunk, freed slots idle until the next refill —
+        # a utilisation cap, never a correctness issue)
+        self.pending_size = pending if pending is not None else max(slots * 4, 8)
+        if self.pending_size < 1:
+            raise ValueError("pending buffer needs at least one entry")
+        if chunk < 1:
+            raise ValueError(
+                f"chunk must be >= 1, got {chunk}: a zero-length scan makes "
+                "no progress and the fused run loop would spin forever")
         self.caches = T.init_caches(cfg, slots, max_len)
         self.slots = [_Slot() for _ in range(slots)]
         self.pos = np.zeros(slots, np.int32)
         self.queue: Deque[Request] = collections.deque()
-        self.ticks = 0
+        self.ticks = 0  # lifetime tick count (stat, never a per-call budget)
+        self.last_run_report: Dict[str, int] = {}
+
+        # fused-path state: SlotState carry, staged-but-unadmitted requests
+        # (host mirror of the device pending buffer) and the rid -> Request
+        # map used to drain per-tick events back into Request objects
+        self._state: Optional[SlotState] = None
+        self._scan_cache: Dict[int, Any] = {}
+        self._staged: Deque[Tuple[int, Request]] = collections.deque()
+        self._pending_cache: Optional[PendingBuffer] = None
+        self._pending_dirty = True
+        self._by_rid: Dict[int, Request] = {}
+        self._live: set = set()
+        self._next_rid = 0
 
         # greedy sampling happens inside the jitted step: each tick ships a
         # (slots,) int32 vector to the host instead of (slots, vocab) logits
@@ -77,19 +136,47 @@ class ServeEngine:
 
         self._decode = jax.jit(decode)
 
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+
+    def _validate(self, req: Request) -> None:
+        n = int(len(req.prompt))
+        if n == 0:
+            raise ValueError("empty prompt: nothing to prefill")
+        if n >= self.max_len - 1:
+            raise ValueError(
+                f"prompt of length {n} cannot fit: the engine evicts at "
+                f"position max_len - 1 = {self.max_len - 1}, so prompts must "
+                f"leave room to generate (len(prompt) <= max_len - 2 = "
+                f"{self.max_len - 2})")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new}")
+
     def submit(self, req: Request) -> None:
+        self._validate(req)
         self.queue.append(req)
 
+    # ------------------------------------------------------------------
+    # Eager per-tick path (fused=False): the debugging reference
+    # ------------------------------------------------------------------
+
     def _admit(self) -> None:
+        mask = np.zeros(self.n_slots, bool)
         for i, sl in enumerate(self.slots):
             if sl.req is None and self.queue:
                 sl.req = self.queue.popleft()
                 sl.cursor = 0
                 self.pos[i] = 0
-                self.caches = _reset_slot_lens(self.caches, i)
+                mask[i] = True
+        if mask.any():
+            self.caches = T.reset_slot_state(self.caches, mask)
 
     def step(self) -> None:
         """One tick: every active slot consumes one token (prompt or gen)."""
+        if self._live or self._staged:
+            raise RuntimeError(
+                "fused run in flight; cannot interleave eager ticks")
         self._admit()
         live = [i for i, sl in enumerate(self.slots) if sl.req is not None]
         if not live:
@@ -105,7 +192,8 @@ class ServeEngine:
             self.params, jnp.asarray(toks), self.caches,
             jnp.asarray(self.pos, jnp.int32),
         )
-        next_tok = np.asarray(next_tok)
+        next_tok = _telemetry._fetch(next_tok)
+        freed = False
         for i in live:
             sl = self.slots[i]
             self.pos[i] += 1
@@ -115,16 +203,238 @@ class ServeEngine:
                     sl.req.out.append(int(next_tok[i]))
             else:
                 sl.req.out.append(int(next_tok[i]))
-            if len(sl.req.out) >= sl.req.max_new or self.pos[i] >= self.max_len - 1:
+            if len(sl.req.out) >= sl.req.max_new:
                 sl.req.done = True
+            elif self.pos[i] >= self.max_len - 1:
+                sl.req.done = True
+                sl.req.truncated = True
+            if sl.req.done:
                 self.slots[i] = _Slot()
+                freed = True
+        if freed:
+            # freed slots claim queued work this tick, not next tick — the
+            # fused scan admits at the top of every tick body, so the eager
+            # path must leave the same occupancy behind
+            self._admit()
         self.ticks += 1
 
-    def run(self, requests: List[Request], max_ticks: int = 100_000) -> List[Request]:
-        for r in requests:
-            self.submit(r)
-        while (self.queue or any(s.req for s in self.slots)) and self.ticks < max_ticks:
-            self.step()
+    # ------------------------------------------------------------------
+    # Fused multi-tick path: the whole serving tick loop on device
+    # ------------------------------------------------------------------
+
+    def _init_state(self) -> SlotState:
+        # distinct buffers per field: the scan donates the whole carry, and
+        # donation rejects the same buffer appearing twice
+        def z():
+            return jnp.zeros((self.n_slots,), jnp.int32)
+
+        return SlotState(
+            prompt=jnp.zeros((self.n_slots, self.max_prompt), jnp.int32),
+            prompt_len=z(), cursor=z(), pos=z(), last_tok=z(), remaining=z(),
+            active=jnp.zeros((self.n_slots,), bool), rid=z() - 1)
+
+    def scan_compiles(self) -> int:
+        """Compiled ``scan_ticks`` programs (one per distinct chunk size)."""
+        return len(self._scan_cache)
+
+    def scan_ticks(self, chunk: int):
+        """Compiled multi-tick runner, keyed on chunk length.
+
+        run(params, state, caches, pending) -> (state, caches, pending,
+        per-tick events); state and caches are donated carries.  Each tick:
+        admit pending into free slots, decode + greedy-sample every slot,
+        advance prefill-vs-generate cursors, decrement budgets, evict done
+        slots — so an eviction at tick t re-admits at tick t+1 without any
+        host involvement.
+        """
+        chunk = int(chunk)
+        if chunk not in self._scan_cache:
+            cfg = self.cfg
+            max_len = self.max_len
+            maxp = self.max_prompt
+            P = self.pending_size
+
+            def body(params, carry, _):
+                state, caches, pend = carry
+
+                # -- admit: free slots claim pending entries in FIFO order
+                free = ~state.active
+                rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+                take = free & (pend.head + rank < pend.count)
+                src = jnp.clip(pend.head + rank, 0, P - 1)
+
+                def sel(new, old):
+                    return jnp.where(take, new, old)
+
+                state = SlotState(
+                    prompt=jnp.where(
+                        take[:, None], pend.prompt[src], state.prompt),
+                    prompt_len=sel(pend.length[src], state.prompt_len),
+                    cursor=sel(0, state.cursor),
+                    pos=sel(0, state.pos),
+                    last_tok=sel(0, state.last_tok),
+                    remaining=sel(pend.max_new[src], state.remaining),
+                    active=state.active | take,
+                    rid=sel(pend.rid[src], state.rid),
+                )
+                n_admit = jnp.sum(take.astype(jnp.int32))
+                pend = pend._replace(head=pend.head + n_admit)
+                caches = T.reset_slot_state(caches, take)
+
+                # -- one decode tick over every slot (inactive ones masked)
+                prefilling = state.cursor < state.prompt_len
+                ptok = jnp.take_along_axis(
+                    state.prompt,
+                    jnp.clip(state.cursor, 0, maxp - 1)[:, None],
+                    axis=1)[:, 0]
+                tok = jnp.where(
+                    state.active,
+                    jnp.where(prefilling, ptok, state.last_tok), 0)
+                logits, caches = T.decode_step(
+                    cfg, params, tok[:, None], caches, state.pos)
+                next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+
+                # -- advance lifecycle: prefill->generate, budgets, eviction
+                cursor = jnp.where(
+                    state.active & prefilling, state.cursor + 1, state.cursor)
+                emit = state.active & (
+                    ~prefilling | (cursor >= state.prompt_len))
+                pos = jnp.where(state.active, state.pos + 1, state.pos)
+                remaining = state.remaining - emit.astype(jnp.int32)
+                done = state.active & (
+                    (remaining <= 0) | (pos >= max_len - 1))
+                trunc = done & (remaining > 0)  # evicted with budget unmet
+                ys = (state.rid, jnp.where(emit, next_tok, -1), done, trunc,
+                      jnp.any(state.active), n_admit)
+                state = state._replace(
+                    cursor=cursor, pos=pos,
+                    last_tok=jnp.where(emit, next_tok, state.last_tok),
+                    remaining=remaining,
+                    active=state.active & ~done,
+                    rid=jnp.where(done, -1, state.rid))
+                return (state, caches, pend), ys
+
+            def run(params, state, caches, pend):
+                (state, caches, pend), ys = lax.scan(
+                    lambda c, x: body(params, c, x),
+                    (state, caches, pend), None, length=chunk)
+                return state, caches, pend, ys
+
+            self._scan_cache[chunk] = jax.jit(run, donate_argnums=(1, 2))
+        return self._scan_cache[chunk]
+
+    def _make_pending(self) -> PendingBuffer:
+        # the buffer is only rebuilt (and re-uploaded) when the staged set
+        # changed; steady-state generation chunks with no admissions reuse
+        # the committed device arrays for free
+        if not self._pending_dirty and self._pending_cache is not None:
+            return self._pending_cache
+        P, maxp = self.pending_size, self.max_prompt
+        prompt = np.zeros((P, maxp), np.int32)
+        length = np.zeros((P,), np.int32)
+        max_new = np.zeros((P,), np.int32)
+        rid = np.full((P,), -1, np.int32)
+        for j, (r, req) in enumerate(self._staged):
+            n = len(req.prompt)
+            prompt[j, :n] = np.asarray(req.prompt, np.int32)
+            length[j] = n
+            max_new[j] = req.max_new
+            rid[j] = r
+        self._pending_cache = PendingBuffer(
+            jnp.asarray(prompt), jnp.asarray(length), jnp.asarray(max_new),
+            jnp.asarray(rid), jnp.zeros((), jnp.int32),
+            jnp.asarray(np.int32(len(self._staged))))
+        self._pending_dirty = False
+        return self._pending_cache
+
+    def _run_fused(self, max_ticks: int, chunk: Optional[int] = None) -> None:
+        if any(sl.req is not None for sl in self.slots):
+            raise RuntimeError(
+                "eager slots busy; drain step() work before a fused run")
+        chunk = self.chunk if chunk is None else int(chunk)
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if self._state is None:
+            self._state = self._init_state()
+        used = chunks = 0
+        syncs0 = _telemetry.host_sync_count()
+        while (self.queue or self._staged or self._live) and used < max_ticks:
+            # refill the host staging mirror; it becomes the device pending
+            # buffer for this chunk (host -> device, never a blocking sync)
+            while self.queue and len(self._staged) < self.pending_size:
+                req = self.queue.popleft()
+                rid = self._next_rid
+                self._next_rid += 1
+                self._by_rid[rid] = req
+                self._staged.append((rid, req))
+                self._pending_dirty = True
+            # near the budget, shrink the dispatch to the largest power of
+            # two that fits — tail sizes would otherwise compile one scan
+            # program per distinct remainder, and this caps the compile
+            # cache at log2(chunk) tail programs
+            remaining = max_ticks - used
+            ticks_this = (chunk if remaining >= chunk
+                          else 1 << (remaining.bit_length() - 1))
+            run = self.scan_ticks(ticks_this)
+            self._state, self.caches, _, ys = run(
+                self.params, self._state, self.caches, self._make_pending())
+            # the single blocking transfer of the chunk: per-tick events
+            rids, toks, dones, truncs, act, n_admit = _telemetry._fetch(ys)
+            consumed = int(n_admit.sum())
+            for _ in range(consumed):
+                rid, _req = self._staged.popleft()
+                self._live.add(rid)
+            if consumed:
+                self._pending_dirty = True
+            # drain O(emitted + finished) event cells, not chunk x slots:
+            # np.nonzero walks ticks row-major, so per-request appends stay
+            # in generation order (done cells coincide with their last emit,
+            # hence the second pass)
+            for t, i in zip(*np.nonzero(toks >= 0)):
+                self._by_rid[int(rids[t, i])].out.append(int(toks[t, i]))
+            for t, i in zip(*np.nonzero(dones)):
+                rid = int(rids[t, i])
+                req = self._by_rid.pop(rid)
+                req.done = True
+                req.truncated = bool(truncs[t, i])
+                self._live.discard(rid)
+            ticks_used = int(act.sum())
+            used += ticks_used
+            self.ticks += ticks_used
+            chunks += 1
+        self.last_run_report = {
+            "ticks": used, "chunks": chunks,
+            "host_syncs": _telemetry.host_sync_count() - syncs0,
+        }
+
+    # ------------------------------------------------------------------
+    # Driver
+    # ------------------------------------------------------------------
+
+    def run(self, requests: List[Request], max_ticks: int = 100_000,
+            chunk: Optional[int] = None) -> List[Request]:
+        """Serve ``requests`` until done or ``max_ticks`` engine ticks.
+
+        ``max_ticks`` budgets *this call*; ``self.ticks`` remains a lifetime
+        statistic, so back-to-back ``run()`` calls on one engine each get
+        the full budget.
+        """
+        for r in requests:  # validate the whole batch before enqueuing any:
+            self._validate(r)  # a mid-batch reject must not leave a partial
+        self.queue.extend(requests)  # batch queued for a later run()
+        if self.fused:
+            self._run_fused(max_ticks, chunk)
+        else:
+            used = 0
+            syncs0 = _telemetry.host_sync_count()
+            while ((self.queue or any(sl.req for sl in self.slots))
+                   and used < max_ticks):
+                self.step()
+                used += 1
+            self.last_run_report = {
+                "ticks": used, "chunks": used,
+                "host_syncs": _telemetry.host_sync_count() - syncs0,
+            }
         return requests
 
 

@@ -1,0 +1,223 @@
+"""Device-resident serving: fused ``scan_ticks`` vs the eager tick loop.
+
+The fused path must produce token streams identical to the eager per-tick
+engine for every unit kind (mlp, attn, mla, ssm, moe — plus the hybrid
+shared-attention family) and for folded-deltas models, while compiling one
+scan program per chunk size and performing at most one blocking host
+transfer per chunk.  Also regression-tests the three request-lifecycle
+fixes: per-call ``max_ticks`` budgets, ``truncated`` signalling + submit
+validation, and admit-immediately-after-evict.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import adapt as adapt_mod
+from repro.core import lm_backbone
+from repro.core.policy import SelectedUnit, SparseUpdatePolicy
+from repro.models import transformer as T
+from repro.models.api import ArchConfig
+from repro.serving import Request, ServeEngine, fold_deltas
+
+
+def tiny_cfg():
+    return ArchConfig(
+        name="t", family="dense", n_layers=2, d_model=32, vocab=64,
+        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+        dtype="float32").validate()
+
+
+def make_requests(rng, vocab, n, max_new=4, lo=3, hi=8):
+    return [
+        Request(uid=i,
+                prompt=rng.integers(0, vocab, size=int(rng.integers(lo, hi)))
+                .astype(np.int32),
+                max_new=max_new)
+        for i in range(n)
+    ]
+
+
+def serve_both(cfg, params, requests_fn, *, slots=2, max_len=24, chunk=8):
+    """Run the same request set through the eager and fused engines."""
+    streams = []
+    for fused in (False, True):
+        eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                          fused=fused, chunk=chunk)
+        reqs = requests_fn()
+        eng.run(reqs)
+        assert all(r.done for r in reqs)
+        streams.append([(r.out, r.truncated) for r in reqs])
+    return streams
+
+
+# exercises every foldable unit kind: attn+mlp, attn+moe, mla, ssm, and the
+# hybrid ssm+shared-attn family (shared cache slots reset too)
+PARITY_ARCHS = ["qwen2-1.5b", "mixtral-8x7b", "deepseek-v3-671b",
+                "mamba2-1.3b", "zamba2-1.2b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_fused_matches_eager_token_streams(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 7)))
+               .astype(np.int32) for _ in range(5)]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=4)
+                for i, p in enumerate(prompts)]
+
+    eager, fused = serve_both(cfg, params, mk)
+    assert eager == fused
+
+
+def test_fused_matches_eager_folded_deltas():
+    """A fold_deltas serving copy streams identically on both paths."""
+    cfg = configs.get_reduced("qwen2-1.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    bb = lm_backbone(cfg, tokens_per_batch=2 * 16, batch_size=2)
+    units, seen = [], set()
+    for c in reversed(bb.unit_costs):
+        if c.kind not in seen:
+            units.append(SelectedUnit(
+                c.layer, c.kind, tuple(sorted({0, c.n_channels - 1}))))
+            seen.add(c.kind)
+    units.sort(key=lambda u: (u.layer, u.kind))
+    policy = SparseUpdatePolicy(horizon=0, units=tuple(units))
+    deltas = bb.init_deltas(policy)
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    keys = jax.random.split(jax.random.PRNGKey(3), len(leaves))
+    leaves = [jax.random.normal(k, x.shape, x.dtype) * 0.05
+              for k, x in zip(keys, leaves)]
+    deltas = jax.tree_util.tree_unflatten(treedef, leaves)
+    folded = fold_deltas(cfg, params, deltas, policy)
+
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 8)))
+               .astype(np.int32) for _ in range(4)]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=4)
+                for i, p in enumerate(prompts)]
+
+    eager, fused = serve_both(cfg, folded, mk)
+    assert eager == fused
+
+
+def test_compile_reuse_and_host_sync_budget():
+    """One compiled scan per chunk size; <= 1 blocking sync per chunk."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, fused=True, chunk=8)
+
+    adapt_mod.reset_host_sync_count()
+    eng.run(make_requests(rng, cfg.vocab, 6))
+    rep1 = eng.last_run_report
+    assert rep1["chunks"] >= 2  # multi-chunk run, or the budget is untested
+    assert rep1["host_syncs"] <= rep1["chunks"]
+    assert eng.scan_compiles() == 1
+
+    # a second run reuses the compiled chunk program and the same budget
+    adapt_mod.reset_host_sync_count()
+    eng.run(make_requests(rng, cfg.vocab, 6))
+    assert eng.scan_compiles() == 1
+    assert adapt_mod.host_sync_count() <= eng.last_run_report["chunks"]
+
+
+def test_ssm_slot_reuse_does_not_leak_state():
+    """A request served on a reused slot matches a solo run (recurrent SSM
+    state resets on admission; stale state would change the stream)."""
+    cfg = configs.get_reduced("mamba2-1.3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+               for _ in range(2)]
+    for fused in (False, True):
+        eng = ServeEngine(cfg, params, slots=1, max_len=24, fused=fused)
+        reqs = [Request(uid=i, prompt=p, max_new=4)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)  # second request reuses the single slot
+        solo = ServeEngine(cfg, params, slots=1, max_len=24, fused=fused)
+        ref = Request(uid=9, prompt=prompts[1], max_new=4)
+        solo.run([ref])
+        assert reqs[1].out == ref.out
+
+
+# ---------------------------------------------------------------------------
+# Regression tests for the three lifecycle bugfixes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_run_budget_is_per_call(fused):
+    """Bug 1: ``run(max_ticks=...)`` used to compare against the lifetime
+    ``self.ticks`` counter, silently shrinking a second run's budget."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, fused=fused)
+    first = make_requests(rng, cfg.vocab, 6)
+    eng.run(first)
+    ticks_first = eng.ticks
+    assert ticks_first > 20
+    # a budget that covers the second batch alone but NOT lifetime + batch:
+    # the old code would starve this run and leave requests unfinished
+    second = make_requests(rng, cfg.vocab, 6)
+    eng.run(second, max_ticks=ticks_first + 5)
+    assert all(r.done for r in second)
+    assert eng.ticks > ticks_first  # lifetime stat keeps accumulating
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_length_eviction_sets_truncated(fused):
+    """Bug 2: length-evicted requests completed with no signal."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(cfg, params, slots=1, max_len=12, fused=fused, chunk=4)
+    r = Request(uid=0, prompt=rng.integers(0, cfg.vocab, size=6)
+                .astype(np.int32), max_new=100)
+    done = Request(uid=1, prompt=rng.integers(0, cfg.vocab, size=3)
+                   .astype(np.int32), max_new=2)
+    eng.run([r, done])
+    assert r.done and r.truncated
+    # evicted at pos max_len - 1 after a 6-token prefill -> 5 tokens out
+    assert 0 < len(r.out) < 100
+    assert done.done and not done.truncated and len(done.out) == 2
+
+
+def test_submit_rejects_prompts_that_cannot_fit():
+    """Bug 2 (cont): prompts with no room to generate used to complete
+    silently with ``out == []``; now submit() rejects them up front."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=1, max_len=8)
+    ok = Request(uid=0, prompt=np.zeros(6, np.int32), max_new=2)
+    eng.submit(ok)  # max_len - 2 still fits (one token, then truncation)
+    with pytest.raises(ValueError, match="cannot fit"):
+        eng.submit(Request(uid=1, prompt=np.zeros(7, np.int32), max_new=2))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=2, prompt=np.zeros(0, np.int32), max_new=2))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(uid=3, prompt=np.zeros(3, np.int32), max_new=0))
+
+
+def test_eager_admits_immediately_after_eviction():
+    """Bug 3: a slot freed in tick N idled for a tick before a queued
+    request could claim it; eviction now re-admits within the same tick,
+    matching what the device-resident scan does natively."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=1, max_len=32, fused=False)
+    r1 = Request(uid=0, prompt=np.asarray([1, 2], np.int32), max_new=1)
+    r2 = Request(uid=1, prompt=np.asarray([3], np.int32), max_new=1)
+    eng.submit(r1)
+    eng.submit(r2)
+    while not r1.done:
+        eng.step()
+    # the tick that evicted r1 must already have admitted r2 into the slot
+    assert eng.slots[0].req is r2
+    assert not eng.queue
