@@ -1,17 +1,23 @@
-"""Serving-engine throughput: eager per-tick dispatch vs fused ``scan_ticks``.
+"""Serving-engine throughput: eager per-tick dispatch vs fused ``scan_ticks``,
+plus block-prefill time-to-first-token.
 
 Measures steady-state (post-compile) tokens/sec for the two serving-tick
 execution paths:
 
 - ``eager``: one jitted dispatch + one blocking (slots,) token fetch per
   engine tick (the pre-fusion behaviour, kept as ``fused=False``);
-- ``fused``: ``chunk`` ticks per dispatch via the device-resident
-  ``lax.scan`` (admit/evict on device), per-tick events transferred once
-  per chunk.
+- ``fused``: ``chunk`` ticks per dispatch via the device-resident tick
+  loop (admit/evict on device), per-tick events transferred once per
+  chunk.
 
 Both paths decode identical request streams through the same weights, so
 the comparison isolates exactly what device residency removes: per-tick
 dispatch latency and the per-tick blocking host sync.
+
+A second section sweeps the **prefill block size** B ∈ {1, 8, 32} over a
+long prompt (256 tokens by default) and records time-to-first-token
+(seconds and engine ticks) and prefill tokens/sec — the block-prefill
+hot path: TTFT ticks drop from O(prompt_len) to O(prompt_len / B).
 
 Results are appended to ``BENCH_serving.json`` (one record per run) so CI
 accumulates a perf trajectory per PR, mirroring ``BENCH_adaptation.json``.
@@ -59,6 +65,49 @@ def _requests(rng, vocab: int, n: int, max_new: int):
     ]
 
 
+def run_prefill(
+    *,
+    arch: str = "micro",
+    prompt_len: int = 256,
+    blocks=(1, 8, 32),
+    reps: int = 3,
+    seed: int = 0,
+) -> Dict[str, object]:
+    """TTFT / prefill-throughput sweep over prefill block sizes.
+
+    One slot, one ``prompt_len``-token request, ``max_new=1``: the run is
+    exactly prompt ingestion + the first sampled token, so its wall time
+    is time-to-first-token.
+    """
+    cfg = _config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab, size=prompt_len).astype(np.int32)
+    out: Dict[str, object] = {}
+    for B in blocks:
+        eng = ServeEngine(cfg, params, slots=1, max_len=prompt_len + 8,
+                          fused=True, chunk=max(64, prompt_len),
+                          prefill_block=B)
+        eng.run([Request(uid=0, prompt=prompt.copy(), max_new=1)])  # warm-up
+        best = float("inf")
+        ticks = 0
+        for r in range(reps):
+            req = Request(uid=r + 1, prompt=prompt.copy(), max_new=1)
+            t0 = time.perf_counter()
+            eng.run([req])
+            best = min(best, time.perf_counter() - t0)
+            assert req.done and len(req.out) == 1
+            ticks = eng.last_run_report["ticks"]
+        out[f"B{B}"] = {
+            "prefill_block": B,
+            "prompt_len": prompt_len,
+            "ttft_seconds": best,
+            "ttft_ticks": ticks,
+            "prefill_tokens_per_sec": prompt_len / best,
+        }
+    return out
+
+
 def run(
     *,
     arch: str = "micro",
@@ -69,6 +118,8 @@ def run(
     chunk: int = 32,
     reps: int = 3,
     seed: int = 0,
+    prompt_len: int = 256,
+    blocks=(1, 8, 32),
 ) -> Dict[str, object]:
     cfg = _config(arch)
     params = T.init_params(cfg, jax.random.PRNGKey(seed))
@@ -82,8 +133,11 @@ def run(
     paths: Dict[str, object] = {}
     streams = {}
     for name, fused in (("eager", False), ("fused", True)):
+        # prefill_block=1 on both engines: this comparison isolates device
+        # residency (dispatch latency + per-tick sync); block prefill is
+        # measured separately by run_prefill below
         eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
-                          fused=fused, chunk=chunk)
+                          fused=fused, chunk=chunk, prefill_block=1)
         eng.run(mk())  # warm-up: compiles out of the timed passes
         best, toks, syncs, reqs = float("inf"), 0, 0, None
         for _ in range(reps):
@@ -107,17 +161,25 @@ def run(
         }
     assert streams["eager"] == streams["fused"], "eager/fused stream mismatch"
 
+    prefill = run_prefill(arch=arch, prompt_len=prompt_len, blocks=blocks,
+                          reps=reps, seed=seed)
+    b_lo, b_hi = f"B{min(blocks)}", f"B{max(blocks)}"
+
     return {
         "bench": "serving_throughput",
         "backend": jax.default_backend(),
         "host": platform.node(),
         "config": {"arch": arch, "n_requests": n_requests, "slots": slots,
-                   "max_new": max_new, "max_len": max_len, "chunk": chunk},
+                   "max_new": max_new, "max_len": max_len, "chunk": chunk,
+                   "prompt_len": prompt_len},
         "paths": paths,
+        "prefill": prefill,
         "speedup": {
             "fused_vs_eager":
                 paths["fused"]["tokens_per_sec"]
                 / paths["eager"]["tokens_per_sec"],
+            f"ttft_{b_hi}_vs_{b_lo}":
+                prefill[b_lo]["ttft_seconds"] / prefill[b_hi]["ttft_seconds"],
         },
     }
 
@@ -135,8 +197,12 @@ def main(quick: bool = True, out_path: str = DEFAULT_OUT) -> List[str]:
     for name, p in record["paths"].items():
         out.append(f"{name},{p['chunk']},{p['new_tokens']},"
                    f"{p['tokens_per_sec']:.1f},{p['host_syncs_per_token']:.3f}")
-    sp = record["speedup"]["fused_vs_eager"]
-    out.append(f"speedup,fused_vs_eager={sp:.2f}x -> {out_path}")
+    out.append("prefill,block,ttft_s,ttft_ticks,prefill_tok_per_sec")
+    for name, p in record["prefill"].items():
+        out.append(f"prefill,{p['prefill_block']},{p['ttft_seconds']:.4f},"
+                   f"{p['ttft_ticks']},{p['prefill_tokens_per_sec']:.0f}")
+    for key, sp in record["speedup"].items():
+        out.append(f"speedup,{key}={sp:.2f}x -> {out_path}")
     return out
 
 

@@ -188,19 +188,32 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
         # contribute exactly zero regardless of their tap gradients, and
         # the normaliser is the valid count — scores are invariant to
         # bucket padding and match the unpadded oracle.
-        w = None if mask is None else mask.astype(jnp.float32)[None, :, None]
+        #
+        # On TPU the per-group (L, B, C) reduction lowers through the
+        # fused Pallas fisher kernel (kernels.ops.fisher_tapgrads) instead
+        # of the XLA schedule; elsewhere the plain jnp formula compiles to
+        # a single fused reduce anyway (kernel parity is covered in
+        # tests/test_kernels.py).
+        via_kernel = jax.default_backend() == "tpu"
+
+        def reduce_one(g):  # (L, B, C) -> (L, C)
+            if via_kernel:
+                from ..kernels import ops as _kops  # pragma: no cover
+
+                return _kops.fisher_tapgrads(g.astype(jnp.float32), n, mask)
+            g = g.astype(jnp.float32)
+            g2 = g * g if mask is None else (
+                g * g * mask.astype(jnp.float32)[None, :, None])
+            return jnp.sum(g2, axis=1) / (2.0 * n)
+
         chans: Dict[Tuple[int, str], jax.Array] = {}
         for gi, (_, ids) in enumerate(groups):
             mk, fk, _, _ = _lm_group_kinds(cfg, gi)
-            gm = tg[f"g{gi}"]["mixer"].astype(jnp.float32)  # (L, B, C)
-            g2 = gm * gm if w is None else gm * gm * w
-            d_mix = jnp.sum(g2, axis=1) / (2.0 * n)  # (L, C)
+            d_mix = reduce_one(tg[f"g{gi}"]["mixer"])  # (L, C)
             for j, lid in enumerate(ids):
                 chans[(lid, mk)] = d_mix[j]
             if fk != "none":
-                gf = tg[f"g{gi}"]["ffn"].astype(jnp.float32)
-                g2 = gf * gf if w is None else gf * gf * w
-                d_ffn = jnp.sum(g2, axis=1) / (2.0 * n)
+                d_ffn = reduce_one(tg[f"g{gi}"]["ffn"])
                 for j, lid in enumerate(ids):
                     chans[(lid, fk)] = d_ffn[j]
         return chans

@@ -707,6 +707,22 @@ class TinyTrainSession:
         ev = self.step_cache.evaluate(None)
         return float(ev(self.params, None, task.support, task.query, None))
 
+    def score_stream(self, tokens: Any, *, block: int = 32,
+                     params: Any = None) -> np.ndarray:
+        """Per-sequence mean next-token NLL of a (N, S) token batch.
+
+        Scored on the serving *block-prefill* path (the same cached
+        sequence-mode forward the engine uses to ingest prompts —
+        :meth:`EpisodeStepCache.block_score`), so adaptation-time
+        token-batch scoring matches deployed behaviour exactly instead of
+        re-deriving a separate forward or looping per position.  ``params``
+        defaults to the session's frozen weights; pass a folded copy
+        (:meth:`Adaptation.fold_into`) to score an adapted model.
+        """
+        fn = self.step_cache.block_score(block)
+        return _fetch(fn(params if params is not None else self.params,
+                         jnp.asarray(tokens, jnp.int32)))
+
     # -- baselines (paper Sec. 3.1 zoo) ------------------------------------
 
     def baseline(

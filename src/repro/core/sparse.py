@@ -144,6 +144,7 @@ class EpisodeStepCache:
         self._scans: Dict = {}
         self._vscans: Dict = {}
         self._evals: Dict = {}
+        self._block_scores: Dict = {}
         self._probe = None
         self._probe_fisher = None
         self._probe_fisher_batch = None
@@ -383,6 +384,70 @@ class EpisodeStepCache:
 
             self._vscans[key] = jax.jit(fleet)
         return self._vscans[key]
+
+    def block_score(self, block: int = 32):
+        """Compiled LM token-batch scorer on the serving *block* path.
+
+        score(params, tokens (N, S) int32) -> per-sequence mean next-token
+        NLL (N,) float32, computed by folding the batch through
+        ``models.transformer.prefill_block`` in S/block chunks against
+        decode caches — the exact sequence-mode path the serving engine
+        uses for prompt ingestion, so adaptation-side token-batch scoring
+        (support-set perplexity, candidate ranking) exercises the deployed
+        cache math instead of looping positions or re-deriving a separate
+        forward.  One compiled dispatch per call; cached per block size
+        (jit re-specialises per batch shape as usual).
+
+        Sliding-window archs score through their rolling cache, matching
+        what a served request would see.
+        """
+        if self.backbone.kind != "lm":
+            raise ValueError(
+                "block_score is for LM token-batch workloads; "
+                f"backbone kind is {self.backbone.kind!r}")
+        key = int(block)
+        if key < 1:
+            raise ValueError(f"block must be >= 1, got {block}")
+        if key not in self._block_scores:
+            from ..models import transformer as T
+
+            cfg = self.backbone.cfg
+
+            def score(params, tokens):
+                n, s = tokens.shape
+                if s < 2:
+                    raise ValueError(
+                        f"need at least 2 tokens to score next-token NLL, "
+                        f"got sequences of length {s}")
+                blk = min(key, s)
+                nb = -(-s // blk)  # ragged tail rides a validity mask,
+                pad = nb * blk - s  # exactly like serving prompt tails
+                caches = T.init_caches(cfg, n, s)
+                tb = jnp.moveaxis(
+                    jnp.pad(tokens, ((0, 0), (0, pad))).reshape(n, nb, blk),
+                    1, 0)
+                vb = (jnp.arange(nb * blk) < s).reshape(nb, 1, blk)
+                vb = jnp.broadcast_to(vb, (nb, n, blk))
+
+                def body(carry, xs):
+                    caches, pos = carry
+                    toks, vld = xs
+                    logits, caches = T.prefill_block(
+                        cfg, params, toks, caches, pos, vld)
+                    return (caches, pos + jnp.sum(vld[0].astype(pos.dtype))
+                            ), logits
+
+                (_, _), ls = jax.lax.scan(
+                    body, (caches, jnp.zeros((n,), jnp.int32)), (tb, vb))
+                logits = jnp.moveaxis(ls, 0, 1).reshape(n, nb * blk, -1)
+                lg = logits[:, :s - 1].astype(jnp.float32)
+                logz = jax.nn.logsumexp(lg, axis=-1)
+                gold = jnp.take_along_axis(
+                    lg, tokens[:, 1:, None], axis=-1)[..., 0]
+                return jnp.mean(logz - gold, axis=-1)
+
+            self._block_scores[key] = jax.jit(score)
+        return self._block_scores[key]
 
     def evaluate(self, policy: Optional[SparseUpdatePolicy]):
         from .protonet import episode_accuracy

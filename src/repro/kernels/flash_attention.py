@@ -9,6 +9,18 @@ causal FLOPs vs a masked dense computation.
 
 Grid: (B, Hq, Sq/Bq, Sk/Bk).  GQA: the kv block index maps query head
 h -> kv head h // (Hq/Hkv) in the BlockSpec index map (no HBM repeat).
+
+Two entry modes share the kernel body:
+
+- aligned prefill (``q_offset=None``): queries and keys index the same
+  sequence; the causal/SWA block skip is static.
+- **cached block prefill** (``q_offset``/``kv_len`` given): per-batch
+  ``(B,)`` scalars in SMEM place each sample's query block at its own
+  offset into a KV cache and bound the valid cache rows — the serving
+  engine's multi-token prompt ingestion, where every slot sits at a
+  different cache cursor.  The block skip becomes a per-sample predicate
+  (kv blocks beyond ``kv_len`` or entirely in the causal future of the
+  block are skipped at run time).
 """
 from __future__ import annotations
 
@@ -77,6 +89,71 @@ def _flash_kernel(
         ).astype(o_ref.dtype)
 
 
+def _flash_cached_kernel(
+    qo_ref, kl_ref, q_ref, k_ref, v_ref, o_ref, acc, m_acc, l_acc,
+    *, scale: float, n_kv_blocks: int, bq: int, bk: int,
+    causal: bool, window: int,
+):
+    """Cached-block variant: per-sample q offset / kv length from SMEM.
+
+    Queries sit at absolute positions ``qo + qi*bq + i`` against cache
+    rows (absolute positions ``ki*bk + j``); rows at or beyond ``kl`` are
+    stale and masked.  KV blocks entirely beyond the query block's last
+    position, the kv length, or the sliding window are skipped whole —
+    the run-time analogue of the static causal skip.
+    """
+    bi = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    q_off = qo_ref[bi]
+    kv_len = kl_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q_start = q_off + qi * bq
+    k_start = ki * bk
+    relevant = k_start < kv_len
+    if causal:
+        relevant = jnp.logical_and(relevant, k_start <= q_start + bq - 1)
+    if window > 0:
+        relevant = jnp.logical_and(relevant, k_start + bk - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_acc[...] - m_new)
+        l_acc[...] = l_acc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_acc[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _out():
+        o_ref[0, :, 0, :] = (
+            acc[...] / jnp.maximum(l_acc[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
 def flash_attention_pallas(
     q: jax.Array,  # (B, Sq, Hq, D)
     k: jax.Array,  # (B, Sk, Hkv, D)
@@ -86,6 +163,8 @@ def flash_attention_pallas(
     window: int = 0,
     block_q: int = 256,
     block_k: int = 512,
+    q_offset: jax.Array = None,  # (B,) int32 per-sample query offsets
+    kv_len: jax.Array = None,    # (B,) int32 valid cache rows per sample
     interpret: bool = False,
 ) -> jax.Array:
     b, sq, hq, d = q.shape
@@ -96,15 +175,46 @@ def flash_attention_pallas(
     assert sq % bq == 0 and sk % bk == 0
     grid = (b, hq, sq // bq, sk // bk)
 
+    if q_offset is None and kv_len is None:
+        return pl.pallas_call(
+            functools.partial(
+                _flash_kernel,
+                scale=1.0 / math.sqrt(d),
+                n_kv_blocks=sk // bk,
+                bq=bq, bk=bk, causal=causal, window=window,
+            ),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, 1, d), lambda bi, h, qi, ki: (bi, qi, h, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h // group, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h // group, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, 1, d), lambda bi, h, qi, ki: (bi, qi, h, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, sq, hq, d), q.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((bq, d), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+            ],
+            interpret=interpret,
+        )(q, k, v)
+
+    # cached block-prefill mode: per-sample offsets/lengths ride in SMEM
+    q_offset = (jnp.zeros((b,), jnp.int32) if q_offset is None
+                else q_offset.astype(jnp.int32))
+    kv_len = (jnp.full((b,), sk, jnp.int32) if kv_len is None
+              else kv_len.astype(jnp.int32))
     return pl.pallas_call(
         functools.partial(
-            _flash_kernel,
+            _flash_cached_kernel,
             scale=1.0 / math.sqrt(d),
             n_kv_blocks=sk // bk,
             bq=bq, bk=bk, causal=causal, window=window,
         ),
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, bq, 1, d), lambda bi, h, qi, ki: (bi, qi, h, 0)),
             pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h // group, 0)),
             pl.BlockSpec((1, bk, 1, d), lambda bi, h, qi, ki: (bi, ki, h // group, 0)),
@@ -117,4 +227,4 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q_offset, kv_len, q, k, v)

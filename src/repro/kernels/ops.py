@@ -100,12 +100,57 @@ def _fisher_oracle(a, g, mask=None):
     static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
 )
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=256,
-                    block_k=512, interpret=None):
+                    block_k=512, q_offset=None, kv_len=None, interpret=None):
+    """Flash attention; ``q_offset``/``kv_len`` are optional per-sample
+    (B,) vectors for cached block prefill: sample i's queries sit at
+    absolute positions ``q_offset[i] + j`` against cache rows, and rows at
+    or beyond ``kv_len[i]`` are stale and masked (see
+    ``flash_attention_pallas``)."""
     interpret = _default_interpret() if interpret is None else interpret
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=interpret,
+        block_q=block_q, block_k=block_k,
+        q_offset=q_offset, kv_len=kv_len, interpret=interpret,
     )
+
+
+def fisher_tapgrads(g, n, mask=None, *, block_c: int = 256):
+    """Eq. 2 channel scores from *tap gradients* via the fused kernel.
+
+    The probe's tap gradient ``g[l, b, c]`` already equals Eq. 2's inner
+    sum ``u_{b,(l,c)}``, so the per-channel score is ``Δ = Σ_b u² / (2n)``.
+    This routes that reduction through the Pallas fisher kernel by viewing
+    the stacked layers as one channel axis — a ``(B, 1, L·C)`` problem with
+    a ones-valued activation operand — which is the TPU-backend schedule of
+    the probe path's device-side reduction (ROADMAP item).  ``mask`` is an
+    optional (B,) validity vector (bucket-padded episodes); ``n`` the
+    valid-sample normaliser.  Shapes whose flattened channel axis no block
+    tiles fall back to the XLA formula.
+
+    g: (L, B, C) -> (L, C) float32.
+    """
+    l, b, c = g.shape
+    flat = jnp.moveaxis(g, 0, 1).reshape(b, 1, l * c)
+    bc = _divisor_block(l * c, block_c)
+    # compiled Mosaic path: lane-align the channel block like fisher_auto
+    # does (bc must be a multiple of 128; shrinking by halving preserves
+    # divisibility).  block_d=1 is accepted — the fisher kernel's output
+    # block is (1, block_c) already, so sublane-1 2D tiles are part of its
+    # existing compiled surface (hardware validation is the ROADMAP
+    # follow-up).
+    if not _default_interpret():
+        while bc and bc % 128:
+            bc //= 2
+    if not bc:
+        g2 = flat[:, 0, :].astype(jnp.float32) ** 2
+        if mask is not None:
+            g2 = g2 * mask.astype(jnp.float32)[:, None]
+        return (jnp.sum(g2, axis=0) / (2.0 * n)).reshape(l, c)
+    out = fisher(jnp.ones_like(flat), flat, mask=mask, block_d=1, block_c=bc)
+    # the kernel normalises by the (masked) batch count; rescale to 1/(2n)
+    valid = jnp.float32(b) if mask is None else jnp.sum(
+        mask.astype(jnp.float32))
+    return (out * (valid / n)).reshape(l, c)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

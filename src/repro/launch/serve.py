@@ -29,6 +29,14 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--chunk", type=int, default=32,
                     help="decode ticks per fused scan dispatch")
+    ap.add_argument("--prefill-block", type=int, default=None,
+                    help="prompt tokens ingested per prefilling slot per "
+                         "tick (default: the arch's serve_prefill_block; "
+                         "1 = token-by-token prefill)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="in-graph sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter for sampled decoding (0 = off)")
     ap.add_argument("--eager", action="store_true",
                     help="host-driven per-tick loop instead of scan_ticks")
     ap.add_argument("--adapt", action="store_true",
@@ -41,7 +49,9 @@ def main() -> None:
     cfg = configs.preset_config(args.arch, args.preset)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                          fused=not args.eager, chunk=args.chunk)
+                          fused=not args.eager, chunk=args.chunk,
+                          prefill_block=args.prefill_block,
+                          temperature=args.temperature, top_k=args.top_k)
     rng = np.random.default_rng(0)
 
     if args.adapt:
@@ -70,10 +80,12 @@ def main() -> None:
     eng.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in reqs)
+    prompt_toks = sum(len(r.prompt) for r in reqs)
     mode = ("eager" if args.eager else
-            f"fused chunk={args.chunk}, "
+            f"fused chunk={args.chunk} prefill_block={eng.prefill_block}, "
             f"{eng.last_run_report.get('host_syncs', 0)} host syncs")
-    print(f"[serve] {args.requests} requests, {toks} new tokens in {dt:.1f}s "
+    print(f"[serve] {args.requests} requests, {toks} new tokens "
+          f"(+{prompt_toks} prompt tokens ingested) in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s, {eng.ticks} engine ticks, "
           f"{args.slots} slots, {mode})")
     assert all(r.done for r in reqs)

@@ -115,9 +115,12 @@ def main() -> None:
         t0 = time.perf_counter()
         state = trainer.run(init_state)
         dt = time.perf_counter() - t0
+    # a resumed run whose checkpoint already covers --steps executes zero
+    # new steps and records no losses
+    final = (f"final loss {trainer.losses[-1]:.4f}" if trainer.losses
+             else "no new steps (checkpoint already at --steps)")
     print(f"[train] done: {state.step} steps in {dt:.1f}s "
-          f"({dt/max(state.step,1)*1e3:.0f} ms/step), "
-          f"final loss {trainer.losses[-1]:.4f}")
+          f"({dt/max(state.step,1)*1e3:.0f} ms/step), {final}")
 
 
 if __name__ == "__main__":

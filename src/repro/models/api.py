@@ -65,6 +65,13 @@ class ArchConfig:
     # --- VLM (paligemma) ---
     n_img_tokens: int = 0
     img_embed_dim: int = 0
+    # --- serving ---
+    # prompt tokens ingested per prefilling slot per serving tick (block
+    # prefill); 1 = token-by-token.  A per-arch tuning knob: TTFT scales
+    # ~1/B while per-tick prefill compute scales ~B, so memory-tight
+    # targets may prefer smaller blocks.  ServeEngine(prefill_block=...)
+    # overrides.
+    serve_prefill_block: int = 8
     # --- numerics ---
     dtype: str = "bfloat16"
     # --- long-context capability (decides long_500k applicability) ---
@@ -92,6 +99,7 @@ class ArchConfig:
 
     def validate(self) -> "ArchConfig":
         assert self.family in {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+        assert self.serve_prefill_block >= 1
         if self.family in {"dense", "moe", "vlm", "audio"}:
             assert self.n_heads > 0 and self.head_dim > 0
         if self.family == "moe":

@@ -223,10 +223,14 @@ def dot_attention(
     *,
     causal: bool,
     window: int = 0,
-    q_offset: int = 0,
+    q_offset=0,
     kv_len: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Plain masked attention. q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D)."""
+    """Plain masked attention. q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D).
+
+    ``q_offset`` may be a scalar or a per-sample ``(B,)`` vector (block
+    prefill: each slot's query block starts at its own cache length).
+    """
     b, sq, h, d = q.shape
     sk = k.shape[1]
     n_rep = h // k.shape[2]
@@ -234,20 +238,23 @@ def dot_attention(
     v = _repeat_kv(v, n_rep)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
     scores = scores / math.sqrt(d)
-    qpos = jnp.arange(sq) + q_offset
-    kpos = jnp.arange(sk)
-    mask = jnp.ones((sq, sk), dtype=bool)
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim == 0:
+        qpos = (jnp.arange(sq) + q_off)[None, :]  # (1, sq)
+    else:  # per-sample offsets
+        qpos = q_off[:, None] + jnp.arange(sq)[None, :]  # (B, sq)
+    kpos = jnp.arange(sk)[None, None, :]  # (1, 1, sk)
+    mask = jnp.ones((qpos.shape[0], sq, sk), dtype=bool)
     if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
+        mask = mask & (kpos <= qpos[..., None])
     if window > 0:
-        mask &= kpos[None, :] > qpos[:, None] - window
-    mask = mask[None]  # (1, sq, sk)
+        mask = mask & (kpos > qpos[..., None] - window)
     if kv_len is not None:
         kv_len = jnp.asarray(kv_len)
         if kv_len.ndim == 0:
-            mask = mask & (kpos[None, None, :] < kv_len)
+            mask = mask & (kpos < kv_len)
         else:  # per-sample lengths (continuous batching)
-            mask = mask & (kpos[None, None, :] < kv_len[:, None, None])
+            mask = mask & (kpos < kv_len[:, None, None])
     scores = jnp.where(mask[:, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
@@ -334,6 +341,53 @@ def chunked_attention(
     return jnp.swapaxes(out, 1, 2)
 
 
+def _scatter_block_rows(buf: jax.Array, vals: jax.Array, lens: jax.Array,
+                        valid: jax.Array) -> jax.Array:
+    """Write slot b's valid block rows into ``buf`` at its own cursor.
+
+    buf: (B, S_max, ...), vals: (B, S, ...), lens/valid: (B,) / (B, S).
+    Row ``lens[b] + j`` receives ``vals[b, j]`` when valid; invalid rows
+    rewrite their original value (a no-op — clip collisions at the last
+    row are harmless because every colliding write carries that same
+    original value).  Valid rows must fit: ``lens + Σvalid <= S_max``.
+    """
+    b, s = vals.shape[:2]
+    s_max = buf.shape[1]
+    rows = jnp.clip(lens[:, None] + jnp.arange(s)[None, :], 0, s_max - 1)
+    bidx = jnp.arange(b)[:, None]
+    vm = valid.reshape(valid.shape + (1,) * (vals.ndim - 2))
+    return buf.at[bidx, rows].set(
+        jnp.where(vm, vals.astype(buf.dtype), buf[bidx, rows]))
+
+
+def _block_cached_attention(
+    q: jax.Array,   # (B, S, H, D) query block
+    ck: jax.Array,  # (B, S_max, Hkv, D) cache keys (block rows written)
+    cv: jax.Array,
+    *,
+    lens: jax.Array,   # (B,) tokens in cache before this block
+    n_new: jax.Array,  # (B,) valid tokens written by this block
+) -> jax.Array:
+    """Causal block attention of a prompt block against a (non-rolling)
+    decode cache: each slot's queries sit at absolute positions
+    ``lens + j`` against cache rows.  On TPU the Pallas flash kernel
+    handles the per-slot offsets (and skips fully-masked kv blocks);
+    elsewhere the jnp masked oracle runs.
+    """
+    s_max = ck.shape[1]
+    kv_len = lens + n_new
+    if jax.default_backend() == "tpu":
+        from ..kernels.ops import _divisor_block, flash_attention
+
+        bq = _divisor_block(q.shape[1], 256)
+        bk = _divisor_block(s_max, 512)
+        if bq and bk:
+            return flash_attention(
+                q, ck, cv, causal=True, q_offset=lens, kv_len=kv_len,
+                block_q=bq, block_k=bk)
+    return dot_attention(q, ck, cv, causal=True, q_offset=lens, kv_len=kv_len)
+
+
 def attention_apply(
     p: Params,
     x: jax.Array,
@@ -345,6 +399,7 @@ def attention_apply(
     cross_hidden: Optional[jax.Array] = None,
     delta: Optional[Params] = None,
     head_idx: Optional[np.ndarray] = None,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Multi-head attention with GQA/MQA, RoPE, SWA, KV cache and deltas.
 
@@ -352,6 +407,10 @@ def attention_apply(
     cache = {"k": (B, S_max, Hkv, Dh), "v": ..., "len": ()} decode-style.
     cross_hidden supplies encoder hidden states for cross-attention
     (projected with this layer's wk/wv, no RoPE).
+    ``valid`` (B, S) switches the cache path into *block-prefill* mode:
+    each slot writes its left-aligned valid tokens at its own cache cursor
+    (ragged tails and paused slots contribute nothing) and attends causally
+    from per-slot offsets.
     """
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -388,22 +447,64 @@ def attention_apply(
             s_max = cache["k"].shape[1]
             lens = cache["len"]  # (B,) per-slot lengths
             rolling = cfg.sliding_window > 0 and s_max == cfg.sliding_window
-            if s == 1:
-                pos = (lens % s_max) if rolling else jnp.minimum(lens, s_max - 1)
-                bidx = jnp.arange(b)
-                ck = cache["k"].at[bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
-                cv = cache["v"].at[bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
-            else:  # batch-aligned prefill write
-                start = (lens[0] % s_max) if rolling else lens[0]
-                ck = lax.dynamic_update_slice_in_dim(
-                    cache["k"], k.astype(cache["k"].dtype), start, axis=1)
-                cv = lax.dynamic_update_slice_in_dim(
-                    cache["v"], v.astype(cache["v"].dtype), start, axis=1)
-            new_cache = {"k": ck, "v": cv, "len": lens + s}
-            kv_len = jnp.minimum(lens + s, s_max)
-            out = dot_attention(
-                q, ck, cv, causal=False, kv_len=kv_len,
-            )
+            if valid is not None and rolling:
+                # block prefill into a rolling SWA buffer: a parallel
+                # write-then-attend would let later block tokens overwrite
+                # rows that earlier queries of the same block still attend
+                # to once the buffer wraps.  Fold the block per position
+                # with the exact single-token ops instead (write row
+                # len % s_max, attend with kv_len, advance) — bit-identical
+                # to token-by-token prefill at any prompt length/block size
+                n_new = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+                bi = jnp.arange(b)
+
+                def roll_step(carry, xs):
+                    ck, cv, cur = carry
+                    kj, vj, qj, vld = xs
+                    pos_w = cur % s_max
+                    vm1 = vld[:, None, None]
+                    ck = ck.at[bi, pos_w].set(jnp.where(
+                        vm1, kj.astype(ck.dtype), ck[bi, pos_w]))
+                    cv = cv.at[bi, pos_w].set(jnp.where(
+                        vm1, vj.astype(cv.dtype), cv[bi, pos_w]))
+                    out_j = dot_attention(
+                        qj[:, None], ck, cv, causal=False,
+                        kv_len=jnp.minimum(cur + 1, s_max))
+                    return (ck, cv, cur + vld.astype(cur.dtype)), out_j[:, 0]
+
+                (ck, cv, _), outs = lax.scan(
+                    roll_step, (cache["k"], cache["v"], lens),
+                    (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+                     jnp.moveaxis(q, 1, 0), jnp.moveaxis(valid, 1, 0)))
+                out = jnp.moveaxis(outs, 0, 1)  # (B, S, H, D)
+                new_cache = {"k": ck, "v": cv, "len": lens + n_new}
+            elif valid is not None:
+                # block prefill: per-slot scatter of the valid rows only
+                # (the serving engine's submit() validation guarantees
+                # they fit)
+                n_new = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+                ck = _scatter_block_rows(cache["k"], k, lens, valid)
+                cv = _scatter_block_rows(cache["v"], v, lens, valid)
+                new_cache = {"k": ck, "v": cv, "len": lens + n_new}
+                out = _block_cached_attention(
+                    q, ck, cv, lens=lens, n_new=n_new)
+            else:
+                if s == 1:
+                    pos = (lens % s_max) if rolling else jnp.minimum(lens, s_max - 1)
+                    bidx = jnp.arange(b)
+                    ck = cache["k"].at[bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
+                    cv = cache["v"].at[bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
+                else:  # batch-aligned prefill write
+                    start = (lens[0] % s_max) if rolling else lens[0]
+                    ck = lax.dynamic_update_slice_in_dim(
+                        cache["k"], k.astype(cache["k"].dtype), start, axis=1)
+                    cv = lax.dynamic_update_slice_in_dim(
+                        cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+                new_cache = {"k": ck, "v": cv, "len": lens + s}
+                kv_len = jnp.minimum(lens + s, s_max)
+                out = dot_attention(
+                    q, ck, cv, causal=False, kv_len=kv_len,
+                )
         else:
             new_cache = None
             if s * k.shape[1] > 1024 * 1024:  # keep scores O(S*chunk)
@@ -462,10 +563,14 @@ def mla_apply(
     cache: Optional[Params] = None,
     delta: Optional[Params] = None,
     head_idx: Optional[np.ndarray] = None,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """MLA forward.  Prefill materialises per-head K/V; decode runs in the
     *absorbed* form over the compressed latent cache
     (cache = {"ckv": (B, S, r_kv), "krope": (B, S, d_r), "len": ()}).
+    ``valid`` (B, S) switches the cache path into block-prefill mode:
+    per-slot scatter of the valid latent rows, absorbed attention with a
+    per-query causal mask from each slot's cache offset.
     """
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -501,20 +606,30 @@ def mla_apply(
         # absorbed decode: logits against latent cache directly
         lens = cache["len"]  # (B,)
         s_max = cache["ckv"].shape[1]
-        if s == 1:
+        if valid is not None:
+            # block prefill: per-slot scatter of the valid latent rows
+            n_new = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+            cckv = _scatter_block_rows(cache["ckv"], ckv, lens, valid)
+            ckr = _scatter_block_rows(cache["krope"], k_rope[:, :, 0, :],
+                                      lens, valid)
+            new_cache = {"ckv": cckv, "krope": ckr, "len": lens + n_new}
+            kv_len = jnp.minimum(lens + n_new, s_max)
+        elif s == 1:
             bidx = jnp.arange(b)
             pos = jnp.minimum(lens, s_max - 1)
             cckv = cache["ckv"].at[bidx, pos].set(ckv[:, 0].astype(cache["ckv"].dtype))
             ckr = cache["krope"].at[bidx, pos].set(
                 k_rope[:, 0, 0, :].astype(cache["krope"].dtype))
+            new_cache = {"ckv": cckv, "krope": ckr, "len": lens + s}
+            kv_len = jnp.minimum(lens + s, s_max)
         else:
             cckv = lax.dynamic_update_slice_in_dim(
                 cache["ckv"], ckv.astype(cache["ckv"].dtype), lens[0], axis=1)
             ckr = lax.dynamic_update_slice_in_dim(
                 cache["krope"], k_rope[:, :, 0, :].astype(cache["krope"].dtype),
                 lens[0], axis=1)
-        new_cache = {"ckv": cckv, "krope": ckr, "len": lens + s}
-        kv_len = jnp.minimum(lens + s, s_max)
+            new_cache = {"ckv": cckv, "krope": ckr, "len": lens + s}
+            kv_len = jnp.minimum(lens + s, s_max)
         # absorb W_uk into q:  (B,S,H,dn) x (r,H,dn) -> (B,S,H,r)
         w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, dn)
         q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
@@ -527,6 +642,14 @@ def mla_apply(
         tpos = jnp.arange(s_max)
         logits = jnp.where(
             tpos[None, None, None, :] < kv_len[:, None, None, None], logits, -1e30)
+        if valid is not None:
+            # per-query causal mask within the block: query j attends rows
+            # at absolute positions <= lens + j (rows are positions here —
+            # the latent cache never rolls)
+            qpos = lens[:, None] + jnp.arange(s)[None, :]  # (B, S)
+            logits = jnp.where(
+                tpos[None, None, None, :] <= qpos[:, None, :, None],
+                logits, -1e30)
         w = jax.nn.softmax(logits, axis=-1)
         o_lat = jnp.einsum("bhst,btr->bshr", w.astype(cckv.dtype), cckv)
         w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, dv)
@@ -578,8 +701,16 @@ def moe_apply(
     delta: Optional[Params] = None,
     expert_idx: Optional[np.ndarray] = None,
     tap: Optional[jax.Array] = None,
+    drop_free: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Capacity-based token dispatch -> batched expert FFN -> combine.
+
+    ``drop_free=True`` sizes every expert queue for the worst case (all
+    routed tokens on one expert) so no token is ever dropped — the serving
+    contract: a request's stream must not depend on which other tokens
+    share its dispatch (block prefill batches whole prompt blocks, token
+    decode batches one per slot; capacity drops would make the two paths
+    diverge).  Training keeps the capped dispatch.
 
     Returns (output, aux_load_balance_loss).  Dispatch builds per-expert
     token index lists via cumsum ranking (no one-hot einsum; gather/scatter
@@ -595,7 +726,7 @@ def moe_apply(
 
     if _ctx.get("moe_row_dispatch"):
         return _moe_apply_rows(p, x, cfg, delta=delta, expert_idx=expert_idx,
-                               tap=tap)
+                               tap=tap, drop_free=drop_free)
     b, s, d = x.shape
     t = b * s
     e, k = cfg.n_experts, cfg.top_k
@@ -610,8 +741,9 @@ def moe_apply(
     density = jnp.mean(jax.nn.one_hot(sel[:, 0], e), axis=0)
     aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
 
-    cap = int(cfg.capacity_factor * t * k / e)
-    cap = max(cap, 4)
+    # drop-free worst case: top_k picks *distinct* experts per token, so one
+    # expert sees at most one choice per token — capacity t, not t*k
+    cap = t if drop_free else max(int(cfg.capacity_factor * t * k / e), 4)
     # position of each (token, choice) within its expert queue
     onehot = jax.nn.one_hot(sel, e, dtype=jnp.int32)  # (t, k, e)
     pos_in_expert = jnp.cumsum(onehot.reshape(t * k, e), axis=0) - 1
@@ -675,6 +807,7 @@ def _moe_apply_rows(
     delta: Optional[Params] = None,
     expert_idx: Optional[np.ndarray] = None,
     tap: Optional[jax.Array] = None,
+    drop_free: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Per-batch-row MoE dispatch (shard-local queues).
 
@@ -698,7 +831,8 @@ def _moe_apply_rows(
         jax.nn.one_hot(sel[..., 0].reshape(-1), e), axis=0)
     aux = e * jnp.sum(density * jnp.mean(probs.reshape(-1, e), axis=0))
 
-    cap = max(4, int(cfg.capacity_factor * s * k / e))
+    # drop-free: distinct experts per token -> at most s choices per expert
+    cap = s if drop_free else max(4, int(cfg.capacity_factor * s * k / e))
     onehot = jax.nn.one_hot(sel, e, dtype=jnp.int32).reshape(b, s * k, e)
     pos = jnp.cumsum(onehot, axis=1) - 1
     pos = jnp.sum(pos * onehot, axis=-1)  # (b, s*k)

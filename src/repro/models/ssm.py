@@ -153,11 +153,20 @@ def ssd_apply(
     cache: Optional[Params] = None,
     delta: Optional[Params] = None,
     head_idx: Optional[np.ndarray] = None,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Full Mamba2 block: proj -> conv -> SSD -> gated norm -> out proj.
 
     cache = {"conv": (B, d_conv-1, C), "ssm": (B, H, P, N), "len": ()} for
     decode.  TinyTrain deltas select SSD heads.
+
+    ``valid`` (B, S) switches the cache path into *block-prefill* mode: the
+    block's projections and causal conv run in parallel, then the block is
+    folded through the recurrent state with a scan of the exact
+    single-token update ops (dt is zeroed on invalid positions, so ragged
+    tails and paused slots leave the state untouched) — token streams are
+    bit-identical to feeding the same tokens one per step.  The conv
+    window advances per slot by its own valid-token count.
     """
     b, s, d = x.shape
     di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
@@ -179,7 +188,40 @@ def ssd_apply(
     xs, bb, cc = conv_out[..., :di], conv_out[..., di : di + n], conv_out[..., di + n :]
 
     xh = xs.reshape(b, s, h, hd)
-    if cache is not None and s == 1:
+    if cache is not None and valid is not None:
+        # block prefill: dt = 0 on invalid positions makes the decay
+        # exp(dt*a) = 1 and the input term dt*x = 0 — the state update is
+        # the identity there, so ragged tails / paused slots are no-ops
+        n_new = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+        dt = dt * valid.astype(dt.dtype)[..., None]
+        # conv window: last (d_conv - 1) *valid* inputs per slot — slice
+        # the (state ++ block) stream at each slot's own valid count
+        km1 = p["conv_w"].shape[0] - 1
+        if km1 > 0:
+            xp = jnp.concatenate([conv_state, conv_in], axis=1)
+            rows = n_new[:, None] + jnp.arange(km1)[None, :]  # (B, k-1)
+            new_conv_state = jnp.take_along_axis(xp, rows[..., None], axis=1)
+
+        def step(st, inp):
+            # exactly the single-token recurrent update (bit-parity with
+            # token-by-token decode)
+            xh_j, dt_j, bb_j, cc_j = inp
+            dta = jnp.exp(dt_j * a[None, :])  # (B, H)
+            dbx = jnp.einsum(
+                "bn,bhp->bhpn", bb_j, (xh_j * dt_j[:, :, None]).astype(st.dtype)
+            )
+            st = st * dta[:, :, None, None].astype(st.dtype) + dbx
+            y_j = jnp.einsum("bhpn,bn->bhp", st, cc_j.astype(st.dtype))
+            return st, y_j
+
+        st, ys = lax.scan(
+            step, cache["ssm"],
+            (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+             jnp.moveaxis(bb, 1, 0), jnp.moveaxis(cc, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)
+        new_cache = {"conv": new_conv_state, "ssm": st,
+                     "len": cache["len"] + n_new}
+    elif cache is not None and s == 1:
         # single-token recurrent update
         st = cache["ssm"]  # (B,H,P,N)
         dta = jnp.exp(dt[:, 0] * a[None, :])  # (B,H)

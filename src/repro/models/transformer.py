@@ -225,8 +225,15 @@ def _apply_block(
     deltas: Optional[Dict[str, Params]] = None,
     chan_idx: Optional[Dict[str, np.ndarray]] = None,
     taps: Optional[Dict[str, jax.Array]] = None,
+    valid: Optional[jax.Array] = None,
+    drop_free: bool = False,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """One decoder layer.  Returns (x, new_cache, moe_aux)."""
+    """One decoder layer.  Returns (x, new_cache, moe_aux).
+
+    ``valid`` (B, S) enables the mixers' block-prefill cache mode (per-slot
+    multi-token cache writes with ragged-tail masking); ``drop_free`` sizes
+    MoE expert queues so routed tokens are never dropped (serving parity).
+    """
     bk, fk = block_kind(cfg, layer), ffn_kind(cfg, layer)
     aux = jnp.zeros((), jnp.float32)
     deltas = deltas or {}
@@ -240,6 +247,7 @@ def _apply_block(
             p["attn"], h, cfg, positions=positions,
             cache=cache.get("attn") if cache else None,
             delta=deltas.get("attn"), head_idx=chan_idx.get("attn"),
+            valid=valid,
         )
         if new_cache is not None:
             new_cache["attn"] = c
@@ -248,6 +256,7 @@ def _apply_block(
             p["attn"], h, cfg, positions=positions,
             cache=cache.get("attn") if cache else None,
             delta=deltas.get("attn"), head_idx=chan_idx.get("attn"),
+            valid=valid,
         )
         if new_cache is not None:
             new_cache["attn"] = c
@@ -256,6 +265,7 @@ def _apply_block(
             p["ssm"], h, cfg,
             cache=cache.get("ssm") if cache else None,
             delta=deltas.get("ssm"), head_idx=chan_idx.get("ssm"),
+            valid=valid,
         )
         if new_cache is not None:
             new_cache["ssm"] = c
@@ -272,7 +282,7 @@ def _apply_block(
             y, aux = L.moe_apply(
                 p["moe"], h, cfg,
                 delta=deltas.get("moe"), expert_idx=chan_idx.get("moe"),
-                tap=taps.get("ffn"),
+                tap=taps.get("ffn"), drop_free=drop_free,
             )
         else:
             if "ffn" in taps:
@@ -310,9 +320,11 @@ def _mlp_tapped(p: Params, x: jax.Array, act: str, tap: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _shared_attn_apply(cfg: ArchConfig, p: Params, x, positions, cache=None):
+def _shared_attn_apply(cfg: ArchConfig, p: Params, x, positions, cache=None,
+                       valid=None):
     h = L.apply_norm(cfg.norm, p["norm1"], x)
-    y, c = L.attention_apply(p["attn"], h, cfg, positions=positions, cache=cache)
+    y, c = L.attention_apply(p["attn"], h, cfg, positions=positions,
+                             cache=cache, valid=valid)
     x = x + y
     h = L.apply_norm(cfg.norm, p["norm2"], x)
     x = x + L.mlp_apply(p["mlp"], h, cfg.act)
@@ -320,7 +332,8 @@ def _shared_attn_apply(cfg: ArchConfig, p: Params, x, positions, cache=None):
 
 
 def _scan_run(cfg, stack, x, positions, lo, hi, group_ids, *, taps=None,
-              caches=None, enc_out=None, stop_grad=False, remat=False):
+              caches=None, enc_out=None, stop_grad=False, remat=False,
+              valid=None, drop_free=False):
     """Scan layers [lo, hi) of one stack group (absolute layer ids group_ids).
 
     taps: stacked (n, ...) tap arrays aligned with the slice, or None.
@@ -341,7 +354,7 @@ def _scan_run(cfg, stack, x, positions, lo, hi, group_ids, *, taps=None,
         cache_in = jax.tree_util.tree_map(lambda a: a[0], caches) if caches else None
         x, nc, aux = _apply_block(
             cfg, lp, x, positions, layer0, cache=cache_in, enc_out=enc_out,
-            taps=tap,
+            taps=tap, valid=valid, drop_free=drop_free,
         )
         ncs = (
             jax.tree_util.tree_map(lambda a: a[None], nc) if caches else None
@@ -352,7 +365,7 @@ def _scan_run(cfg, stack, x, positions, lo, hi, group_ids, *, taps=None,
         def body2(carry, lp):
             xcur = carry
             xcur, _, aux = _apply_block(cfg, lp, xcur, positions, layer0,
-                                        enc_out=enc_out)
+                                        enc_out=enc_out, drop_free=drop_free)
             return xcur, aux
         if remat and not stop_grad:
             body2 = jax.checkpoint(body2)
@@ -363,7 +376,8 @@ def _scan_run(cfg, stack, x, positions, lo, hi, group_ids, *, taps=None,
             lp, tap = xs
             xcur = carry
             xcur, _, aux = _apply_block(cfg, lp, xcur, positions, layer0,
-                                        enc_out=enc_out, taps=tap)
+                                        enc_out=enc_out, taps=tap,
+                                        drop_free=drop_free)
             return xcur, aux
         x, auxs = lax.scan(body3, x, (sl, taps))
         return x, None, jnp.sum(auxs)
@@ -372,7 +386,8 @@ def _scan_run(cfg, stack, x, positions, lo, hi, group_ids, *, taps=None,
         lp, cache_in = xs
         xcur = carry
         xcur, nc, aux = _apply_block(cfg, lp, xcur, positions, layer0,
-                                     cache=cache_in, enc_out=enc_out)
+                                     cache=cache_in, enc_out=enc_out,
+                                     valid=valid, drop_free=drop_free)
         return xcur, (nc, aux)
 
     x, (ncs, auxs) = lax.scan(body4, x, (sl, caches))
@@ -391,6 +406,8 @@ def forward_hidden(
     plan=None,  # repro.core.policy.SparseUpdatePolicy
     taps: Optional[Dict[str, Any]] = None,
     chan_idx: Optional[Dict[int, Dict[str, jax.Array]]] = None,
+    seq_valid: Optional[jax.Array] = None,
+    drop_free: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
     """Run the decoder stacks.  Exactly one of (deltas+plan, taps, caches)
     modes may be active; all may be None for plain inference.
@@ -398,7 +415,13 @@ def forward_hidden(
     ``chan_idx`` optionally overrides the plan's static channel indices with
     *traced* arrays: the adaptation engine jits one step per policy
     *structure* and feeds per-task channel choices as runtime arguments
-    (no recompile per task)."""
+    (no recompile per task).
+
+    ``seq_valid`` (B, S) enables block-prefill cache mode: every cached
+    mixer writes its slot's left-aligned valid tokens at that slot's own
+    cache cursor (ragged tails masked) instead of assuming batch-aligned
+    sequence positions.  ``drop_free`` switches MoE layers to
+    never-drop expert capacity (the serving contract)."""
     groups = stack_groups(cfg)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
@@ -450,7 +473,8 @@ def forward_hidden(
                     return _apply_block(
                         cfg, lp_, x_, positions, lid,
                         cache=cache_in, enc_out=enc_out, deltas=d_,
-                        chan_idx=ci_, taps=tap,
+                        chan_idx=ci_, taps=tap, valid=seq_valid,
+                        drop_free=drop_free,
                     )
 
                 if remat:
@@ -471,7 +495,8 @@ def forward_hidden(
                 x, ncs, aux = _scan_run(
                     cfg, stack, x, positions, lo, hi, ids,
                     taps=seg_taps, caches=seg_caches, enc_out=enc_out,
-                    stop_grad=stop, remat=remat,
+                    stop_grad=stop, remat=remat, valid=seq_valid,
+                    drop_free=drop_free,
                 )
                 if g_caches is not None:
                     for j in range(lo, hi):
@@ -485,7 +510,8 @@ def forward_hidden(
                 if (last + 1) % shared_every == 0:
                     sc = caches.get(f"shared{last}") if caches else None
                     x, nc = _shared_attn_apply(
-                        cfg, params["shared_attn"], x, positions, cache=sc
+                        cfg, params["shared_attn"], x, positions, cache=sc,
+                        valid=seq_valid,
                     )
                     if caches is not None:
                         new_caches[f"shared{last}"] = nc
@@ -748,8 +774,15 @@ def decode_step(
     caches: Dict[str, Any],
     pos: jax.Array,  # () shared or (B,) per-slot positions
     enc_out: Optional[jax.Array] = None,
+    *,
+    drop_free: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One decode step: new token -> logits over vocab, updated caches."""
+    """One decode step: new token -> logits over vocab, updated caches.
+
+    ``drop_free=True`` is the serving engines' setting: MoE expert queues
+    are sized so no routed token drops, keeping a slot's stream independent
+    of its batch neighbours (and of prefill block size).
+    """
     x = embed_tokens(cfg, params, tokens)
     pos = jnp.asarray(pos)
     if pos.ndim == 0:
@@ -757,7 +790,47 @@ def decode_step(
     else:
         positions = pos[:, None]
     h, new_caches, _ = forward_hidden(
-        cfg, params, x, positions, caches=caches, enc_out=enc_out
+        cfg, params, x, positions, caches=caches, enc_out=enc_out,
+        drop_free=drop_free,
+    )
+    logits = unembed(cfg, params, h)
+    return logits, new_caches
+
+
+def prefill_block(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, S) block of prompt tokens, left-aligned valid
+    caches: Dict[str, Any],
+    pos: jax.Array,  # (B,) per-slot absolute position of tokens[:, 0]
+    valid: Optional[jax.Array] = None,  # (B, S) bool; None = all valid
+    enc_out: Optional[jax.Array] = None,
+    *,
+    drop_free: bool = True,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Sequence-mode prompt ingestion: a whole (B, S) block per dispatch.
+
+    Every cached mixer writes its slot's ``valid`` tokens in one shot at
+    that slot's own cache cursor — attention scatters S K/V rows and runs
+    causal block attention from per-slot offsets (the Pallas flash kernel
+    on TPU, jnp fallback elsewhere); SSM layers fold the block through the
+    conv window + recurrent state.  ``valid`` must be a left-aligned prefix
+    mask per slot (ragged prompt tails; all-False rows are paused slots and
+    advance nothing).  Returns (logits (B, S, vocab), new_caches); only
+    logits at valid positions are meaningful.
+
+    Feeding a prompt through ``prefill_block`` produces the same caches and
+    next-token choice as feeding it token-by-token through
+    :func:`decode_step` — the serving engine's block/token parity contract.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    s = tokens.shape[1]
+    positions = jnp.asarray(pos)[:, None] + jnp.arange(s)[None, :]
+    if valid is None:
+        valid = jnp.ones(tokens.shape, bool)
+    h, new_caches, _ = forward_hidden(
+        cfg, params, x, positions, caches=caches, enc_out=enc_out,
+        seq_valid=valid, drop_free=drop_free,
     )
     logits = unembed(cfg, params, h)
     return logits, new_caches

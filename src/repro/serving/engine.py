@@ -10,7 +10,9 @@ The engine is **device-resident** by default (``fused=True``): per-slot
 request state (prompt buffer, cursor, position, last token, remaining
 ``max_new`` budget, active flag) lives in fixed-shape device arrays
 (:class:`SlotState`) and :meth:`ServeEngine.scan_ticks` compiles a
-multi-tick ``lax.scan`` that decodes, greedy-samples in-graph, advances
+multi-tick device loop that decodes, samples in-graph (greedy by default;
+temperature / top-k keys each draw on (request id, token index), so
+sampled streams are schedule-invariant), advances
 prefill-vs-generate per slot, decrements budgets and evicts + re-admits
 from a device-side :class:`PendingBuffer` — one dispatch and at most one
 blocking host transfer per chunk, mirroring the adaptation engine's
@@ -18,6 +20,16 @@ blocking host transfer per chunk, mirroring the adaptation engine's
 telemetry).  ``fused=False`` keeps the eager one-dispatch-per-tick loop as
 a debugging escape hatch; both paths share one lifecycle specification and
 produce identical token streams.
+
+**Block prefill** (``prefill_block`` = B > 1): while any slot is still
+consuming its prompt, a tick ingests up to B prompt tokens per prefilling
+slot in one ``T.prefill_block`` dispatch (per-slot cache cursors, ragged
+tails masked) instead of one token per tick — time-to-first-token drops
+from O(prompt_len) ticks to O(prompt_len / B).  Generation stays
+single-token ticks (``T.decode_step``), so steady-state decode runs the
+exact token-mode program and streams are bit-identical to ``B == 1``
+(greedy and sampled alike — sample keys depend on the token, not the
+schedule).
 
 TinyTrain integration: ``fold_deltas`` folds channel deltas into a serving
 parameter copy (W ⊕ scatter(ΔW)), so adapted models serve at exactly base
@@ -54,6 +66,7 @@ class Request:
 class _Slot:
     req: Optional[Request] = None
     cursor: int = 0  # next prompt token to feed; >= len(prompt) => generating
+    rid: int = -1  # engine request id (sampling key; mirrors the fused rid)
 
 
 class SlotState(NamedTuple):
@@ -91,6 +104,10 @@ class ServeEngine:
         fused: bool = True,
         chunk: int = 32,
         pending: Optional[int] = None,
+        prefill_block: Optional[int] = None,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        sample_seed: int = 0,
     ):
         self.cfg = cfg
         self.params = params
@@ -99,9 +116,28 @@ class ServeEngine:
         self.max_prompt = max_len
         self.fused = fused
         self.chunk = chunk
-        # device pending-buffer capacity: bounds re-admissions per chunk
-        # (if it drains mid-chunk, freed slots idle until the next refill —
-        # a utilisation cap, never a correctness issue)
+        # prompt tokens ingested per prefilling slot per tick (fused path);
+        # 1 = legacy token-by-token prefill, the arch default otherwise
+        self.prefill_block = int(
+            cfg.serve_prefill_block if prefill_block is None else prefill_block)
+        if self.prefill_block < 1:
+            raise ValueError(
+                f"prefill_block must be >= 1, got {self.prefill_block}")
+        # in-graph sampling: greedy when temperature == 0, else
+        # temperature / top-k categorical.  Every sampled token draws from
+        # fold_in(fold_in(seed, request_id), token_index) — a function of
+        # *what* is sampled, not *when* — so streams are deterministic per
+        # seed and identical across prefill block sizes, chunk sizes,
+        # batch neighbours and the eager/fused paths.
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        self._sample_key = jax.random.PRNGKey(sample_seed)
+        # device pending-buffer capacity: bounds re-admissions per dispatch.
+        # When it drains mid-chunk while the host still holds queued work,
+        # the device loop exits the chunk early so the host can refill it —
+        # freed slots no longer idle out the rest of the chunk.
         self.pending_size = pending if pending is not None else max(slots * 4, 8)
         if self.pending_size < 1:
             raise ValueError("pending buffer needs at least one entry")
@@ -128,13 +164,35 @@ class ServeEngine:
         self._live: set = set()
         self._next_rid = 0
 
-        # greedy sampling happens inside the jitted step: each tick ships a
+        # sampling happens inside the jitted step: each tick ships a
         # (slots,) int32 vector to the host instead of (slots, vocab) logits
-        def decode(p, t, c, pos):
-            logits, c = T.decode_step(cfg, p, t, c, pos)
-            return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), c
+        def decode(p, t, c, pos, rids, tok_idx):
+            logits, c = T.decode_step(cfg, p, t, c, pos, drop_free=True)
+            return self._pick(logits[:, 0], rids, tok_idx), c
 
         self._decode = jax.jit(decode)
+
+    def _pick(self, logits: jax.Array, rids: jax.Array,
+              tok_idx: jax.Array) -> jax.Array:
+        """Next-token choice from (slots, vocab) logits, in-graph.
+
+        ``rids`` / ``tok_idx`` are (slots,) and identify *which* token of
+        *which* request each row would emit; the sample key is derived
+        from them, never from wall-clock scheduling.
+        """
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lg = logits.astype(jnp.float32) / self.temperature
+        if self.top_k > 0:
+            kth = lax.top_k(lg, self.top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        base = self._sample_key
+
+        def row_key(r, i):
+            return jax.random.fold_in(jax.random.fold_in(base, r), i)
+
+        keys = jax.vmap(row_key)(rids, tok_idx)
+        return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
 
     # ------------------------------------------------------------------
     # Submission
@@ -167,6 +225,10 @@ class ServeEngine:
             if sl.req is None and self.queue:
                 sl.req = self.queue.popleft()
                 sl.cursor = 0
+                # admission order matches the fused path's staging order,
+                # so sampling keys (keyed on rid) agree between the paths
+                sl.rid = self._next_rid
+                self._next_rid += 1
                 self.pos[i] = 0
                 mask[i] = True
         if mask.any():
@@ -188,9 +250,14 @@ class ServeEngine:
                 toks[i, 0] = int(sl.req.prompt[sl.cursor])
             else:
                 toks[i, 0] = sl.req.out[-1]
+        rids = np.asarray([sl.rid if sl.req is not None else -1
+                           for sl in self.slots], np.int32)
+        tok_idx = np.asarray([len(sl.req.out) if sl.req is not None else 0
+                              for sl in self.slots], np.int32)
         next_tok, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches,
             jnp.asarray(self.pos, jnp.int32),
+            jnp.asarray(rids), jnp.asarray(tok_idx),
         )
         next_tok = _telemetry._fetch(next_tok)
         freed = False
@@ -240,12 +307,19 @@ class ServeEngine:
     def scan_ticks(self, chunk: int):
         """Compiled multi-tick runner, keyed on chunk length.
 
-        run(params, state, caches, pending) -> (state, caches, pending,
-        per-tick events); state and caches are donated carries.  Each tick:
-        admit pending into free slots, decode + greedy-sample every slot,
-        advance prefill-vs-generate cursors, decrement budgets, evict done
-        slots — so an eviction at tick t re-admits at tick t+1 without any
-        host involvement.
+        run(params, state, caches, pending, budget, backlog) ->
+        (state, caches, pending, per-tick events, ticks_executed);
+        state and caches are donated carries, ``budget`` (<= chunk) and
+        ``backlog`` are traced scalars so tail chunks reuse the compiled
+        program.  Each tick: admit pending into free slots, run one decode
+        (or, while any slot is still prefilling, one ``prefill_block``
+        ingestion of up to ``prefill_block`` prompt tokens per prefilling
+        slot), sample in-graph, advance cursors, decrement budgets, evict
+        done slots — so an eviction at tick t re-admits at tick t+1 without
+        any host involvement.  The device loop exits early when the pending
+        buffer is drained and either the host holds more queued work for a
+        freed slot (mid-chunk drain refill) or no slot is active (tail of
+        the run) — idle ticks are never dispatched.
         """
         chunk = int(chunk)
         if chunk not in self._scan_cache:
@@ -253,8 +327,10 @@ class ServeEngine:
             max_len = self.max_len
             maxp = self.max_prompt
             P = self.pending_size
+            B = self.prefill_block
+            slots = self.n_slots
 
-            def body(params, carry, _):
+            def body(params, carry):
                 state, caches, pend = carry
 
                 # -- admit: free slots claim pending entries in FIFO order
@@ -281,25 +357,61 @@ class ServeEngine:
                 pend = pend._replace(head=pend.head + n_admit)
                 caches = T.reset_slot_state(caches, take)
 
-                # -- one decode tick over every slot (inactive ones masked)
-                prefilling = state.cursor < state.prompt_len
-                ptok = jnp.take_along_axis(
-                    state.prompt,
-                    jnp.clip(state.cursor, 0, maxp - 1)[:, None],
-                    axis=1)[:, 0]
-                tok = jnp.where(
-                    state.active,
-                    jnp.where(prefilling, ptok, state.last_tok), 0)
-                logits, caches = T.decode_step(
-                    cfg, params, tok[:, None], caches, state.pos)
-                next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                prefilling = state.active & (state.cursor < state.prompt_len)
+
+                # -- forward: one token per slot, or a prompt block while
+                # any slot is still prefilling.  Generating slots pause
+                # during block ticks, so every generated token comes from
+                # the exact single-token decode program regardless of B —
+                # the bit-parity contract between block sizes.
+                def decode_tick(caches):
+                    ptok = jnp.take_along_axis(
+                        state.prompt,
+                        jnp.clip(state.cursor, 0, maxp - 1)[:, None],
+                        axis=1)[:, 0]
+                    tok = jnp.where(
+                        state.active,
+                        jnp.where(prefilling, ptok, state.last_tok), 0)
+                    logits, caches = T.decode_step(
+                        cfg, params, tok[:, None], caches, state.pos,
+                        drop_free=True)
+                    return (caches, logits[:, 0],
+                            state.active.astype(jnp.int32))
+
+                def block_tick(caches):
+                    n_tok = jnp.where(
+                        prefilling,
+                        jnp.minimum(B, state.prompt_len - state.cursor), 0)
+                    j = jnp.arange(B)[None, :]
+                    valid = j < n_tok[:, None]
+                    gidx = jnp.clip(state.cursor[:, None] + j, 0, maxp - 1)
+                    toks = jnp.where(
+                        valid, jnp.take_along_axis(state.prompt, gidx, axis=1),
+                        0)
+                    logits, caches = T.prefill_block(
+                        cfg, params, toks, caches, state.pos, valid)
+                    last = jnp.clip(n_tok - 1, 0, B - 1)
+                    last_logits = jnp.take_along_axis(
+                        logits, last[:, None, None], axis=1)[:, 0]
+                    return caches, last_logits, n_tok
+
+                if B > 1:
+                    caches, logits, n_tok = lax.cond(
+                        jnp.any(prefilling), block_tick, decode_tick, caches)
+                else:
+                    caches, logits, n_tok = decode_tick(caches)
 
                 # -- advance lifecycle: prefill->generate, budgets, eviction
                 cursor = jnp.where(
-                    state.active & prefilling, state.cursor + 1, state.cursor)
-                emit = state.active & (
+                    prefilling, state.cursor + n_tok, state.cursor)
+                emit = state.active & (n_tok > 0) & (
                     ~prefilling | (cursor >= state.prompt_len))
-                pos = jnp.where(state.active, state.pos + 1, state.pos)
+                pos = state.pos + n_tok
+                # each slot's next emit is token (pos - prompt_len) of its
+                # request: the schedule-free coordinates the sampler keys on
+                next_tok = self._pick(
+                    logits, state.rid,
+                    jnp.maximum(pos - state.prompt_len, 0))
                 remaining = state.remaining - emit.astype(jnp.int32)
                 done = state.active & (
                     (remaining <= 0) | (pos >= max_len - 1))
@@ -314,11 +426,37 @@ class ServeEngine:
                     rid=jnp.where(done, -1, state.rid))
                 return (state, caches, pend), ys
 
-            def run(params, state, caches, pend):
-                (state, caches, pend), ys = lax.scan(
-                    lambda c, x: body(params, c, x),
-                    (state, caches, pend), None, length=chunk)
-                return state, caches, pend, ys
+            def run(params, state, caches, pend, budget, backlog):
+                ys0 = (
+                    jnp.full((chunk, slots), -1, jnp.int32),   # rid
+                    jnp.full((chunk, slots), -1, jnp.int32),   # token
+                    jnp.zeros((chunk, slots), bool),           # done
+                    jnp.zeros((chunk, slots), bool),           # truncated
+                    jnp.zeros((chunk,), bool),                 # any active
+                    jnp.zeros((chunk,), jnp.int32),            # admitted
+                )
+
+                def cond_fn(c):
+                    t, state, caches, pend, ys = c
+                    drained = pend.head >= pend.count
+                    free = jnp.any(~state.active)
+                    idle = ~jnp.any(state.active)
+                    stop = drained & ((free & backlog) | idle)
+                    return (t < budget) & ~stop
+
+                def body_fn(c):
+                    t, state, caches, pend, ys = c
+                    (state, caches, pend), row = body(
+                        params, (state, caches, pend))
+                    ys = jax.tree_util.tree_map(
+                        lambda buf, r: lax.dynamic_update_index_in_dim(
+                            buf, r.astype(buf.dtype), t, 0), ys, row)
+                    return (t + 1, state, caches, pend, ys)
+
+                t, state, caches, pend, ys = lax.while_loop(
+                    cond_fn, body_fn,
+                    (jnp.int32(0), state, caches, pend, ys0))
+                return state, caches, pend, ys, t
 
             self._scan_cache[chunk] = jax.jit(run, donate_argnums=(1, 2))
         return self._scan_cache[chunk]
@@ -356,7 +494,7 @@ class ServeEngine:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if self._state is None:
             self._state = self._init_state()
-        used = chunks = 0
+        used = chunks = dispatched = 0
         syncs0 = _telemetry.host_sync_count()
         while (self.queue or self._staged or self._live) and used < max_ticks:
             # refill the host staging mirror; it becomes the device pending
@@ -368,18 +506,20 @@ class ServeEngine:
                 self._by_rid[rid] = req
                 self._staged.append((rid, req))
                 self._pending_dirty = True
-            # near the budget, shrink the dispatch to the largest power of
-            # two that fits — tail sizes would otherwise compile one scan
-            # program per distinct remainder, and this caps the compile
-            # cache at log2(chunk) tail programs
-            remaining = max_ticks - used
-            ticks_this = (chunk if remaining >= chunk
-                          else 1 << (remaining.bit_length() - 1))
-            run = self.scan_ticks(ticks_this)
-            self._state, self.caches, _, ys = run(
-                self.params, self._state, self.caches, self._make_pending())
+            # backlog: queued work beyond the device buffer's capacity — the
+            # device loop returns early if the buffer drains while a slot is
+            # free, so the freed slot refills here instead of idling out the
+            # chunk.  budget is a traced scalar: tail chunks near max_ticks
+            # reuse the one compiled program per chunk size.
+            backlog = bool(self.queue)
+            budget = min(chunk, max_ticks - used)
+            run = self.scan_ticks(chunk)
+            self._state, self.caches, _, ys, t_exec = run(
+                self.params, self._state, self.caches, self._make_pending(),
+                budget, backlog)
             # the single blocking transfer of the chunk: per-tick events
-            rids, toks, dones, truncs, act, n_admit = _telemetry._fetch(ys)
+            (rids, toks, dones, truncs, act, n_admit), t_exec = (
+                _telemetry._fetch((ys, t_exec)))
             consumed = int(n_admit.sum())
             for _ in range(consumed):
                 rid, _req = self._staged.popleft()
@@ -401,10 +541,17 @@ class ServeEngine:
             ticks_used = int(act.sum())
             used += ticks_used
             self.ticks += ticks_used
+            dispatched += int(t_exec)
             chunks += 1
         self.last_run_report = {
             "ticks": used, "chunks": chunks,
             "host_syncs": _telemetry.host_sync_count() - syncs0,
+            # invariant guard: the drain early-exit means every executed
+            # device tick has an active slot, so this always equals
+            # "ticks" — the capacity-1 regression test asserts the
+            # equality and catches any reintroduction of idle chunk
+            # remainders
+            "ticks_dispatched": dispatched,
         }
 
     # ------------------------------------------------------------------

@@ -159,3 +159,50 @@ class TestBatchPlanning:
             api.plan_sparse_update(
                 session.backbone, session.params, {}, api.STM32F746,
                 n_samples=1)
+
+
+class TestBlockScoring:
+    """Token-batch scoring on the serving block-prefill path."""
+
+    # 32 tiles the block exactly; 27 leaves a ragged tail that rides the
+    # same validity mask the serving engine uses for ragged prompts
+    @pytest.mark.parametrize("seq", [32, 27])
+    def test_score_stream_matches_parallel_forward(self, seq):
+        import jax
+
+        bb = api.backbone("qwen2-1.5b", preset="smoke", batch_size=4, seq=seq)
+        sess = api.TinyTrainSession(bb, max_way=4, seed=0)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, bb.cfg.vocab, size=(4, seq)).astype(np.int32)
+        got = sess.score_stream(toks, block=8)
+        assert got.shape == (4,)
+
+        from repro.models import transformer as T
+
+        params = sess.params
+        x, positions, _ = T.build_inputs(
+            bb.cfg, params, {"tokens": jnp.asarray(toks)})
+        h, _, _ = T.forward_hidden(bb.cfg, params, x, positions)
+        lg = T.unembed(bb.cfg, params, h)[:, :-1].astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.asarray(toks)[:, 1:, None], axis=-1)[..., 0]
+        want = np.array(jnp.mean(logz - gold, axis=-1))
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+    def test_block_score_compile_reuse_and_one_fetch(self):
+        from repro.core import adapt as adapt_mod
+
+        bb = api.backbone("qwen2-1.5b", preset="smoke", batch_size=4, seq=32)
+        sess = api.TinyTrainSession(bb, max_way=4, seed=0)
+        rng = np.random.default_rng(1)
+        toks = rng.integers(0, bb.cfg.vocab, size=(4, 32)).astype(np.int32)
+        sess.score_stream(toks, block=8)  # compile
+        adapt_mod.reset_host_sync_count()
+        sess.score_stream(toks, block=8)
+        assert adapt_mod.host_sync_count() == 1  # one dispatch, one fetch
+        assert len(sess.step_cache._block_scores) == 1
+
+    def test_block_score_rejects_cnn(self, session):
+        with pytest.raises(ValueError, match="LM token-batch"):
+            session.step_cache.block_score(8)

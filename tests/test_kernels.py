@@ -54,6 +54,28 @@ class TestFisherKernel:
         np.testing.assert_allclose(np.array(got), np.array(want),
                                    rtol=1e-5, atol=1e-6)
 
+    @pytest.mark.parametrize("shape", [(3, 6, 128), (2, 5, 256), (4, 3, 77)])
+    @pytest.mark.parametrize("masked", [False, True])
+    def test_tapgrads_kernel_matches_xla_schedule(self, shape, masked):
+        """Probe-path Eq. 2 on tap gradients: the Pallas route
+        (``fisher_tapgrads``, the TPU-backend schedule of
+        ``Backbone.fisher_reduce``) must match the XLA formula
+        Σ_b g² / (2n) exactly — including mask-weighted normalisation for
+        bucket-padded episodes and the non-tileable fallback (77 channels)."""
+        l, b, c = shape
+        g = jax.random.normal(jax.random.PRNGKey(0), shape)
+        n = jnp.float32(b - 1)  # valid count != batch: normaliser rescales
+        mask = None
+        w = 1.0
+        if masked:
+            mask = (jnp.arange(b) < b - 1).astype(jnp.float32)
+            w = mask[None, :, None]
+        want = jnp.sum((g.astype(jnp.float32) ** 2) * w, axis=1) / (2.0 * n)
+        got = ops.fisher_tapgrads(g, n, mask)
+        assert got.shape == (l, c)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   rtol=1e-5, atol=1e-6)
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("cfg", [
@@ -79,6 +101,38 @@ class TestFlashAttention:
         np.testing.assert_allclose(
             np.array(got, np.float32), np.array(want, np.float32),
             rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("window", [0, 24])
+    def test_cached_block_mode_vs_masked_oracle(self, window):
+        """Cached block-prefill mode: per-sample ``q_offset``/``kv_len``
+        place each slot's query block at its own cache cursor.  Must match
+        a dense computation masked with kpos <= q_offset + i (causal from
+        the offset), kpos < kv_len (stale rows) and the sliding window."""
+        b, sq, hq, hkv, d, smax = 3, 8, 4, 2, 32, 64
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, sq, hq, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, smax, hkv, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, smax, hkv, d))
+        q_off = jnp.asarray([0, 5, 37], jnp.int32)
+        kv_len = q_off + jnp.asarray([8, 8, 3], jnp.int32)
+        got = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  q_offset=q_off, kv_len=kv_len,
+                                  block_q=8, block_k=16)
+        kk = jnp.repeat(k, hq // hkv, 2).astype(jnp.float32)
+        vv = jnp.repeat(v, hq // hkv, 2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk)
+        s = s / np.sqrt(d)
+        qpos = q_off[:, None] + jnp.arange(sq)[None, :]  # (b, sq)
+        kpos = jnp.arange(smax)
+        mask = kpos[None, None, :] <= qpos[..., None]
+        mask &= kpos[None, None, :] < kv_len[:, None, None]
+        if window:
+            mask &= kpos[None, None, :] > qpos[..., None] - window
+        s = jnp.where(mask[:, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        want = jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32))
+        np.testing.assert_allclose(np.array(got, np.float32),
+                                   np.array(want, np.float32),
+                                   rtol=2e-5, atol=2e-5)
 
 
 class TestSSDScan:

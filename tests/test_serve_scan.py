@@ -2,11 +2,16 @@
 
 The fused path must produce token streams identical to the eager per-tick
 engine for every unit kind (mlp, attn, mla, ssm, moe — plus the hybrid
-shared-attention family) and for folded-deltas models, while compiling one
-scan program per chunk size and performing at most one blocking host
-transfer per chunk.  Also regression-tests the three request-lifecycle
-fixes: per-call ``max_ticks`` budgets, ``truncated`` signalling + submit
-validation, and admit-immediately-after-evict.
+shared-attention family) and for folded-deltas models — at *both* prefill
+modes: token-by-token (``prefill_block=1``) and block prefill (the
+default), including ragged prompt lengths not divisible by the block and
+rolling sliding-window caches — while compiling one scan program per chunk
+size and performing at most one blocking host transfer per chunk.  Also
+regression-tests: the per-call ``max_ticks`` budget, ``truncated``
+signalling + submit validation, admit-immediately-after-evict, the
+capacity-1 pending-buffer mid-chunk drain (freed slots must not idle out a
+chunk while the host holds queued work), a time-to-first-token tick bound
+for block prefill, and in-scan temperature/top-k sampling.
 """
 import jax
 import numpy as np
@@ -38,14 +43,19 @@ def make_requests(rng, vocab, n, max_new=4, lo=3, hi=8):
     ]
 
 
-def serve_both(cfg, params, requests_fn, *, slots=2, max_len=24, chunk=8):
-    """Run the same request set through the eager and fused engines."""
+def serve_both(cfg, params, requests_fn, *, slots=2, max_len=24, chunk=8,
+               max_ticks=100_000):
+    """Run the same request set through the eager engine, the fused
+    token-by-token engine and the fused block-prefill engine.  Returns the
+    three (stream, truncated) lists — the parity matrix asserts they are
+    identical, which covers both fused-vs-eager and block-vs-token."""
     streams = []
-    for fused in (False, True):
+    for kw in (dict(fused=False), dict(fused=True, prefill_block=1),
+               dict(fused=True, prefill_block=8)):
         eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
-                          fused=fused, chunk=chunk)
+                          chunk=chunk, **kw)
         reqs = requests_fn()
-        eng.run(reqs)
+        eng.run(reqs, max_ticks=max_ticks)
         assert all(r.done for r in reqs)
         streams.append([(r.out, r.truncated) for r in reqs])
     return streams
@@ -69,8 +79,8 @@ def test_fused_matches_eager_token_streams(arch):
         return [Request(uid=i, prompt=p, max_new=4)
                 for i, p in enumerate(prompts)]
 
-    eager, fused = serve_both(cfg, params, mk)
-    assert eager == fused
+    eager, fused_tok, fused_blk = serve_both(cfg, params, mk)
+    assert eager == fused_tok == fused_blk
 
 
 def test_fused_matches_eager_folded_deltas():
@@ -102,8 +112,71 @@ def test_fused_matches_eager_folded_deltas():
         return [Request(uid=i, prompt=p, max_new=4)
                 for i, p in enumerate(prompts)]
 
-    eager, fused = serve_both(cfg, folded, mk)
-    assert eager == fused
+    eager, fused_tok, fused_blk = serve_both(cfg, folded, mk)
+    assert eager == fused_tok == fused_blk
+
+
+def test_block_prefill_ragged_lengths():
+    """Prompt lengths straddling the block size (1, B-1, B, B+1, 2B, odd):
+    the ragged-tail validity masks must leave streams identical to
+    token-by-token prefill."""
+    cfg = configs.get_reduced("qwen2-1.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    sizes = [1, 7, 8, 9, 16, 13]
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in sizes]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=3)
+                for i, p in enumerate(prompts)]
+
+    eager, fused_tok, fused_blk = serve_both(cfg, params, mk, max_len=32)
+    assert eager == fused_tok == fused_blk
+
+
+def test_block_prefill_rolling_window_cache():
+    """Sliding-window arch with max_len >= window: the K/V buffer rolls, so
+    block writes wrap and row index != absolute position — streams must
+    still match token-by-token prefill (mixtral-smoke has window 32)."""
+    cfg = configs.get_reduced("mixtral-8x7b")
+    assert cfg.sliding_window == 32
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    # 45 and 70 exceed the window: block writes wrap *within* a block, the
+    # case where a parallel write-then-attend would corrupt earlier
+    # queries' views (regression for the per-position rolling fold)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (8, 30, 45, 70)]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=6)
+                for i, p in enumerate(prompts)]
+
+    eager, fused_tok, fused_blk = serve_both(cfg, params, mk, max_len=80,
+                                             chunk=16)
+    assert eager == fused_tok == fused_blk
+
+
+def test_block_prefill_ttft_tick_bound():
+    """Time-to-first-token in engine ticks: a P-token prompt must reach its
+    first generated token in ceil(P / B) ticks — the tentpole O(P/B)
+    contract — and at least 4x fewer ticks than token-by-token for P=32,
+    B=8."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, size=32).astype(np.int32)
+    ticks = {}
+    for B in (1, 8):
+        eng = ServeEngine(cfg, params, slots=1, max_len=64, chunk=64,
+                          fused=True, prefill_block=B)
+        r = Request(uid=0, prompt=prompt, max_new=1)
+        eng.run([r])
+        assert r.done and len(r.out) == 1
+        ticks[B] = eng.last_run_report["ticks"]
+    assert ticks[8] <= -(-32 // 8)  # ceil(P / B)
+    assert ticks[1] >= 4 * ticks[8]
 
 
 def test_compile_reuse_and_host_sync_budget():
@@ -162,7 +235,9 @@ def test_run_budget_is_per_call(fused):
     first = make_requests(rng, cfg.vocab, 6)
     eng.run(first)
     ticks_first = eng.ticks
-    assert ticks_first > 20
+    # block prefill compresses fused prompt ticks, so the floor is lower
+    # than the token-by-token 20+; it still must dwarf the +5 margin below
+    assert ticks_first > 10
     # a budget that covers the second batch alone but NOT lifetime + batch:
     # the old code would starve this run and leave requests unfinished
     second = make_requests(rng, cfg.vocab, 6)
@@ -203,6 +278,58 @@ def test_submit_rejects_prompts_that_cannot_fit():
         eng.submit(Request(uid=2, prompt=np.zeros(0, np.int32), max_new=2))
     with pytest.raises(ValueError, match="max_new"):
         eng.submit(Request(uid=3, prompt=np.zeros(3, np.int32), max_new=0))
+
+
+def test_pending_capacity_one_drain_refills_between_chunks():
+    """Mid-chunk drain fix: with a capacity-1 device pending buffer and a
+    host backlog, a freed slot used to idle out the rest of every chunk
+    (dispatching chunk-size ticks to serve one request).  The device loop
+    now exits the chunk as soon as the buffer drains with queued work (or
+    with nothing active), so no dispatched tick is ever idle."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = ServeEngine(cfg, params, slots=1, max_len=32, fused=True,
+                      chunk=16, pending=1)
+    reqs = make_requests(rng, cfg.vocab, 5)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    rep = eng.last_run_report
+    # every executed device tick made progress: no idle chunk remainders
+    assert rep["ticks_dispatched"] == rep["ticks"]
+    # and the run needed (at least) one dispatch per admission wave
+    assert rep["chunks"] >= len(reqs)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-1.3b"])
+def test_sampled_streams_are_schedule_invariant(arch):
+    """In-scan temperature/top-k sampling keys each draw on (request id,
+    token index) — a function of what is sampled, never of when — so
+    sampled streams are deterministic per seed and identical across the
+    eager loop, the fused token-by-token path and block prefill."""
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 12)))
+               .astype(np.int32) for _ in range(4)]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=5)
+                for i, p in enumerate(prompts)]
+
+    kw = dict(slots=2, max_len=32, temperature=0.7, top_k=8, sample_seed=11)
+    runs = []
+    for ekw in (dict(fused=False), dict(fused=True, prefill_block=1),
+                dict(fused=True, prefill_block=8), dict(fused=True)):
+        eng = ServeEngine(cfg, params, **ekw, **kw)
+        reqs = mk()
+        eng.run(reqs)
+        runs.append([r.out for r in reqs])
+    assert runs[0] == runs[1] == runs[2] == runs[3]
+    greedy = ServeEngine(cfg, params, slots=2, max_len=32, prefill_block=1)
+    reqs = mk()
+    greedy.run(reqs)
+    assert [r.out for r in reqs] != runs[0]  # sampling actually samples
 
 
 def test_eager_admits_immediately_after_eviction():
