@@ -65,6 +65,58 @@ def main(quick: bool = True) -> List[str]:
     us = _time(jax.jit(lambda *a: ref.ssd_scan_ref(*a)[0]), x, dt, aa, bm, cm)
     out.append(f"ssd_scan,({b}x{s}x{h}x{p}x{nst}),{us:.0f},{err:.2e}")
 
+    # paged cached flash: the page-table walk vs the contiguous cached
+    # kernel on the serving hot paths — single-token decode (Sq=1) and
+    # block prefill (Sq=8) — plus the int8 page-unpack overhead.  Pages
+    # hold a permutation of the contiguous rows, so the two kernels see
+    # identical logical caches and the error column is a correctness check.
+    from repro.optim.compress import rowwise_quant
+    from repro.serving import paging as PG
+    b, hq, hkv, hd = (2, 4, 2, 64) if quick else (4, 8, 2, 128)
+    ps, mp = (16, 16) if quick else (16, 64)
+    spec = PG.PagingSpec(page_size=ps, n_pages=b * mp, max_pages=mp)
+    cap = mp * ps
+    k = jax.random.normal(jax.random.PRNGKey(8), (b, cap, hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(9), (b, cap, hkv, hd))
+    perm = jax.random.permutation(jax.random.PRNGKey(10), b * mp)
+    table = perm.reshape(b, mp).astype(jnp.int32)
+    kp = jnp.zeros((b * mp, ps, hkv, hd)).at[table.reshape(-1)].set(
+        k.reshape(b * mp, ps, hkv, hd))
+    vp = jnp.zeros((b * mp, ps, hkv, hd)).at[table.reshape(-1)].set(
+        v.reshape(b * mp, ps, hkv, hd))
+    kv_len = jnp.asarray([cap - 5, cap // 2] * (b // 2), jnp.int32)
+    for sq, tag in ((1, "decode"), (8, "prefill8")):
+        qo = kv_len - sq
+        q = jax.random.normal(jax.random.PRNGKey(11), (b, sq, hq, hd))
+        want = ops.flash_attention(q, k, v, causal=True, block_q=sq,
+                                   block_k=ps, q_offset=qo, kv_len=kv_len)
+        got = ops.paged_flash_attention(q, kp, vp, table, q_offset=qo,
+                                        kv_len=kv_len, block_q=sq)
+        err = float(jnp.max(jnp.abs(got - want)))
+        us = _time(lambda q: ops.flash_attention(
+            q, k, v, causal=True, block_q=sq, block_k=ps, q_offset=qo,
+            kv_len=kv_len), q)
+        out.append(f"cached_flash_contig_{tag},({b}x{sq}x{hq}x{hd}),"
+                   f"{us:.0f},0.00e+00")
+        us = _time(lambda q: ops.paged_flash_attention(
+            q, kp, vp, table, q_offset=qo, kv_len=kv_len, block_q=sq), q)
+        out.append(f"cached_flash_paged_{tag},({b}x{sq}x{hq}x{hd}),"
+                   f"{us:.0f},{err:.2e}")
+
+    # int8 page store: gather-only (fp pages) vs gather + rowwise dequant
+    import dataclasses as _dc
+    spec_i8 = _dc.replace(spec, int8=True)
+    q8, sc = rowwise_quant(kp, 2)
+    read_fp = jax.jit(lambda t: PG.read_rows({"pages": kp}, t, spec,
+                                             jnp.float32))
+    read_i8 = jax.jit(lambda t: PG.read_rows(
+        {"pages": q8, "scale": sc}, t, spec_i8, jnp.float32))
+    err = float(jnp.max(jnp.abs(read_i8(table) - read_fp(table))))
+    us = _time(read_fp, table)
+    out.append(f"page_read_fp,({b}x{cap}x{hkv}x{hd}),{us:.0f},0.00e+00")
+    us = _time(read_i8, table)
+    out.append(f"page_read_int8_unpack,({b}x{cap}x{hkv}x{hd}),{us:.0f},{err:.2e}")
+
     # grad quant
     g1 = jax.random.normal(key, (4096,)) * 0.01
     e1 = jnp.zeros((4096,))

@@ -154,6 +154,129 @@ def _flash_cached_kernel(
         ).astype(o_ref.dtype)
 
 
+def _flash_paged_kernel(
+    pt_ref, qo_ref, kl_ref, q_ref, k_ref, v_ref, o_ref, acc, m_acc, l_acc,
+    *, scale: float, n_kv_blocks: int, bq: int, ps: int, causal: bool,
+):
+    """Paged variant: the kv-block axis walks the per-slot page table.
+
+    Scalar-prefetched SMEM rows (page table, q offset, kv length) steer the
+    kv BlockSpec: kv block ``ki`` of sample ``bi`` streams physical page
+    ``page_table[bi, ki]`` from the flat arena — no gather materialises the
+    logical view.  Unmapped entries (−1) clamp to page 0 in the index map
+    and are skipped whole by the run-time predicate, as are blocks beyond
+    the kv length or entirely in the causal future.
+    """
+    bi = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    q_off = qo_ref[bi]
+    kv_len = kl_ref[bi]
+    page = pt_ref[bi, ki]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q_start = q_off + qi * bq
+    k_start = ki * ps  # logical position of the page's first row
+    relevant = jnp.logical_and(k_start < kv_len, page >= 0)
+    if causal:
+        relevant = jnp.logical_and(relevant, k_start <= q_start + bq - 1)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (ps, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, ps)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_acc[...] - m_new)
+        l_acc[...] = l_acc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_acc[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _out():
+        o_ref[0, :, 0, :] = (
+            acc[...] / jnp.maximum(l_acc[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_paged_pallas(
+    q: jax.Array,        # (B, Sq, Hq, D)
+    k_pages: jax.Array,  # (n_pages, page_size, Hkv, D) flat page arena
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32; -1 = unmapped
+    *,
+    q_offset: jax.Array,    # (B,) int32 cache rows before this block
+    kv_len: jax.Array,      # (B,) int32 valid rows incl. this block
+    causal: bool = True,
+    block_q: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention over a paged KV cache (``serving/paging.py``).
+
+    The kv block size **is** the page size: grid axis 3 runs over page-table
+    columns and the scalar-prefetched table routes each block to its
+    physical page, so the kernel reads the arena in place.
+    """
+    b, sq, hq, d = q.shape
+    n_pages, ps, hkv, _ = k_pages.shape
+    group = hq // hkv
+    mp = page_table.shape[1]
+    bq = min(block_q, sq)
+    assert sq % bq == 0
+    grid = (b, hq, sq // bq, mp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d),
+                         lambda bi, h, qi, ki, pt, qo, kl: (bi, qi, h, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bi, h, qi, ki, pt, qo, kl:
+                         (jnp.maximum(pt[bi, ki], 0), 0, h // group, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bi, h, qi, ki, pt, qo, kl:
+                         (jnp.maximum(pt[bi, ki], 0), 0, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d),
+                               lambda bi, h, qi, ki, pt, qo, kl:
+                               (bi, qi, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _flash_paged_kernel,
+            scale=1.0 / math.sqrt(d),
+            n_kv_blocks=mp,
+            bq=bq, ps=ps, causal=causal,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q_offset.astype(jnp.int32),
+      kv_len.astype(jnp.int32), q, k_pages, v_pages)
+
+
 def flash_attention_pallas(
     q: jax.Array,  # (B, Sq, Hq, D)
     k: jax.Array,  # (B, Sk, Hkv, D)

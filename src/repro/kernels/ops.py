@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from .fisher import fisher_pallas
-from .flash_attention import flash_attention_pallas
+from .flash_attention import flash_attention_paged_pallas, flash_attention_pallas
 from .grad_quant import grad_quant_pallas
 from .ssd_scan import ssd_scan_pallas
 
@@ -111,6 +111,24 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=256,
         q, k, v, causal=causal, window=window,
         block_q=block_q, block_k=block_k,
         q_offset=q_offset, kv_len=kv_len, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "interpret"),
+)
+def paged_flash_attention(q, k_pages, v_pages, page_table, *, q_offset,
+                          kv_len, causal=True, block_q=256, interpret=None):
+    """Flash attention over a paged KV cache: the kv-block axis walks the
+    per-slot ``page_table`` (scalar-prefetched into SMEM), streaming pages
+    straight from the flat ``(n_pages, page_size, Hkv, D)`` arena — no
+    gather materialises the logical view (see
+    ``flash_attention_paged_pallas``)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention_paged_pallas(
+        q, k_pages, v_pages, page_table,
+        q_offset=q_offset, kv_len=kv_len,
+        causal=causal, block_q=block_q, interpret=interpret,
     )
 
 

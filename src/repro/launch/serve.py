@@ -39,6 +39,16 @@ def main() -> None:
                     help="top-k filter for sampled decoding (0 = off)")
     ap.add_argument("--eager", action="store_true",
                     help="host-driven per-tick loop instead of scan_ticks")
+    ap.add_argument("--paging", action="store_true",
+                    help="paged KV cache: page-pool allocation at admission "
+                         "instead of fixed per-slot stripes")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default: arch kv_page_size)")
+    ap.add_argument("--page-budget", type=int, default=None,
+                    help="total pages per layer arena (default: the "
+                         "fixed-stripe capacity slots*ceil(max_len/page))")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="store KV pages in int8 with per-token scales")
     ap.add_argument("--adapt", action="store_true",
                     help="TinyTrain-adapt to a synthetic task, fold, serve")
     ap.add_argument("--device", default="jetson-nano",
@@ -51,7 +61,11 @@ def main() -> None:
     eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                           fused=not args.eager, chunk=args.chunk,
                           prefill_block=args.prefill_block,
-                          temperature=args.temperature, top_k=args.top_k)
+                          temperature=args.temperature, top_k=args.top_k,
+                          kv_paging=args.paging or None,
+                          kv_page_size=args.page_size,
+                          kv_int8=args.kv_int8 or None,
+                          page_budget=args.page_budget)
     rng = np.random.default_rng(0)
 
     if args.adapt:
@@ -89,6 +103,19 @@ def main() -> None:
           f"({toks/dt:.1f} tok/s, {eng.ticks} engine ticks, "
           f"{args.slots} slots, {mode})")
     assert all(r.done for r in reqs)
+    mem = eng.last_run_report.get("memory", eng.memory_report())
+    peak = eng.last_run_report.get("peak_resident", 0)
+    if mem["kv_paging"]:
+        print(f"[serve] paged KV: {mem['kv_cache_bytes']/2**20:.2f} MiB "
+              f"({'int8' if mem['kv_int8'] else cfg.dtype} pages, "
+              f"{mem['page_size']} tok/page, {mem['n_pages']} pages/layer, "
+              f"{mem['page_bytes']} B/page), peak {peak} resident streams, "
+              f"worst-case {mem['kv_bytes_per_stream']/2**10:.1f} KiB/stream")
+    else:
+        print(f"[serve] fixed-stripe KV: {mem['kv_cache_bytes']/2**20:.2f} "
+              f"MiB across {args.slots} slots "
+              f"({mem['kv_bytes_per_stream']/2**10:.1f} KiB/stream), "
+              f"peak {peak} resident streams")
     if any(r.truncated for r in reqs):
         print(f"[serve] {sum(r.truncated for r in reqs)} requests truncated "
               f"at max_len={args.max_len}")

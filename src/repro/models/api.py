@@ -72,6 +72,16 @@ class ArchConfig:
     # targets may prefer smaller blocks.  ServeEngine(prefill_block=...)
     # overrides.
     serve_prefill_block: int = 8
+    # paged KV cache (serving/paging.py): fixed-size pages in a flat
+    # arena with per-slot page tables, instead of a max_len stripe per
+    # slot.  kv_page_size is in tokens; kv_int8 packs pages to int8 with
+    # per-token scales (pack on write / unpack on read).  Rolling
+    # sliding-window buffers (window < max_len) and SSM state stay
+    # contiguous — they are already O(window)/O(1).  ServeEngine
+    # (kv_paging=... / kv_page_size=... / kv_int8=...) overrides.
+    kv_paging: bool = False
+    kv_page_size: int = 16
+    kv_int8: bool = False
     # --- numerics ---
     dtype: str = "bfloat16"
     # --- long-context capability (decides long_500k applicability) ---
@@ -100,6 +110,7 @@ class ArchConfig:
     def validate(self) -> "ArchConfig":
         assert self.family in {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
         assert self.serve_prefill_block >= 1
+        assert self.kv_page_size >= 1
         if self.family in {"dense", "moe", "vlm", "audio"}:
             assert self.n_heads > 0 and self.head_dim > 0
         if self.family == "moe":

@@ -388,6 +388,36 @@ def _block_cached_attention(
     return dot_attention(q, ck, cv, causal=True, q_offset=lens, kv_len=kv_len)
 
 
+def _paged_block_attention(
+    q: jax.Array,   # (B, S, H, D) query block
+    kst, vst,       # paged K/V stores ({"pages", ...})
+    table: jax.Array,  # (B, max_pages) page table
+    spec,           # PagingSpec
+    *,
+    lens: jax.Array,
+    n_new: jax.Array,
+) -> jax.Array:
+    """Causal block attention against a paged decode cache.  On TPU the
+    Pallas kernel walks the page table from SMEM (fp pages); elsewhere —
+    and for int8 pages — the kv view is gathered page-by-page and the
+    masked oracle runs (:func:`repro.serving.paging.read_rows`)."""
+    from ..serving import paging as PG
+
+    kv_len = lens + n_new
+    if jax.default_backend() == "tpu" and not spec.int8:
+        from ..kernels.ops import _divisor_block, paged_flash_attention
+
+        bq = _divisor_block(q.shape[1], 256)
+        if bq:
+            return paged_flash_attention(
+                q, kst["pages"], vst["pages"], table,
+                q_offset=lens, kv_len=kv_len, block_q=bq)
+    rdt = q.dtype if spec.int8 else kst["pages"].dtype
+    vk = PG.read_rows(kst, table, spec, rdt)
+    vv = PG.read_rows(vst, table, spec, rdt)
+    return dot_attention(q, vk, vv, causal=True, q_offset=lens, kv_len=kv_len)
+
+
 def attention_apply(
     p: Params,
     x: jax.Array,
@@ -443,7 +473,31 @@ def attention_apply(
             cos, sin = rope_tables(positions, dh, cfg.rope_theta)
             q = apply_rope(q, cos, sin)
             k = apply_rope(k, cos, sin)
-        if cache is not None:
+        if cache is not None and "page_table" in cache:
+            # paged cache: scatter rows through the page table, attend on
+            # the page-walk view (TPU: Pallas kernel walks pages directly)
+            from ..serving import paging as PG
+
+            spec = PG.spec_from(cache)
+            table = cache["page_table"]
+            lens = cache["len"]
+            vmask = valid if valid is not None else jnp.ones((b, s), bool)
+            n_new = jnp.sum(vmask.astype(jnp.int32), axis=1)
+            kst = PG.write_rows(cache["k"], table, spec, lens, k, vmask)
+            vst = PG.write_rows(cache["v"], table, spec, lens, v, vmask)
+            new_cache = {"k": kst, "v": vst, "page_table": table,
+                         "len": lens + n_new}
+            if valid is not None:
+                out = _paged_block_attention(
+                    q, kst, vst, table, spec, lens=lens, n_new=n_new)
+            else:
+                rdt = q.dtype if spec.int8 else kst["pages"].dtype
+                vk = PG.read_rows(kst, table, spec, rdt)
+                vv = PG.read_rows(vst, table, spec, rdt)
+                out = dot_attention(
+                    q, vk, vv, causal=False,
+                    kv_len=jnp.minimum(lens + s, spec.cap))
+        elif cache is not None:
             s_max = cache["k"].shape[1]
             lens = cache["len"]  # (B,) per-slot lengths
             rolling = cfg.sliding_window > 0 and s_max == cfg.sliding_window
@@ -605,8 +659,28 @@ def mla_apply(
     else:
         # absorbed decode: logits against latent cache directly
         lens = cache["len"]  # (B,)
-        s_max = cache["ckv"].shape[1]
-        if valid is not None:
+        if "page_table" not in cache:
+            s_max = cache["ckv"].shape[1]
+        if "page_table" in cache:
+            # paged latent cache: scatter latent rows through the page
+            # table, run the absorbed form on the page-walk view
+            from ..serving import paging as PG
+
+            spec = PG.spec_from(cache)
+            table = cache["page_table"]
+            s_max = spec.cap
+            vmask = valid if valid is not None else jnp.ones((b, s), bool)
+            n_new = jnp.sum(vmask.astype(jnp.int32), axis=1)
+            ckv_st = PG.write_rows(cache["ckv"], table, spec, lens, ckv, vmask)
+            ckr_st = PG.write_rows(cache["krope"], table, spec, lens,
+                                   k_rope[:, :, 0, :], vmask)
+            new_cache = {"ckv": ckv_st, "krope": ckr_st, "page_table": table,
+                         "len": lens + n_new}
+            rdt = x.dtype if spec.int8 else ckv_st["pages"].dtype
+            cckv = PG.read_rows(ckv_st, table, spec, rdt)
+            ckr = PG.read_rows(ckr_st, table, spec, rdt)
+            kv_len = jnp.minimum(lens + n_new, s_max)
+        elif valid is not None:
             # block prefill: per-slot scatter of the valid latent rows
             n_new = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
             cckv = _scatter_block_rows(cache["ckv"], ckv, lens, valid)

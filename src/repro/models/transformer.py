@@ -692,8 +692,44 @@ def pooled_features(
 # ---------------------------------------------------------------------------
 
 
-def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> Dict[str, Any]:
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=None, *,
+                paging=None) -> Dict[str, Any]:
+    """Decode caches for a slot batch.
+
+    ``paging`` is an optional :class:`repro.serving.paging.PagingSpec`; if
+    omitted and ``cfg.kv_paging`` is set, a default spec (page budget =
+    fixed-stripe capacity) is built from the config knobs.  Paged layers
+    store K/V (or MLA latents) as page arenas shared across slots plus a
+    per-slot ``page_table``; rolling sliding-window buffers (window <
+    max_len, already O(window)) and SSM recurrent state (O(1)) stay
+    contiguous.
+    """
     dtype = dtype or jnp.dtype(cfg.dtype)
+    if paging is None and getattr(cfg, "kv_paging", False):
+        from ..serving.paging import PagingSpec
+        paging = PagingSpec.build(max_len, page_size=cfg.kv_page_size,
+                                  slots=batch, int8=cfg.kv_int8)
+    rolling = bool(cfg.sliding_window) and cfg.sliding_window < max_len
+
+    def _paged(feats: Dict[str, Tuple[int, ...]]) -> Dict[str, Any]:
+        from ..serving import paging as PG
+        c = {name: PG.store_init(paging, shape, dtype)
+             for name, shape in feats.items()}
+        c["page_table"] = jnp.full((batch, paging.max_pages), -1, jnp.int32)
+        c["len"] = jnp.zeros((batch,), jnp.int32)
+        return c
+
+    def _attn_cache() -> Dict[str, Any]:
+        if paging is not None and not rolling:
+            return _paged({"k": (cfg.n_kv_heads, cfg.head_dim),
+                           "v": (cfg.n_kv_heads, cfg.head_dim)})
+        s_max = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        return {
+            "k": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
     groups = stack_groups(cfg)
     caches: Dict[str, Any] = {}
     for gi, (_, ids) in enumerate(groups):
@@ -702,18 +738,17 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> Dict[s
             bk = block_kind(cfg, lid)
             c: Dict[str, Any] = {}
             if bk == "mla":
-                c["attn"] = {
-                    "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
-                    "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
-                    "len": jnp.zeros((batch,), jnp.int32),
-                }
+                if paging is not None:
+                    c["attn"] = _paged({"ckv": (cfg.kv_lora_rank,),
+                                        "krope": (cfg.qk_rope_dim,)})
+                else:
+                    c["attn"] = {
+                        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+                        "len": jnp.zeros((batch,), jnp.int32),
+                    }
             elif bk == "attn":
-                s_max = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
-                c["attn"] = {
-                    "k": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
-                    "v": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
-                    "len": jnp.zeros((batch,), jnp.int32),
-                }
+                c["attn"] = _attn_cache()
             else:
                 c["ssm"] = {
                     "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
@@ -723,13 +758,8 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> Dict[s
             per.append(c)
         caches[f"g{gi}"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
     if cfg.family == "hybrid" and cfg.hybrid_attn_every:
-        w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
         for lid in range(cfg.hybrid_attn_every - 1, cfg.n_layers, cfg.hybrid_attn_every):
-            caches[f"shared{lid}"] = {
-                "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
-                "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.head_dim), dtype),
-                "len": jnp.zeros((batch,), jnp.int32),
-            }
+            caches[f"shared{lid}"] = _attn_cache()
     return caches
 
 

@@ -27,6 +27,32 @@ def _quant_one(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.
     return q, scale, new_err
 
 
+def rowwise_quant(x: jax.Array, n_feature_axes: int = 1,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Per-row int8 pack: the :func:`_quant_one` core (absmax/127 + ε,
+    round, clip) vectorised over leading axes, without error feedback.
+
+    The trailing ``n_feature_axes`` axes form one quantisation row; the
+    returned ``scale`` has the leading (row-index) shape.  This is the
+    pack side of the paged int8 KV store (``serving/paging.py``), where a
+    row is one token's head×dim block and per-row scales keep incremental
+    cache appends exact."""
+    axes = tuple(range(x.ndim - n_feature_axes, x.ndim))
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=axes) / 127.0 + 1e-12
+    sc = scale.reshape(scale.shape + (1,) * n_feature_axes)
+    q = jnp.clip(jnp.round(x32 / sc), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def rowwise_dequant(q: jax.Array, scale: jax.Array, dtype=jnp.float32,
+                    ) -> jax.Array:
+    """Unpack :func:`rowwise_quant` output: broadcast each row's scale
+    over its feature axes."""
+    sc = scale.reshape(scale.shape + (1,) * (q.ndim - scale.ndim))
+    return (q.astype(jnp.float32) * sc).astype(dtype)
+
+
 def int8_compress(grads: PyTree, ef: PyTree) -> Tuple[PyTree, PyTree, PyTree]:
     """Returns (int8 tree, scale tree, new error-feedback tree)."""
     flat, treedef = jax.tree_util.tree_flatten(grads)

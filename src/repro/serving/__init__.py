@@ -1,3 +1,7 @@
 from .engine import (  # noqa: F401
     PendingBuffer, Request, ServeEngine, SlotState, fold_deltas,
 )
+from .paging import (  # noqa: F401
+    PagePool, PagingSpec, free_page_count, make_pool, pages_in_use,
+    release, reserve,
+)

@@ -49,6 +49,7 @@ from jax import lax
 from ..core import adapt as _telemetry
 from ..models import transformer as T
 from ..models.api import ArchConfig
+from . import paging as PG
 
 
 @dataclasses.dataclass
@@ -56,9 +57,14 @@ class Request:
     uid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int
+    # per-request KV budget (prompt + generated tokens); None = the
+    # engine-wide max_len.  With paging on, admission reserves exactly
+    # ceil(max_len / page_size) pages, so short requests stop pinning
+    # full-length stripes
+    max_len: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    # evicted by the max_len cutoff before reaching max_new generated tokens
+    # evicted by its KV-budget cutoff before reaching max_new tokens
     truncated: bool = False
 
 
@@ -67,17 +73,19 @@ class _Slot:
     req: Optional[Request] = None
     cursor: int = 0  # next prompt token to feed; >= len(prompt) => generating
     rid: int = -1  # engine request id (sampling key; mirrors the fused rid)
+    budget: int = 0  # effective KV budget (request max_len or engine-wide)
 
 
 class SlotState(NamedTuple):
     """Per-slot request lifecycle state, device-resident for the fused scan."""
 
-    prompt: jax.Array      # (slots, max_prompt) int32 prompt buffer
+    prompt: jax.Array      # (slots, max_len) int32 prompt buffer
     prompt_len: jax.Array  # (slots,) int32
     cursor: jax.Array      # (slots,) int32; >= prompt_len => generating
     pos: jax.Array         # (slots,) int32 absolute decode position
     last_tok: jax.Array    # (slots,) int32 feedback token while generating
     remaining: jax.Array   # (slots,) int32 max_new budget left
+    budget: jax.Array      # (slots,) int32 per-request KV budget (eviction)
     active: jax.Array      # (slots,) bool
     rid: jax.Array         # (slots,) int32 engine-internal request id; -1 free
 
@@ -85,9 +93,11 @@ class SlotState(NamedTuple):
 class PendingBuffer(NamedTuple):
     """Device-side admission queue, drained FIFO by the scan between syncs."""
 
-    prompt: jax.Array   # (P, max_prompt) int32
+    prompt: jax.Array   # (P, max_len) int32
     length: jax.Array   # (P,) int32
     max_new: jax.Array  # (P,) int32
+    budget: jax.Array   # (P,) int32 per-request KV budget
+    n_pages: jax.Array  # (P,) int32 worst-case page demand (0 if unpaged)
     rid: jax.Array      # (P,) int32
     head: jax.Array     # () int32 next entry to admit
     count: jax.Array    # () int32 valid entries
@@ -108,14 +118,36 @@ class ServeEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         sample_seed: int = 0,
+        kv_paging: Optional[bool] = None,
+        kv_page_size: Optional[int] = None,
+        kv_int8: Optional[bool] = None,
+        page_budget: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
         self.n_slots = slots
         self.max_len = max_len
-        self.max_prompt = max_len
         self.fused = fused
         self.chunk = chunk
+        # paged KV cache: knobs default from the arch config; page_budget
+        # (total pages per layer arena) defaults to the fixed-stripe
+        # capacity slots * ceil(max_len / page_size) — pass less to
+        # oversubscribe slots against a fixed memory budget
+        paging_on = cfg.kv_paging if kv_paging is None else bool(kv_paging)
+        if paging_on:
+            self.spec: Optional[PG.PagingSpec] = PG.PagingSpec.build(
+                max_len,
+                page_size=int(cfg.kv_page_size if kv_page_size is None
+                              else kv_page_size),
+                slots=slots, n_pages=page_budget,
+                int8=bool(cfg.kv_int8 if kv_int8 is None else kv_int8))
+            self.pool = PG.make_pool(self.spec, slots)
+        else:
+            self.spec = None
+            # placeholder so the fused carry has a fixed pytree structure
+            self.pool = PG.PagePool(
+                table=jnp.full((slots, 1), -1, jnp.int32),
+                free=jnp.ones((1,), bool))
         # prompt tokens ingested per prefilling slot per tick (fused path);
         # 1 = legacy token-by-token prefill, the arch default otherwise
         self.prefill_block = int(
@@ -145,7 +177,7 @@ class ServeEngine:
             raise ValueError(
                 f"chunk must be >= 1, got {chunk}: a zero-length scan makes "
                 "no progress and the fused run loop would spin forever")
-        self.caches = T.init_caches(cfg, slots, max_len)
+        self.caches = T.init_caches(cfg, slots, max_len, paging=self.spec)
         self.slots = [_Slot() for _ in range(slots)]
         self.pos = np.zeros(slots, np.int32)
         self.queue: Deque[Request] = collections.deque()
@@ -198,18 +230,41 @@ class ServeEngine:
     # Submission
     # ------------------------------------------------------------------
 
+    def request_budget(self, req: Request) -> int:
+        """Effective KV budget (prompt + generated tokens) for a request:
+        its own ``max_len`` when set, else the engine-wide ``max_len``.
+        The single source of truth for validation, eviction and (with
+        paging) worst-case page reservation — there is no separate
+        "max prompt" limit."""
+        return self.max_len if req.max_len is None else int(req.max_len)
+
     def _validate(self, req: Request) -> None:
+        budget = self.request_budget(req)
+        if budget > self.max_len:
+            raise ValueError(
+                f"request max_len {budget} exceeds the engine's cache "
+                f"capacity max_len = {self.max_len}")
+        if budget < 2:
+            raise ValueError(
+                f"request max_len {budget} leaves no room for a prompt "
+                "token plus a generated token (need >= 2)")
         n = int(len(req.prompt))
         if n == 0:
             raise ValueError("empty prompt: nothing to prefill")
-        if n >= self.max_len - 1:
+        if n >= budget - 1:
             raise ValueError(
                 f"prompt of length {n} cannot fit: the engine evicts at "
-                f"position max_len - 1 = {self.max_len - 1}, so prompts must "
+                f"position max_len - 1 = {budget - 1}, so prompts must "
                 f"leave room to generate (len(prompt) <= max_len - 2 = "
-                f"{self.max_len - 2})")
+                f"{budget - 2})")
         if req.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {req.max_new}")
+        if self.spec is not None:
+            need = self.spec.pages_for(budget)
+            if need > self.spec.n_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool holds only "
+                    f"{self.spec.n_pages}: it could never be admitted")
 
     def submit(self, req: Request) -> None:
         self._validate(req)
@@ -221,17 +276,36 @@ class ServeEngine:
 
     def _admit(self) -> None:
         mask = np.zeros(self.n_slots, bool)
+        need = np.zeros(self.n_slots, np.int32)
+        free_pages = None
+        if self.spec is not None and self.queue:
+            # debug-path host check (the fused path does this on device)
+            free_pages = int(jax.device_get(PG.free_page_count(self.pool)))
         for i, sl in enumerate(self.slots):
             if sl.req is None and self.queue:
+                budget = self.request_budget(self.queue[0])
+                if self.spec is not None:
+                    want = int(self.spec.pages_for(budget))
+                    if want > free_pages:
+                        # FIFO head-of-line blocking: admission stalls
+                        # until running requests release pages
+                        break
+                    free_pages -= want
+                    need[i] = want
                 sl.req = self.queue.popleft()
                 sl.cursor = 0
                 # admission order matches the fused path's staging order,
                 # so sampling keys (keyed on rid) agree between the paths
                 sl.rid = self._next_rid
                 self._next_rid += 1
+                sl.budget = budget
                 self.pos[i] = 0
                 mask[i] = True
         if mask.any():
+            if self.spec is not None:
+                self.pool = PG.reserve(
+                    self.pool, jnp.asarray(need), jnp.asarray(mask))
+                self.caches = PG.set_page_table(self.caches, self.pool.table)
             self.caches = T.reset_slot_state(self.caches, mask)
 
     def step(self) -> None:
@@ -260,7 +334,7 @@ class ServeEngine:
             jnp.asarray(rids), jnp.asarray(tok_idx),
         )
         next_tok = _telemetry._fetch(next_tok)
-        freed = False
+        freed = np.zeros(self.n_slots, bool)
         for i in live:
             sl = self.slots[i]
             self.pos[i] += 1
@@ -272,13 +346,19 @@ class ServeEngine:
                 sl.req.out.append(int(next_tok[i]))
             if len(sl.req.out) >= sl.req.max_new:
                 sl.req.done = True
-            elif self.pos[i] >= self.max_len - 1:
+            elif self.pos[i] >= sl.budget - 1:
                 sl.req.done = True
                 sl.req.truncated = True
             if sl.req.done:
                 self.slots[i] = _Slot()
-                freed = True
-        if freed:
+                freed[i] = True
+        if freed.any():
+            if self.spec is not None:
+                # evict pages, not stripes: freed slots return their pages
+                # and their table rows go unmapped so no stale write can
+                # land in a re-allocated page
+                self.pool = PG.release(self.pool, jnp.asarray(freed))
+                self.caches = PG.set_page_table(self.caches, self.pool.table)
             # freed slots claim queued work this tick, not next tick — the
             # fused scan admits at the top of every tick body, so the eager
             # path must leave the same occupancy behind
@@ -296,9 +376,9 @@ class ServeEngine:
             return jnp.zeros((self.n_slots,), jnp.int32)
 
         return SlotState(
-            prompt=jnp.zeros((self.n_slots, self.max_prompt), jnp.int32),
+            prompt=jnp.zeros((self.n_slots, self.max_len), jnp.int32),
             prompt_len=z(), cursor=z(), pos=z(), last_tok=z(), remaining=z(),
-            active=jnp.zeros((self.n_slots,), bool), rid=z() - 1)
+            budget=z(), active=jnp.zeros((self.n_slots,), bool), rid=z() - 1)
 
     def scan_compiles(self) -> int:
         """Compiled ``scan_ticks`` programs (one per distinct chunk size)."""
@@ -307,37 +387,53 @@ class ServeEngine:
     def scan_ticks(self, chunk: int):
         """Compiled multi-tick runner, keyed on chunk length.
 
-        run(params, state, caches, pending, budget, backlog) ->
-        (state, caches, pending, per-tick events, ticks_executed);
+        run(params, state, caches, pending, pool, budget, backlog) ->
+        (state, caches, pending, pool, per-tick events, ticks_executed);
         state and caches are donated carries, ``budget`` (<= chunk) and
         ``backlog`` are traced scalars so tail chunks reuse the compiled
-        program.  Each tick: admit pending into free slots, run one decode
-        (or, while any slot is still prefilling, one ``prefill_block``
-        ingestion of up to ``prefill_block`` prompt tokens per prefilling
-        slot), sample in-graph, advance cursors, decrement budgets, evict
-        done slots — so an eviction at tick t re-admits at tick t+1 without
-        any host involvement.  The device loop exits early when the pending
-        buffer is drained and either the host holds more queued work for a
-        freed slot (mid-chunk drain refill) or no slot is active (tail of
-        the run) — idle ticks are never dispatched.
+        program.  Each tick: admit pending into free slots (with paging, a
+        request is admitted only when its worst-case page demand fits the
+        free-list — the page reserve/release runs entirely on device, so
+        paging costs no extra host syncs), run one decode (or, while any
+        slot is still prefilling, one ``prefill_block`` ingestion of up to
+        ``prefill_block`` prompt tokens per prefilling slot), sample
+        in-graph, advance cursors, decrement budgets, evict done slots and
+        release their pages — so an eviction at tick t re-admits at tick
+        t+1 without any host involvement.  The device loop exits early when
+        the pending buffer is drained and either the host holds more queued
+        work for a freed slot (mid-chunk drain refill) or no slot is active
+        (tail of the run) — idle ticks are never dispatched.
         """
         chunk = int(chunk)
         if chunk not in self._scan_cache:
             cfg = self.cfg
-            max_len = self.max_len
-            maxp = self.max_prompt
+            maxp = self.max_len
             P = self.pending_size
             B = self.prefill_block
             slots = self.n_slots
+            spec = self.spec
 
             def body(params, carry):
-                state, caches, pend = carry
+                state, caches, pend, pool = carry
 
                 # -- admit: free slots claim pending entries in FIFO order
                 free = ~state.active
                 rank = jnp.cumsum(free.astype(jnp.int32)) - 1
-                take = free & (pend.head + rank < pend.count)
+                fifo = free & (pend.head + rank < pend.count)
                 src = jnp.clip(pend.head + rank, 0, P - 1)
+                if spec is not None:
+                    # a candidate is admitted only if the prefix demand up
+                    # to and including it fits the free-list; the cumsum is
+                    # strictly increasing over candidates (every request
+                    # needs >= 1 page), so admission keeps FIFO order with
+                    # head-of-line blocking — exactly the PendingBuffer
+                    # contract, now in pages
+                    need = jnp.where(fifo, pend.n_pages[src], 0)
+                    fits = jnp.cumsum(need) <= PG.free_page_count(pool)
+                    take = fifo & fits
+                    pool = PG.reserve(pool, need, take)
+                else:
+                    take = fifo
 
                 def sel(new, old):
                     return jnp.where(take, new, old)
@@ -350,11 +446,16 @@ class ServeEngine:
                     pos=sel(0, state.pos),
                     last_tok=sel(0, state.last_tok),
                     remaining=sel(pend.max_new[src], state.remaining),
+                    budget=sel(pend.budget[src], state.budget),
                     active=state.active | take,
                     rid=sel(pend.rid[src], state.rid),
                 )
                 n_admit = jnp.sum(take.astype(jnp.int32))
                 pend = pend._replace(head=pend.head + n_admit)
+                if spec is not None:
+                    # sync fresh page-table rows into the caches before the
+                    # forward writes through them
+                    caches = PG.set_page_table(caches, pool.table)
                 caches = T.reset_slot_state(caches, take)
 
                 prefilling = state.active & (state.cursor < state.prompt_len)
@@ -414,7 +515,7 @@ class ServeEngine:
                     jnp.maximum(pos - state.prompt_len, 0))
                 remaining = state.remaining - emit.astype(jnp.int32)
                 done = state.active & (
-                    (remaining <= 0) | (pos >= max_len - 1))
+                    (remaining <= 0) | (pos >= state.budget - 1))
                 trunc = done & (remaining > 0)  # evicted with budget unmet
                 ys = (state.rid, jnp.where(emit, next_tok, -1), done, trunc,
                       jnp.any(state.active), n_admit)
@@ -424,9 +525,16 @@ class ServeEngine:
                     remaining=remaining,
                     active=state.active & ~done,
                     rid=jnp.where(done, -1, state.rid))
-                return (state, caches, pend), ys
+                if spec is not None:
+                    # evict pages, not stripes: finished slots release
+                    # their pages and their table rows go unmapped, so a
+                    # paused slot's stale-length write can never land in a
+                    # page re-allocated next tick
+                    pool = PG.release(pool, done)
+                    caches = PG.set_page_table(caches, pool.table)
+                return (state, caches, pend, pool), ys
 
-            def run(params, state, caches, pend, budget, backlog):
+            def run(params, state, caches, pend, pool, budget, backlog):
                 ys0 = (
                     jnp.full((chunk, slots), -1, jnp.int32),   # rid
                     jnp.full((chunk, slots), -1, jnp.int32),   # token
@@ -437,7 +545,7 @@ class ServeEngine:
                 )
 
                 def cond_fn(c):
-                    t, state, caches, pend, ys = c
+                    t, state, caches, pend, pool, ys = c
                     drained = pend.head >= pend.count
                     free = jnp.any(~state.active)
                     idle = ~jnp.any(state.active)
@@ -445,18 +553,18 @@ class ServeEngine:
                     return (t < budget) & ~stop
 
                 def body_fn(c):
-                    t, state, caches, pend, ys = c
-                    (state, caches, pend), row = body(
-                        params, (state, caches, pend))
+                    t, state, caches, pend, pool, ys = c
+                    (state, caches, pend, pool), row = body(
+                        params, (state, caches, pend, pool))
                     ys = jax.tree_util.tree_map(
                         lambda buf, r: lax.dynamic_update_index_in_dim(
                             buf, r.astype(buf.dtype), t, 0), ys, row)
-                    return (t + 1, state, caches, pend, ys)
+                    return (t + 1, state, caches, pend, pool, ys)
 
-                t, state, caches, pend, ys = lax.while_loop(
+                t, state, caches, pend, pool, ys = lax.while_loop(
                     cond_fn, body_fn,
-                    (jnp.int32(0), state, caches, pend, ys0))
-                return state, caches, pend, ys, t
+                    (jnp.int32(0), state, caches, pend, pool, ys0))
+                return state, caches, pend, pool, ys, t
 
             self._scan_cache[chunk] = jax.jit(run, donate_argnums=(1, 2))
         return self._scan_cache[chunk]
@@ -467,19 +575,25 @@ class ServeEngine:
         # the committed device arrays for free
         if not self._pending_dirty and self._pending_cache is not None:
             return self._pending_cache
-        P, maxp = self.pending_size, self.max_prompt
+        P, maxp = self.pending_size, self.max_len
         prompt = np.zeros((P, maxp), np.int32)
         length = np.zeros((P,), np.int32)
         max_new = np.zeros((P,), np.int32)
+        budget = np.zeros((P,), np.int32)
+        n_pages = np.zeros((P,), np.int32)
         rid = np.full((P,), -1, np.int32)
         for j, (r, req) in enumerate(self._staged):
             n = len(req.prompt)
             prompt[j, :n] = np.asarray(req.prompt, np.int32)
             length[j] = n
             max_new[j] = req.max_new
+            budget[j] = self.request_budget(req)
+            if self.spec is not None:
+                n_pages[j] = self.spec.pages_for(budget[j])
             rid[j] = r
         self._pending_cache = PendingBuffer(
             jnp.asarray(prompt), jnp.asarray(length), jnp.asarray(max_new),
+            jnp.asarray(budget), jnp.asarray(n_pages),
             jnp.asarray(rid), jnp.zeros((), jnp.int32),
             jnp.asarray(np.int32(len(self._staged))))
         self._pending_dirty = False
@@ -494,7 +608,7 @@ class ServeEngine:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if self._state is None:
             self._state = self._init_state()
-        used = chunks = dispatched = 0
+        used = chunks = dispatched = peak = 0
         syncs0 = _telemetry.host_sync_count()
         while (self.queue or self._staged or self._live) and used < max_ticks:
             # refill the host staging mirror; it becomes the device pending
@@ -514,9 +628,9 @@ class ServeEngine:
             backlog = bool(self.queue)
             budget = min(chunk, max_ticks - used)
             run = self.scan_ticks(chunk)
-            self._state, self.caches, _, ys, t_exec = run(
+            self._state, self.caches, _, self.pool, ys, t_exec = run(
                 self.params, self._state, self.caches, self._make_pending(),
-                budget, backlog)
+                self.pool, budget, backlog)
             # the single blocking transfer of the chunk: per-tick events
             (rids, toks, dones, truncs, act, n_admit), t_exec = (
                 _telemetry._fetch((ys, t_exec)))
@@ -543,6 +657,11 @@ class ServeEngine:
             self.ticks += ticks_used
             dispatched += int(t_exec)
             chunks += 1
+            if rids.size:
+                # concurrent resident streams per tick, from the already-
+                # fetched event rows (rid >= 0 = slot held a request that
+                # tick) — no extra transfer
+                peak = max(peak, int((rids >= 0).sum(axis=1).max()))
         self.last_run_report = {
             "ticks": used, "chunks": chunks,
             "host_syncs": _telemetry.host_sync_count() - syncs0,
@@ -552,7 +671,57 @@ class ServeEngine:
             # equality and catches any reintroduction of idle chunk
             # remainders
             "ticks_dispatched": dispatched,
+            "peak_resident": peak,
+            "memory": self.memory_report(),
         }
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def memory_report(self) -> Dict[str, Any]:
+        """KV-cache memory accounting, sync-free.
+
+        Residency and page occupancy come from host bookkeeping (the
+        reserve/release ledger is deterministic: a resident request holds
+        exactly ``pages_for(budget)`` pages), so this never blocks on the
+        device — safe to read every ``run()`` without touching the
+        one-sync-per-chunk contract.
+        """
+        total, arena = PG.cache_bytes(self.caches)
+        budgets = [sl.budget for sl in self.slots if sl.req is not None]
+        budgets += [self.request_budget(self._by_rid[r])
+                    for r in self._live if r in self._by_rid]
+        resident = len(budgets)
+        rep: Dict[str, Any] = {
+            "kv_paging": self.spec is not None,
+            "kv_cache_bytes": int(total),
+            "resident_streams": resident,
+        }
+        if self.spec is None:
+            # fixed stripes: every slot pins a full-length share whether
+            # or not it is occupied
+            rep["kv_bytes_per_stream"] = int(total) // self.n_slots
+            return rep
+        spec = self.spec
+        in_use = sum(int(spec.pages_for(b)) for b in budgets)
+        page_bytes = int(arena) // spec.n_pages  # all layers, one page
+        rep.update({
+            "kv_int8": spec.int8,
+            "page_size": spec.page_size,
+            "n_pages": spec.n_pages,
+            "pages_in_use": in_use,
+            "pages_free": spec.n_pages - in_use,
+            "page_utilisation": in_use / spec.n_pages,
+            "page_bytes": page_bytes,
+            # bytes actually pinned per resident stream (reservation is
+            # all-at-admission, so short requests pin less than a stripe);
+            # empty engine reports the worst-case single-request cost
+            "kv_bytes_per_stream": (
+                in_use * page_bytes // resident if resident
+                else spec.max_pages * page_bytes),
+        })
+        return rep
 
     # ------------------------------------------------------------------
     # Driver
@@ -572,15 +741,19 @@ class ServeEngine:
         if self.fused:
             self._run_fused(max_ticks, chunk)
         else:
-            used = 0
+            used = peak = 0
             syncs0 = _telemetry.host_sync_count()
             while ((self.queue or any(sl.req for sl in self.slots))
                    and used < max_ticks):
                 self.step()
+                peak = max(peak, sum(
+                    1 for sl in self.slots if sl.req is not None))
                 used += 1
             self.last_run_report = {
                 "ticks": used, "chunks": used,
                 "host_syncs": _telemetry.host_sync_count() - syncs0,
+                "peak_resident": peak,
+                "memory": self.memory_report(),
             }
         return requests
 
