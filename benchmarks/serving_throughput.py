@@ -230,14 +230,18 @@ def run_paging(
         "fixed_stripe": ServeEngine(
             cfg, params, slots=base_slots, max_len=max_len, fused=True,
             chunk=chunk),
+        # worstcase reservation: this benchmark isolates paging residency
+        # at a fixed budget; reserve-as-you-go packing under oversubscription
+        # is measured by run_pressure below
         "paged_fp": ServeEngine(
             cfg, params, slots=paged_slots, max_len=max_len, fused=True,
             chunk=chunk, kv_paging=True, kv_page_size=page_size,
-            page_budget=budget_tokens // page_size),
+            page_budget=budget_tokens // page_size, reserve="worstcase"),
         "paged_int8": ServeEngine(
             cfg, params, slots=paged_slots, max_len=max_len, fused=True,
             chunk=chunk, kv_paging=True, kv_page_size=page_size,
-            page_budget=budget_tokens // page_size, kv_int8=True),
+            page_budget=budget_tokens // page_size, kv_int8=True,
+            reserve="worstcase"),
     }
     rows: Dict[str, object] = {}
     streams: Dict[str, List] = {}
@@ -291,6 +295,144 @@ def run_paging(
     }
 
 
+def run_pressure(
+    *,
+    arch: str = "micro",
+    page_size: int = 8,
+    max_len: int = 64,
+    slots: int = 8,
+    n_requests: int = 24,
+    max_new: int = 16,
+    chunk: int = 16,
+    budget_frac: float = 0.5,
+    deadline_ticks: int = 4096,
+    reps: int = 2,
+    seed: int = 0,
+) -> Dict[str, object]:
+    """Reserve-as-you-go serving under pool pressure (the robustness tier).
+
+    The same short+long request mix runs twice: against a roomy pool
+    (fixed-stripe capacity — no stall can occur) and against a
+    ``budget_frac`` slice of it.  The pressured engine admits on prompt
+    demand, grows page-by-page in-scan and preempts/requeues the youngest
+    stream on exhaustion, so the record captures what oversubscription
+    costs: preemptions per 1k tokens, recompute (requeued prompt+prefix)
+    tokens, goodput vs the roomy pool — and what it buys: peak resident
+    streams on half the memory.  Completed streams are asserted
+    bit-identical to the roomy run (the recompute-swap determinism
+    contract), and every request must reach a terminal outcome.
+    """
+    cfg = _config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    # bimodal mix: mostly short prompts, a tail of long ones (the streams
+    # that cross many page boundaries and trigger growth contention)
+    prompts = [
+        rng.integers(0, cfg.vocab,
+                     size=int(rng.integers(24, 40)) if i % 4 == 3
+                     else int(rng.integers(4, 12))).astype(np.int32)
+        for i in range(n_requests)
+    ]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+
+    stripe = slots * (-(-max_len // page_size))
+    budget = max(1, int(stripe * budget_frac))
+    engines = {
+        "roomy": ServeEngine(
+            cfg, params, slots=slots, max_len=max_len, fused=True,
+            chunk=chunk, kv_paging=True, kv_page_size=page_size,
+            deadline_ticks=deadline_ticks),
+        "pressured": ServeEngine(
+            cfg, params, slots=slots, max_len=max_len, fused=True,
+            chunk=chunk, kv_paging=True, kv_page_size=page_size,
+            page_budget=budget, deadline_ticks=deadline_ticks),
+    }
+    rows: Dict[str, object] = {}
+    streams: Dict[str, Dict[int, List[int]]] = {}
+    for name, eng in engines.items():
+        eng.run(mk())  # warm-up: compile out of the timed passes
+        best, reqs, syncs = float("inf"), None, 0
+        for _ in range(reps):
+            reqs = mk()
+            adapt_mod.reset_host_sync_count()
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            best = min(best, time.perf_counter() - t0)
+            syncs = adapt_mod.host_sync_count()
+        lost = [r.uid for r in reqs if r.outcome is None]
+        assert not lost, f"requests lost under pressure: {lost}"
+        rep = eng.last_run_report
+        toks = sum(len(r.out) for r in reqs)
+        good = sum(len(r.out) for r in reqs if r.done)
+        preempts = sum(r.preempts for r in reqs)
+        recompute = sum(
+            (len(r.prompt) + len(r.out)) * r.preempts for r in reqs)
+        streams[name] = {r.uid: r.out for r in reqs if r.done}
+        rows[name] = {
+            "page_budget": eng.spec.n_pages,
+            "peak_resident_streams": rep["peak_resident"],
+            "outcomes": rep.get("outcomes", {}),
+            "new_tokens": toks,
+            "goodput_tokens": good,
+            "preempts": preempts,
+            "preempts_per_1k_tokens": 1000.0 * preempts / max(toks, 1),
+            "recompute_tokens": recompute,
+            "seconds_total": best,
+            "goodput_tokens_per_sec": good / best,
+            "host_syncs_per_chunk": syncs / max(rep["chunks"], 1),
+        }
+    # recompute-swap determinism: a stream that completed under pressure
+    # is bit-identical to its unpressured self
+    diverged = [u for u, out in streams["pressured"].items()
+                if streams["roomy"].get(u, out) != out]
+    assert not diverged, f"pressured streams diverged: {diverged}"
+    return {
+        "bench": "serving_pressure",
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "config": {"arch": arch, "page_size": page_size, "max_len": max_len,
+                   "slots": slots, "n_requests": n_requests,
+                   "max_new": max_new, "chunk": chunk,
+                   "budget_frac": budget_frac,
+                   "deadline_ticks": deadline_ticks},
+        "paths": rows,
+        "pressure": {
+            "goodput_vs_roomy":
+                rows["pressured"]["goodput_tokens_per_sec"]
+                / rows["roomy"]["goodput_tokens_per_sec"],
+            "page_budget_vs_roomy":
+                rows["pressured"]["page_budget"]
+                / rows["roomy"]["page_budget"],
+            "preempts_per_1k_tokens":
+                rows["pressured"]["preempts_per_1k_tokens"],
+        },
+    }
+
+
+def main_pressure(quick: bool = True, out_path: str = DEFAULT_OUT
+                  ) -> List[str]:
+    kw = (dict(arch="micro", page_size=8, max_len=64, slots=8,
+               n_requests=24, max_new=16, chunk=16)
+          if quick else
+          dict(arch="qwen2-1.5b", page_size=16, max_len=256, slots=8,
+               n_requests=48, max_new=32, chunk=32))
+    record = run_pressure(**kw)
+    write_record(record, out_path)
+    out = ["path,page_budget,peak_resident,preempts,goodput_tok_per_sec,"
+           "syncs_per_chunk"]
+    for name, p in record["paths"].items():
+        out.append(
+            f"{name},{p['page_budget']},{p['peak_resident_streams']},"
+            f"{p['preempts']},{p['goodput_tokens_per_sec']:.1f},"
+            f"{p['host_syncs_per_chunk']:.2f}")
+    for key, g in record["pressure"].items():
+        out.append(f"pressure,{key}={g:.2f} -> {out_path}")
+    return out
+
+
 def main_paging(quick: bool = True, out_path: str = DEFAULT_OUT) -> List[str]:
     kw = (dict(arch="micro", budget_tokens=256, page_size=16, max_len=64,
                max_new=8, n_requests=24, chunk=16)
@@ -340,8 +482,12 @@ if __name__ == "__main__":
     ap.add_argument("--paging", action="store_true",
                     help="run the paged-KV residency benchmark instead of "
                          "the eager/fused throughput comparison")
+    ap.add_argument("--pressure", action="store_true",
+                    help="run the reserve-as-you-go oversubscription "
+                         "benchmark (0.5x page budget, preempt/requeue)")
     ap.add_argument("--out", type=str, default=DEFAULT_OUT)
     args = ap.parse_args()
-    entry = main_paging if args.paging else main
+    entry = (main_pressure if args.pressure
+             else main_paging if args.paging else main)
     for line in entry(quick=args.quick, out_path=args.out):
         print(line)

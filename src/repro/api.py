@@ -45,7 +45,9 @@ from .core.session import (  # noqa: F401  (façade re-exports)
 )
 from .models import edge_cnn as _edge_cnn
 from .models.api import ArchConfig
-from .serving import Request, ServeEngine  # noqa: F401  (deploy surface)
+from .serving import (  # noqa: F401  (deploy surface)
+    FaultConfig, Request, ServeEngine, SubmitResult,
+)
 
 __all__ = [
     # session layer
@@ -61,7 +63,7 @@ __all__ = [
     # batch workloads
     "plan_sparse_update",
     # deploy
-    "Request", "ServeEngine",
+    "Request", "ServeEngine", "SubmitResult", "FaultConfig",
     # low-level escape hatch
     "Budget",
 ]

@@ -7,6 +7,9 @@ data-pipeline cursors, policy, step).  Writes go to ``.tmp-`` then
 latest checkpoint.  On restore, arrays are re-placed with whatever shardings
 the *current* mesh requires — the elastic path: a checkpoint taken on one
 topology restores onto another (tested in tests/test_checkpoint.py).
+Restores validate every leaf against the saved ``tree.json`` metadata and
+the restore target, raising :class:`CheckpointError` on truncated or
+corrupt checkpoints instead of loading garbage.
 
 Multi-host note: each host saves only the shards it owns (addressable
 shards); this container is single-host so leaves are whole arrays, but the
@@ -23,6 +26,12 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(Exception):
+    """A checkpoint failed validation on restore: missing/corrupt files,
+    arrays that disagree with the saved ``tree.json`` metadata, or a
+    structure/dtype/shape mismatch against the restore target."""
 
 
 def _flatten(tree: Any) -> Tuple[Dict[str, np.ndarray], Any]:
@@ -93,27 +102,65 @@ class CheckpointManager:
         shardings: Optional[Any] = None,
     ) -> Tuple[Any, Dict]:
         """Restore into the structure of ``like``; optionally re-place each
-        leaf with ``shardings`` (same tree structure) — the elastic path."""
+        leaf with ``shardings`` (same tree structure) — the elastic path.
+
+        Every leaf is validated against the ``tree.json`` metadata written
+        at save time (count, dtype, shape) *and* against the restore
+        target, so a truncated ``arrays.npz``, a bit-rotted leaf or a
+        model-structure drift raises :class:`CheckpointError` instead of
+        silently loading garbage into the training state."""
         path = os.path.join(self.dir, f"step_{step}")
-        data = np.load(os.path.join(path, "arrays.npz"))
-        with open(os.path.join(path, "extra.json")) as f:
-            extra = json.load(f)
+        try:
+            with open(os.path.join(path, "tree.json")) as f:
+                meta = json.load(f)
+            data = np.load(os.path.join(path, "arrays.npz"))
+            with open(os.path.join(path, "extra.json")) as f:
+                extra = json.load(f)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            raise CheckpointError(
+                f"checkpoint step_{step} is unreadable: {e}") from e
+        if meta.get("n_leaves") != len(data.files):
+            raise CheckpointError(
+                f"step_{step}: arrays.npz holds {len(data.files)} leaves "
+                f"but tree.json recorded {meta.get('n_leaves')} — "
+                "truncated or mixed-up checkpoint")
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
         n = len(leaves_like)
-        assert n == len(data.files), (
-            f"checkpoint has {len(data.files)} leaves, expected {n} — "
-            "structure changed since save"
-        )
+        if n != len(data.files):
+            raise CheckpointError(
+                f"step_{step}: checkpoint has {len(data.files)} leaves, "
+                f"restore target has {n} — structure changed since save")
         sh_leaves = (
             jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * n
         )
         out = []
         for i, (ref, sh) in enumerate(zip(leaves_like, sh_leaves)):
-            arr = data[f"leaf_{i}"]
-            assert tuple(arr.shape) == tuple(ref.shape), (
-                f"leaf {i}: shape {arr.shape} != expected {ref.shape}"
-            )
-            arr = arr.astype(ref.dtype)
+            key = f"leaf_{i}"
+            try:
+                arr = data[key]
+            except Exception as e:
+                raise CheckpointError(
+                    f"step_{step}: leaf {i} missing or undecodable: {e}"
+                ) from e
+            saved_dtype = meta.get("dtypes", {}).get(key)
+            saved_shape = meta.get("shapes", {}).get(key)
+            if saved_dtype is not None and str(arr.dtype) != saved_dtype:
+                raise CheckpointError(
+                    f"step_{step}: leaf {i} dtype {arr.dtype} != "
+                    f"{saved_dtype} recorded in tree.json — corrupt leaf")
+            if saved_shape is not None and list(arr.shape) != saved_shape:
+                raise CheckpointError(
+                    f"step_{step}: leaf {i} shape {tuple(arr.shape)} != "
+                    f"{tuple(saved_shape)} recorded in tree.json — "
+                    "corrupt leaf")
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise CheckpointError(
+                    f"step_{step}: leaf {i} shape {tuple(arr.shape)} != "
+                    f"expected {tuple(ref.shape)}")
+            if np.dtype(arr.dtype) != np.dtype(ref.dtype):
+                raise CheckpointError(
+                    f"step_{step}: leaf {i} dtype {arr.dtype} != expected "
+                    f"{np.dtype(ref.dtype)} — refusing a silent cast")
             if sh is not None:
                 out.append(jax.device_put(arr, sh))
             else:

@@ -68,6 +68,8 @@ class AdaptResult:
     # blocking device->host transfer events attributable to this task; a
     # fleet adaptation amortises its per-group fetches, so this is a float
     host_transfers: float = 0.0
+    # fine-tune steps skipped by the non-finite guard (carry passthrough)
+    skipped_steps: int = 0
 
     @property
     def steps_per_sec(self) -> float:
@@ -147,6 +149,7 @@ def adapt_task(
     policy_override: Optional[SparseUpdatePolicy] = None,
     step_cache=None,  # EpisodeStepCache: reuse compiles across tasks
     fused: bool = True,
+    nan_loss_steps: Tuple[int, ...] = (),
 ) -> AdaptResult:
     """Run Algorithm 1 for one target task.
 
@@ -157,6 +160,11 @@ def adapt_task(
     ``fused=True`` (default) runs the fine-tune loop as a single scanned
     dispatch; ``fused=False`` keeps the eager per-iteration loop for
     debugging and loss-trajectory inspection mid-run.
+
+    Non-finite steps (diverged loss/grads) are skipped in-graph — the
+    delta/optimizer carry passes through — and counted in
+    ``AdaptResult.skipped_steps``.  ``nan_loss_steps`` injects NaN losses
+    at the listed step indices (the fault harness for that guard).
     """
     transfers = 0
     if policy_override is None:
@@ -173,41 +181,58 @@ def adapt_task(
 
     t0 = time.perf_counter()
     losses: list = []
+    skipped = 0
     if iters <= 0:
         pass
     elif fused and step_cache is not None:
-        run = step_cache.scan_steps(policy, iters)
+        run = step_cache.scan_steps(policy, iters, nan_loss_steps)
         ci = step_cache.chan_idx_arrays(policy)
-        deltas, opt_state, loss_arr = run(
+        deltas, opt_state, loss_arr, skip_arr = run(
             params, deltas, opt_state, support, pseudo_query, ci)
-        losses = [float(x) for x in _fetch(loss_arr)]
+        loss_h, skip_h = _fetch((loss_arr, skip_arr))
+        losses = [float(x) for x in loss_h]
+        skipped = int(np.sum(skip_h))
         transfers += 1
     elif fused:
         run = make_episode_sparse_scan(
-            backbone.features, policy, optimizer, max_way, iters)
-        deltas, opt_state, loss_arr = run(
+            backbone.features, policy, optimizer, max_way, iters,
+            nan_steps=nan_loss_steps)
+        deltas, opt_state, loss_arr, skip_arr = run(
             params, deltas, opt_state, support, pseudo_query)
-        losses = [float(x) for x in _fetch(loss_arr)]
+        loss_h, skip_h = _fetch((loss_arr, skip_arr))
+        losses = [float(x) for x in loss_h]
+        skipped = int(np.sum(skip_h))
         transfers += 1
-    elif step_cache is not None:
-        step = step_cache.step(policy)
-        ci = step_cache.chan_idx_arrays(policy)
-        for _ in range(iters):
-            deltas, opt_state, loss = step(
-                params, deltas, opt_state, support, pseudo_query, ci)
-            losses.append(_fetch_scalar(loss))
-        transfers += iters
     else:
-        step = make_episode_sparse_step(
-            backbone.features, policy, optimizer, max_way)
-        for _ in range(iters):
-            deltas, opt_state, loss = step(
-                params, deltas, opt_state, support, pseudo_query)
-            losses.append(_fetch_scalar(loss))
-        transfers += iters
+        # eager escape hatch: the compiled step applies the same in-graph
+        # guard and reports NaN for a skipped step; injection restores the
+        # pre-step carry host-side (the step itself stays fault-free)
+        if step_cache is not None:
+            step = step_cache.step(policy)
+            ci = step_cache.chan_idx_arrays(policy)
+            args = (support, pseudo_query, ci)
+        else:
+            step = make_episode_sparse_step(
+                backbone.features, policy, optimizer, max_way)
+            args = (support, pseudo_query)
+        inject = frozenset(int(s) for s in nan_loss_steps)
+        for t in range(iters):
+            if t in inject:
+                # the step donates its carries: keep live copies to restore
+                prev = jax.tree_util.tree_map(jnp.copy, (deltas, opt_state))
+            deltas, opt_state, loss = step(params, deltas, opt_state, *args)
+            if t in inject:
+                deltas, opt_state = prev
+                losses.append(float("nan"))
+                skipped += 1
+            else:
+                val = _fetch_scalar(loss)
+                losses.append(val)
+                skipped += int(not np.isfinite(val))
+        transfers += iters - len([t for t in inject if t < iters])
     train_dt = time.perf_counter() - t0
     return AdaptResult(deltas, policy, fisher_dt, train_dt, losses,
-                       host_transfers=transfers)
+                       host_transfers=transfers, skipped_steps=skipped)
 
 
 def evaluate_task(

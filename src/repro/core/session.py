@@ -324,6 +324,9 @@ class Adaptation:
     host_transfers: float
     _session: "TinyTrainSession" = dataclasses.field(repr=False)
     _eval: Callable[[Any, Any], float] = dataclasses.field(repr=False)
+    # fine-tune steps skipped by the non-finite guard (loss/grad diverged
+    # or fault-injected): the carry passed through unchanged on those
+    skipped_steps: int = 0
 
     @property
     def steps_per_sec(self) -> float:
@@ -389,6 +392,7 @@ class Adaptation:
                 f"train={self.train_seconds:.2f}s "
                 f"steps_per_sec={self.steps_per_sec:.1f} "
                 f"host_transfers={self.host_transfers:g} "
+                f"skipped_steps={self.skipped_steps} "
                 f"delta_params={self.delta_param_count()}")
 
 
@@ -457,11 +461,15 @@ class TinyTrainSession:
         policy_override: Optional[SparseUpdatePolicy] = None,
         seed: int = 0,
         fused: bool = True,
+        nan_loss_steps: Tuple[int, ...] = (),
     ) -> Adaptation:
         """Algorithm 1 on one task: probe → select → sparse fine-tune.
 
         ``fused=True`` (default) runs the fine-tune loop as one scanned
         dispatch; ``fused=False`` is the eager per-iteration escape hatch.
+        ``nan_loss_steps`` fault-injects NaN losses at the listed step
+        indices to drive the non-finite guard (skipped steps are counted
+        in ``Adaptation.skipped_steps``).
         """
         self._check_task(task)
         if isinstance(profile, str):
@@ -469,7 +477,8 @@ class TinyTrainSession:
         budget = _as_budget(profile)
         prof = profile if isinstance(profile, DeviceProfile) else None
         kw = dict(iters=iters, max_way=self.max_way,
-                  step_cache=self.step_cache, fused=fused)
+                  step_cache=self.step_cache, fused=fused,
+                  nan_loss_steps=nan_loss_steps)
 
         if policy_override is not None:
             res = adapt_task(self.backbone, self.params, task.support,
@@ -667,13 +676,15 @@ class TinyTrainSession:
             with dist_context.sharding_context(fleet_mesh=mesh):
                 run = self.step_cache.vmap_scan_steps(pol0, iters)
                 t0 = time.perf_counter()
-                d_stack, _, loss_stack = run(params_run, sup, pq, ci)
+                d_stack, _, loss_stack, skip_stack = run(
+                    params_run, sup, pq, ci)
             if rules is not None and rules.padded_count(n_real) != n_real:
                 d_stack = jax.tree_util.tree_map(
                     lambda x: x[:n_real], d_stack)
                 loss_stack = loss_stack[:n_real]
+                skip_stack = skip_stack[:n_real]
             # one barrier fetch per group; per-task views are numpy slices
-            d_host, losses = _fetch((d_stack, loss_stack))
+            d_host, losses, skips = _fetch((d_stack, loss_stack, skip_stack))
             dt = (time.perf_counter() - t0) / len(idxs)
             for j, i in enumerate(idxs):
                 res = AdaptResult(
@@ -682,7 +693,8 @@ class TinyTrainSession:
                     policy=policies[i], fisher_seconds=fisher_dt[i],
                     train_seconds=dt,
                     losses=[float(x) for x in losses[j]],
-                    host_transfers=transfers[i] + 1.0 / len(idxs))
+                    host_transfers=transfers[i] + 1.0 / len(idxs),
+                    skipped_steps=int(np.sum(skips[j])))
                 out[i] = self._wrap(method, tasks[i], prof, res,
                                     budget=budget)
         self.last_fleet_report = {
@@ -803,7 +815,8 @@ class TinyTrainSession:
             train_seconds=res.train_seconds,
             losses=list(res.losses) if res.losses is not None else [],
             host_transfers=res.host_transfers,
-            _session=self, _eval=_eval)
+            _session=self, _eval=_eval,
+            skipped_steps=res.skipped_steps)
 
     def _sparseupdate_policy(self, budget: Budget,
                              proxy_task: Optional[Task], seed: int
@@ -847,9 +860,11 @@ class TinyTrainSession:
                 self._full_scans[iters] = make_full_episode_scan(
                     self.backbone.features, self.baseline_optimizer,
                     self.max_way, iters)
-            p, st, loss_arr = self._full_scans[iters](
+            p, st, loss_arr, skip_arr = self._full_scans[iters](
                 p, st, task.support, task.pseudo_query)
-            losses = [float(x) for x in _fetch(loss_arr)]
+            loss_h, skip_h = _fetch((loss_arr, skip_arr))
+            losses = [float(x) for x in loss_h]
+            skipped = int(np.sum(skip_h))
         else:
             if self._full_step is None:
                 self._full_step = make_full_episode_step(
@@ -860,6 +875,7 @@ class TinyTrainSession:
                 p, st, loss = self._full_step(p, st, task.support,
                                               task.pseudo_query)
                 losses.append(_fetch_scalar(loss))
+            skipped = sum(1 for x in losses if not np.isfinite(x))
         dt = time.perf_counter() - t0
 
         def _eval(sup, qry, _p=p):
@@ -872,7 +888,7 @@ class TinyTrainSession:
             method="fulltrain", task=task, profile=None, budget=None,
             deltas=p, policy=None, fisher_seconds=0.0, train_seconds=dt,
             losses=losses, host_transfers=1 if (fused and iters > 0) else iters,
-            _session=self, _eval=_eval)
+            _session=self, _eval=_eval, skipped_steps=skipped)
 
     def _tinytl(self, name: str, task: Task, iters: int, seed: int,
                 fused: bool = True) -> Adaptation:
@@ -898,9 +914,11 @@ class TinyTrainSession:
                 self._tinytl_scans[skey] = make_tinytl_episode_scan(
                     self.backbone.cfg, self.baseline_optimizer, self.max_way,
                     dropped, iters)
-            adapters, st, loss_arr = self._tinytl_scans[skey](
+            adapters, st, loss_arr, skip_arr = self._tinytl_scans[skey](
                 self.params, adapters, st, task.support, task.pseudo_query)
-            losses = [float(x) for x in _fetch(loss_arr)]
+            loss_h, skip_h = _fetch((loss_arr, skip_arr))
+            losses = [float(x) for x in loss_h]
+            skipped = int(np.sum(skip_h))
         else:
             if dropped not in self._tinytl_steps:
                 self._tinytl_steps[dropped] = make_tinytl_episode_step(
@@ -912,6 +930,7 @@ class TinyTrainSession:
                 adapters, st, loss = step(self.params, adapters, st,
                                           task.support, task.pseudo_query)
                 losses.append(_fetch_scalar(loss))
+            skipped = sum(1 for x in losses if not np.isfinite(x))
         dt = time.perf_counter() - t0
 
         cfg, params, mw = self.backbone.cfg, self.params, self.max_way
@@ -929,4 +948,4 @@ class TinyTrainSession:
             deltas=adapters, policy=None, fisher_seconds=0.0,
             train_seconds=dt, losses=losses,
             host_transfers=1 if (fused and iters > 0) else iters,
-            _session=self, _eval=_eval)
+            _session=self, _eval=_eval, skipped_steps=skipped)

@@ -6,6 +6,11 @@ target dataset".  Gradients are taken **only w.r.t. the delta parameters**;
 base weights are constants to autodiff, which is what yields the backward
 memory/compute savings (no dW for frozen layers; no backprop below the
 horizon; optimizer state only for deltas).
+
+Every step builder carries the non-finite guard: a step whose loss or
+gradients diverge is skipped (carry passthrough) instead of poisoning the
+remaining iterations — the scan loops report per-step ``skipped`` flags,
+the eager steps report the loss as NaN.
 """
 from __future__ import annotations
 
@@ -20,6 +25,25 @@ from .backbones import Backbone
 from .policy import SparseUpdatePolicy
 
 
+def _finite_step(loss, grads):
+    """Scalar bool: the step's loss *and* every gradient leaf are finite.
+
+    The non-finite guard for the fine-tune loops: a diverged step (fp16
+    overflow, log(0) on a degenerate episode, injected fault) must not
+    poison the delta/optimizer carry, so callers apply the update through
+    :func:`_guard_carry` and the bad step becomes a no-op."""
+    ok = jnp.all(jnp.isfinite(loss))
+    for g in jax.tree_util.tree_leaves(grads):
+        ok = ok & jnp.all(jnp.isfinite(g))
+    return ok
+
+
+def _guard_carry(ok, new, old):
+    """Select ``new`` when ``ok`` else keep ``old`` (carry passthrough)."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(ok, n, o), new, old)
+
+
 def make_sparse_train_step(
     loss_fn: Callable[..., jax.Array],
     policy: SparseUpdatePolicy,
@@ -31,7 +55,9 @@ def make_sparse_train_step(
 
     Returns step(params, deltas, opt_state, batch) -> (deltas, opt_state,
     loss).  Params are never updated — they stay the frozen meta-trained
-    weights; deltas carry the task adaptation.
+    weights; deltas carry the task adaptation.  A non-finite step (loss or
+    any gradient leaf) leaves deltas/opt_state untouched and reports the
+    loss as NaN so the host can count the skip.
     """
 
     def step(params, deltas, opt_state, batch):
@@ -39,9 +65,11 @@ def make_sparse_train_step(
             return loss_fn(params, batch, deltas=d, plan=policy)
 
         loss, grads = jax.value_and_grad(f)(deltas)
-        updates, opt_state = optimizer.update(grads, opt_state, deltas)
-        deltas = apply_updates(deltas, updates)
-        return deltas, opt_state, loss
+        ok = _finite_step(loss, grads)
+        updates, new_st = optimizer.update(grads, opt_state, deltas)
+        deltas = _guard_carry(ok, apply_updates(deltas, updates), deltas)
+        opt_state = _guard_carry(ok, new_st, opt_state)
+        return deltas, opt_state, jnp.where(ok, loss, jnp.nan)
 
     donate_argnums = (1, 2) if donate else ()
     return jax.jit(step, donate_argnums=donate_argnums)
@@ -64,9 +92,11 @@ def make_episode_sparse_step(
             )
 
         loss, grads = jax.value_and_grad(f)(deltas)
-        updates, opt_state = optimizer.update(grads, opt_state, deltas)
-        deltas = apply_updates(deltas, updates)
-        return deltas, opt_state, loss
+        ok = _finite_step(loss, grads)
+        updates, new_st = optimizer.update(grads, opt_state, deltas)
+        deltas = _guard_carry(ok, apply_updates(deltas, updates), deltas)
+        opt_state = _guard_carry(ok, new_st, opt_state)
+        return deltas, opt_state, jnp.where(ok, loss, jnp.nan)
 
     return jax.jit(step, donate_argnums=(1, 2))
 
@@ -75,28 +105,48 @@ def scan_train_loop(
     loss_fn: Callable[..., jax.Array],
     optimizer: Optimizer,
     iters: int,
+    *,
+    nan_steps: Tuple[int, ...] = (),
 ):
     """Fuse a (value_and_grad -> update -> apply) loop into one ``lax.scan``.
 
     ``loss_fn(x, *ctx) -> scalar`` where ``x`` is the trained pytree and
     ``ctx`` is static context (frozen params, batches, channel indices).
-    Returns run(x, opt_state, *ctx) -> (x, opt_state, losses) with losses
-    shaped (iters,) — the single-dispatch core shared by the sparse,
-    full-train and TinyTL fused loops (jit/donation is the caller's job).
+    Returns run(x, opt_state, *ctx) -> (x, opt_state, losses, skipped)
+    with losses and skipped shaped (iters,) — the single-dispatch core
+    shared by the sparse, full-train and TinyTL fused loops (jit/donation
+    is the caller's job).
+
+    Non-finite guard: a step whose loss or any gradient leaf is non-finite
+    is skipped — the (deltas, opt_state) carry passes through unchanged
+    and ``skipped[t]`` is True — so one diverged iteration cannot poison
+    the rest of the scanned loop.  ``nan_steps`` is the fault-injection
+    hook (``FaultConfig.nan_loss_steps``): the listed step indices get
+    their loss forced to NaN at trace time, driving the guard path under
+    test without touching the real numerics.
     """
+    nan_steps = tuple(int(s) for s in nan_steps)
 
     def run(x, opt_state, *ctx):
-        def body(carry, _):
+        def body(carry, inject):
             x, st = carry
             loss, grads = jax.value_and_grad(
                 lambda xx: loss_fn(xx, *ctx))(x)
-            updates, st = optimizer.update(grads, st, x)
-            x = apply_updates(x, updates)
-            return (x, st), loss
+            if inject is not None:
+                loss = jnp.where(inject, jnp.nan, loss)
+            ok = _finite_step(loss, grads)
+            updates, new_st = optimizer.update(grads, st, x)
+            x = _guard_carry(ok, apply_updates(x, updates), x)
+            st = _guard_carry(ok, new_st, st)
+            return (x, st), (loss, ~ok)
 
-        (x, opt_state), losses = jax.lax.scan(
-            body, (x, opt_state), None, length=iters)
-        return x, opt_state, losses
+        xs = None
+        if nan_steps:
+            xs = jnp.zeros((iters,), bool).at[
+                jnp.asarray(nan_steps, jnp.int32)].set(True, mode="drop")
+        (x, opt_state), (losses, skipped) = jax.lax.scan(
+            body, (x, opt_state), xs, length=iters)
+        return x, opt_state, losses, skipped
 
     return run
 
@@ -107,12 +157,15 @@ def make_episode_sparse_scan(
     optimizer: Optimizer,
     max_way: int,
     iters: int,
+    *,
+    nan_steps: Tuple[int, ...] = (),
 ):
     """Whole fine-tune loop as one compiled ``lax.scan`` call.
 
     Returns run(params, deltas, opt_state, support, query) -> (deltas,
-    opt_state, losses) with losses shaped (iters,) — a single dispatch and
-    a single host transfer instead of one per iteration.
+    opt_state, losses, skipped) with losses/skipped shaped (iters,) — a
+    single dispatch and a single host transfer instead of one per
+    iteration, non-finite steps skipped via carry passthrough.
     """
     from .protonet import episode_loss
 
@@ -120,7 +173,7 @@ def make_episode_sparse_scan(
         lambda d, params, support, query: episode_loss(
             feature_fn, params, support, query, max_way,
             deltas=d, plan=policy),
-        optimizer, iters)
+        optimizer, iters, nan_steps=nan_steps)
 
     def run(params, deltas, opt_state, support, query):
         return loop(deltas, opt_state, params, support, query)
@@ -263,14 +316,18 @@ class EpisodeStepCache:
                     )
 
                 loss, grads = jax.value_and_grad(f)(deltas)
-                updates, opt_state = optimizer.update(grads, opt_state, deltas)
-                deltas = apply_updates(deltas, updates)
-                return deltas, opt_state, loss
+                ok = _finite_step(loss, grads)
+                updates, new_st = optimizer.update(grads, opt_state, deltas)
+                deltas = _guard_carry(
+                    ok, apply_updates(deltas, updates), deltas)
+                opt_state = _guard_carry(ok, new_st, opt_state)
+                return deltas, opt_state, jnp.where(ok, loss, jnp.nan)
 
             self._steps[key] = jax.jit(step, donate_argnums=(1, 2))
         return self._steps[key]
 
-    def _scan_run_fn(self, policy: SparseUpdatePolicy, iters: int):
+    def _scan_run_fn(self, policy: SparseUpdatePolicy, iters: int,
+                     nan_steps: Tuple[int, ...] = ()):
         from .protonet import episode_loss
 
         feature_fn = self.backbone.features
@@ -279,25 +336,30 @@ class EpisodeStepCache:
             lambda d, params, support, query, chan_idx: episode_loss(
                 feature_fn, params, support, query, max_way,
                 deltas=d, plan=policy, chan_idx=chan_idx),
-            self.optimizer, iters)
+            self.optimizer, iters, nan_steps=nan_steps)
 
         def run(params, deltas, opt_state, support, query, chan_idx):
             return loop(deltas, opt_state, params, support, query, chan_idx)
 
         return run
 
-    def scan_steps(self, policy: SparseUpdatePolicy, iters: int):
+    def scan_steps(self, policy: SparseUpdatePolicy, iters: int,
+                   nan_steps: Tuple[int, ...] = ()):
         """The whole fine-tune loop as one compiled call (keyed on policy
         structure + iters, carries donated).
 
         run(params, deltas, opt_state, support, query, chan_idx) ->
-        (deltas, opt_state, losses) with losses shaped (iters,): one
-        dispatch and one loss transfer per adapt() instead of ``iters``.
+        (deltas, opt_state, losses, skipped) with losses/skipped shaped
+        (iters,): one dispatch and one loss transfer per adapt() instead
+        of ``iters``.  ``nan_steps`` (fault injection) is part of the
+        compile key — production callers pass none and share the clean
+        program.
         """
-        key = (self._key(policy), int(iters))
+        nan_steps = tuple(int(s) for s in nan_steps)
+        key = (self._key(policy), int(iters), nan_steps)
         if key not in self._scans:
             self._scans[key] = jax.jit(
-                self._scan_run_fn(policy, int(iters)),
+                self._scan_run_fn(policy, int(iters), nan_steps),
                 donate_argnums=(1, 2))
         return self._scans[key]
 
@@ -307,8 +369,8 @@ class EpisodeStepCache:
         a leading task axis, params broadcast, and the zero-initialised
         delta/optimizer carries are created *inside* the compiled call —
         run(params, supports, queries, chan_idxs) -> (deltas, opt_state,
-        losses), everything task-stacked.  N same-structure tasks fine-tune
-        in a single dispatch with no per-task host-side init.
+        losses, skipped), everything task-stacked.  N same-structure tasks
+        fine-tune in a single dispatch with no per-task host-side init.
 
         ``mode``: ``"vmap"`` batches the task axis through every op (the
         accelerator path — batched matmuls/convs fill the hardware);

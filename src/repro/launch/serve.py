@@ -49,6 +49,23 @@ def main() -> None:
                          "fixed-stripe capacity slots*ceil(max_len/page))")
     ap.add_argument("--kv-int8", action="store_true",
                     help="store KV pages in int8 with per-token scales")
+    ap.add_argument("--reserve", default=None,
+                    choices=["asyougo", "worstcase"],
+                    help="page reservation discipline (default: the arch's "
+                         "kv_reserve; asyougo grows page-by-page in-scan)")
+    ap.add_argument("--pressure", type=float, default=None, metavar="FRAC",
+                    help="oversubscribe the page pool to FRAC of the "
+                         "fixed-stripe capacity (e.g. 0.5); implies --paging")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="per-request resident-tick budget; expired "
+                         "requests end with outcome='expired'")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="admission backpressure: shed submissions beyond "
+                         "this backlog with outcome='rejected'")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="fault injection, e.g. "
+                         "'nan:3:2,pre:1:4,exhaust:10:20,qlimit:8' "
+                         "(see repro.serving.faults.parse_inject)")
     ap.add_argument("--adapt", action="store_true",
                     help="TinyTrain-adapt to a synthetic task, fold, serve")
     ap.add_argument("--device", default="jetson-nano",
@@ -58,14 +75,32 @@ def main() -> None:
 
     cfg = configs.preset_config(args.arch, args.preset)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    faults = None
+    if args.inject:
+        from ..serving.faults import parse_inject
+
+        faults = parse_inject(args.inject)
+    page_budget = args.page_budget
+    paging = args.paging
+    if args.pressure is not None:
+        paging = True
+        ps = args.page_size or cfg.kv_page_size
+        stripe = args.slots * (-(-args.max_len // ps))
+        page_budget = max(1, int(stripe * args.pressure))
+        print(f"[serve] pressure {args.pressure}x: {page_budget} pages "
+              f"(fixed-stripe capacity {stripe})")
     eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                           fused=not args.eager, chunk=args.chunk,
                           prefill_block=args.prefill_block,
                           temperature=args.temperature, top_k=args.top_k,
-                          kv_paging=args.paging or None,
+                          kv_paging=paging or None,
                           kv_page_size=args.page_size,
                           kv_int8=args.kv_int8 or None,
-                          page_budget=args.page_budget)
+                          page_budget=page_budget,
+                          reserve=args.reserve,
+                          deadline_ticks=args.deadline_ticks,
+                          queue_limit=args.queue_limit,
+                          faults=faults)
     rng = np.random.default_rng(0)
 
     if args.adapt:
@@ -102,7 +137,21 @@ def main() -> None:
           f"(+{prompt_toks} prompt tokens ingested) in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s, {eng.ticks} engine ticks, "
           f"{args.slots} slots, {mode})")
-    assert all(r.done for r in reqs)
+    # under pressure a request legitimately ends rejected / expired /
+    # preempted / numerics — report the outcome mix; only a request the
+    # engine *lost* (no terminal outcome at all) is an engine error
+    outcomes = eng.last_run_report.get("outcomes", {})
+    if outcomes:
+        print("[serve] outcomes: "
+              + ", ".join(f"{k}={v}" for k, v in sorted(outcomes.items())))
+    preempts = sum(r.preempts for r in reqs)
+    if preempts:
+        print(f"[serve] {preempts} preempt-and-requeue recompute swaps")
+    lost = [r.uid for r in reqs if r.outcome is None]
+    if lost:
+        raise SystemExit(
+            f"[serve] ENGINE ERROR: requests {lost} reached no terminal "
+            "outcome")
     mem = eng.last_run_report.get("memory", eng.memory_report())
     peak = eng.last_run_report.get("peak_resident", 0)
     if mem["kv_paging"]:

@@ -82,6 +82,11 @@ class ArchConfig:
     kv_paging: bool = False
     kv_page_size: int = 16
     kv_int8: bool = False
+    # page reservation discipline: 'asyougo' admits on the prompt's page
+    # demand and grows page-by-page in-scan (preempt-and-requeue on pool
+    # exhaustion); 'worstcase' pins ceil(max_len/page_size) pages at
+    # admission.  ServeEngine(reserve=...) overrides.
+    kv_reserve: str = "asyougo"
     # --- numerics ---
     dtype: str = "bfloat16"
     # --- long-context capability (decides long_500k applicability) ---
@@ -111,6 +116,7 @@ class ArchConfig:
         assert self.family in {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
         assert self.serve_prefill_block >= 1
         assert self.kv_page_size >= 1
+        assert self.kv_reserve in ("asyougo", "worstcase")
         if self.family in {"dense", "moe", "vlm", "audio"}:
             assert self.n_heads > 0 and self.head_dim > 0
         if self.family == "moe":

@@ -31,6 +31,41 @@ exact token-mode program and streams are bit-identical to ``B == 1``
 (greedy and sampled alike — sample keys depend on the token, not the
 schedule).
 
+**Serving under pressure** (the robustness layer, all in-graph so the
+one-sync-per-chunk contract survives):
+
+- *Reserve-as-you-go paging* (``reserve='asyougo'``, the paged default):
+  admission reserves only the pages the prompt needs; a generating stream
+  grows page-by-page inside the tick body (``PG.extend``) when its
+  position crosses a page boundary.  On pool exhaustion a deterministic
+  victim policy — youngest resident by admission order — **preempts** a
+  stream in-scan: pages released, table rows invalidated, slot freed; the
+  host requeues its prompt + generated prefix and the stream re-admits
+  through the normal block-prefill path (recompute swap).  Resumed
+  streams are bit-identical to unpreempted ones: the feed is the full
+  token history, positions realign, and sample keys depend only on
+  (request id, token index) — never on the schedule.
+  ``reserve='worstcase'`` keeps the PR-6 all-at-admission discipline.
+- *Deadlines and bounded retries*: ``Request.deadline_ticks`` is a budget
+  of **resident** engine ticks; it survives preemption (the host carries
+  the remaining budget across requeues) and expiry terminates the stream
+  with an ``expired`` outcome.  ``preempt_budget`` bounds requeues: a
+  stream preempted with no budget left terminates as ``preempted``.
+- *Structured outcomes*: every tick emits a per-slot outcome code through
+  the event arrays; the host maps them onto ``Request.outcome`` ∈
+  {done, truncated, expired, preempted, numerics, rejected} and tallies
+  them in ``last_run_report`` — no stream is ever silently dropped.
+- *Admission backpressure*: with ``queue_limit`` set, ``submit()`` on a
+  full queue returns a typed rejection (``SubmitResult``) and ``run()``
+  sheds the overflow with ``outcome='rejected'`` instead of growing
+  unbounded host state.
+- *Non-finite guards*: emitted logits rows are checked for finiteness
+  in-graph; a non-finite row suppresses the emit and terminates the
+  stream with a ``numerics`` outcome instead of sampling garbage.
+- *Fault injection* (``faults=FaultConfig(...)``): deterministic NaN
+  logits / forced preemption / forced pool exhaustion / queue overflow,
+  traced into the same compiled programs (see ``serving.faults``).
+
 TinyTrain integration: ``fold_deltas`` folds channel deltas into a serving
 parameter copy (W ⊕ scatter(ΔW)), so adapted models serve at exactly base
 cost.
@@ -50,6 +85,28 @@ from ..core import adapt as _telemetry
 from ..models import transformer as T
 from ..models.api import ArchConfig
 from . import paging as PG
+from .faults import FaultConfig
+from . import faults as FI
+
+# structured terminal outcomes, as emitted through the per-tick event
+# arrays (int32 codes) and surfaced as Request.outcome strings
+OUTCOME_NONE = 0        # slot still running
+OUTCOME_DONE = 1        # reached max_new
+OUTCOME_TRUNCATED = 2   # evicted by its KV budget with max_new unmet
+OUTCOME_EXPIRED = 3     # deadline_ticks resident-tick budget exhausted
+OUTCOME_REQUEUED = 4    # preempted with retry budget left (not terminal)
+OUTCOME_PREEMPTED = 5   # preempted with no retry budget left (terminal)
+OUTCOME_NUMERICS = 6    # non-finite logits on an emitting row
+
+OUTCOME_NAMES = {
+    OUTCOME_DONE: "done", OUTCOME_TRUNCATED: "truncated",
+    OUTCOME_EXPIRED: "expired", OUTCOME_PREEMPTED: "preempted",
+    OUTCOME_NUMERICS: "numerics",
+}
+
+# ttl sentinel for requests without a deadline: never reaches zero
+# within any realistic run (2^30 resident ticks)
+_NO_DEADLINE = 1 << 30
 
 
 @dataclasses.dataclass
@@ -58,29 +115,55 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new: int
     # per-request KV budget (prompt + generated tokens); None = the
-    # engine-wide max_len.  With paging on, admission reserves exactly
-    # ceil(max_len / page_size) pages, so short requests stop pinning
-    # full-length stripes
+    # engine-wide max_len.  With paging on, admission reserves the
+    # prompt's pages (reserve='asyougo') or ceil(max_len / page_size)
+    # (reserve='worstcase')
     max_len: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     # evicted by its KV-budget cutoff before reaching max_new tokens
     truncated: bool = False
+    # deadline in *resident* engine ticks (None = engine default / none);
+    # the budget survives preemption — requeued streams resume with the
+    # remaining balance
+    deadline_ticks: Optional[int] = None
+    # preempt-and-requeue retries allowed (None = engine default)
+    preempt_budget: Optional[int] = None
+    # terminal outcome: done | truncated | expired | preempted |
+    # numerics | rejected; None while in flight
+    outcome: Optional[str] = None
+    # times this stream was preempted and requeued
+    preempts: int = 0
+
+    @property
+    def terminal(self) -> bool:
+        return self.outcome is not None
+
+
+class SubmitResult(NamedTuple):
+    """Typed admission verdict from :meth:`ServeEngine.submit`."""
+
+    accepted: bool
+    reason: str  # "ok" | "queue_full"
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
-    cursor: int = 0  # next prompt token to feed; >= len(prompt) => generating
+    cursor: int = 0  # next feed token; >= len(feed) => generating
     rid: int = -1  # engine request id (sampling key; mirrors the fused rid)
     budget: int = 0  # effective KV budget (request max_len or engine-wide)
+    # feed = prompt + already-generated prefix (non-empty on resume);
+    # the eager mirror of the fused path's requeued PendingBuffer entry
+    feed: Optional[np.ndarray] = None
+    pages: int = 0  # pages currently held (reserve-as-you-go growth)
 
 
 class SlotState(NamedTuple):
     """Per-slot request lifecycle state, device-resident for the fused scan."""
 
-    prompt: jax.Array      # (slots, max_len) int32 prompt buffer
-    prompt_len: jax.Array  # (slots,) int32
+    prompt: jax.Array      # (slots, max_len) int32 feed buffer
+    prompt_len: jax.Array  # (slots,) int32 feed length (prompt + resume)
     cursor: jax.Array      # (slots,) int32; >= prompt_len => generating
     pos: jax.Array         # (slots,) int32 absolute decode position
     last_tok: jax.Array    # (slots,) int32 feedback token while generating
@@ -88,17 +171,24 @@ class SlotState(NamedTuple):
     budget: jax.Array      # (slots,) int32 per-request KV budget (eviction)
     active: jax.Array      # (slots,) bool
     rid: jax.Array         # (slots,) int32 engine-internal request id; -1 free
+    pages: jax.Array       # (slots,) int32 pages held (as-you-go growth)
+    ttl: jax.Array         # (slots,) int32 resident ticks until deadline
+    tok_base: jax.Array    # (slots,) int32 emitted tokens before (re)admit
+    preempt_left: jax.Array  # (slots,) int32 requeues left before terminal
 
 
 class PendingBuffer(NamedTuple):
     """Device-side admission queue, drained FIFO by the scan between syncs."""
 
-    prompt: jax.Array   # (P, max_len) int32
+    prompt: jax.Array   # (P, max_len) int32 feed (prompt + resumed prefix)
     length: jax.Array   # (P,) int32
-    max_new: jax.Array  # (P,) int32
+    max_new: jax.Array  # (P,) int32 emits still owed
     budget: jax.Array   # (P,) int32 per-request KV budget
-    n_pages: jax.Array  # (P,) int32 worst-case page demand (0 if unpaged)
+    n_pages: jax.Array  # (P,) int32 admission page demand (0 if unpaged)
     rid: jax.Array      # (P,) int32
+    ttl: jax.Array      # (P,) int32 remaining deadline (resident ticks)
+    tok_base: jax.Array  # (P,) int32 emitted tokens before (re)admission
+    preempt_left: jax.Array  # (P,) int32 requeues left
     head: jax.Array     # () int32 next entry to admit
     count: jax.Array    # () int32 valid entries
 
@@ -122,6 +212,11 @@ class ServeEngine:
         kv_page_size: Optional[int] = None,
         kv_int8: Optional[bool] = None,
         page_budget: Optional[int] = None,
+        reserve: Optional[str] = None,
+        deadline_ticks: Optional[int] = None,
+        preempt_budget: int = 4,
+        queue_limit: Optional[int] = None,
+        faults: Optional[FaultConfig] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -148,6 +243,30 @@ class ServeEngine:
             self.pool = PG.PagePool(
                 table=jnp.full((slots, 1), -1, jnp.int32),
                 free=jnp.ones((1,), bool))
+        # reservation discipline: 'asyougo' (default) admits on prompt
+        # pages and grows page-by-page in-scan with preempt-and-requeue
+        # on exhaustion; 'worstcase' pins pages_for(max_len) at admission
+        # (the PR-6 semantics — no mid-stream out-of-pages path)
+        if reserve is None:
+            reserve = getattr(cfg, "kv_reserve", "asyougo")
+        if reserve not in ("asyougo", "worstcase"):
+            raise ValueError(
+                f"reserve must be 'asyougo' or 'worstcase', got {reserve!r}")
+        self.reserve = reserve
+        self.rayg = self.spec is not None and reserve == "asyougo"
+        # robustness knobs: engine-wide defaults that per-request fields
+        # override; faults is the trace-time chaos plan (None = no fault
+        # code in the compiled programs at all)
+        self.deadline_ticks = deadline_ticks
+        self.preempt_budget = int(preempt_budget)
+        if self.preempt_budget < 0:
+            raise ValueError(
+                f"preempt_budget must be >= 0, got {preempt_budget}")
+        self.faults = faults
+        if faults is not None and faults.queue_limit is not None:
+            queue_limit = (faults.queue_limit if queue_limit is None
+                           else min(queue_limit, faults.queue_limit))
+        self.queue_limit = queue_limit
         # prompt tokens ingested per prefilling slot per tick (fused path);
         # 1 = legacy token-by-token prefill, the arch default otherwise
         self.prefill_block = int(
@@ -195,14 +314,41 @@ class ServeEngine:
         self._by_rid: Dict[int, Request] = {}
         self._live: set = set()
         self._next_rid = 0
+        # preempted streams awaiting restage (oldest rid first) and the
+        # per-rid resident-tick ledger that carries deadline balances
+        # across preemptions (counted from the event rid rows — no extra
+        # device transfer)
+        self._requeue: Deque[Tuple[int, Request]] = collections.deque()
+        self._resident: Dict[int, int] = {}
+        # per-run outcome tally ({done, truncated, expired, preempted,
+        # numerics, requeued, rejected} -> count), reset by run()
+        self._tally: Dict[str, int] = {}
 
         # sampling happens inside the jitted step: each tick ships a
-        # (slots,) int32 vector to the host instead of (slots, vocab) logits
+        # (slots,) int32 vector to the host instead of (slots, vocab)
+        # logits, plus a per-slot finiteness flag for the numerics guard
+        def postproc(logits, rids, tok_idx):
+            if self.faults is not None and self.faults.nan_logits:
+                hit = FI.nan_hit(self.faults, rids, tok_idx)
+                logits = jnp.where(hit[:, None], jnp.nan, logits)
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
+            return self._pick(logits, rids, tok_idx), finite
+
         def decode(p, t, c, pos, rids, tok_idx):
             logits, c = T.decode_step(cfg, p, t, c, pos, drop_free=True)
-            return self._pick(logits[:, 0], rids, tok_idx), c
+            tok, finite = postproc(logits[:, 0], rids, tok_idx)
+            return tok, finite, c
+
+        # stall-tick forward: generating slots pause (valid=False rows
+        # advance nothing on the block path), prefilling slots keep
+        # feeding — the eager mirror of the fused path's block_tick
+        def decode_masked(p, t, c, pos, valid, rids, tok_idx):
+            logits, c = T.prefill_block(cfg, p, t, c, pos, valid[:, None])
+            tok, finite = postproc(logits[:, 0], rids, tok_idx)
+            return tok, finite, c
 
         self._decode = jax.jit(decode)
+        self._decode_masked = jax.jit(decode_masked)
 
     def _pick(self, logits: jax.Array, rids: jax.Array,
               tok_idx: jax.Array) -> jax.Array:
@@ -266,41 +412,108 @@ class ServeEngine:
                     f"request needs {need} pages but the pool holds only "
                     f"{self.spec.n_pages}: it could never be admitted")
 
-    def submit(self, req: Request) -> None:
+    def backlog_size(self) -> int:
+        """Un-admitted host state: queued + staged + awaiting restage."""
+        return len(self.queue) + len(self._staged) + len(self._requeue)
+
+    def submit(self, req: Request) -> SubmitResult:
+        """Enqueue one request.  Malformed requests still raise
+        (``ValueError`` — a caller bug); a *full* queue is load, not a
+        bug, so with ``queue_limit`` set it returns a typed rejection
+        and marks the request ``outcome='rejected'`` instead of growing
+        unbounded host state."""
         self._validate(req)
+        if (self.queue_limit is not None
+                and self.backlog_size() >= self.queue_limit):
+            req.outcome = "rejected"
+            return SubmitResult(False, "queue_full")
         self.queue.append(req)
+        return SubmitResult(True, "ok")
+
+    # ------------------------------------------------------------------
+    # Shared per-request derivations (both paths, one source of truth)
+    # ------------------------------------------------------------------
+
+    def _deadline(self, req: Request) -> int:
+        d = (self.deadline_ticks if req.deadline_ticks is None
+             else req.deadline_ticks)
+        return _NO_DEADLINE if d is None else int(d)
+
+    def _preempt_left(self, req: Request) -> int:
+        pb = (self.preempt_budget if req.preempt_budget is None
+              else int(req.preempt_budget))
+        return max(pb - req.preempts, 0)
+
+    def _feed(self, req: Request) -> np.ndarray:
+        """The token sequence a (re)admission prefills: the prompt plus
+        any already-generated prefix (empty for fresh requests).  The
+        recompute swap — a resumed stream replays its own history, so
+        positions, cache rows and sample-key token indices all realign
+        with the unpreempted run."""
+        if not req.out:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.out, np.int32)])
+
+    def _admit_pages(self, feed_len: int, budget: int) -> int:
+        """Pages reserved at admission: the prompt's own demand under
+        reserve-as-you-go (growth covers generation), the full KV budget
+        under worstcase."""
+        if self.spec is None:
+            return 0
+        if self.rayg:
+            return int(self.spec.pages_for(feed_len))
+        return int(self.spec.pages_for(budget))
 
     # ------------------------------------------------------------------
     # Eager per-tick path (fused=False): the debugging reference
     # ------------------------------------------------------------------
 
     def _admit(self) -> None:
+        # preempted streams restage ahead of fresh work (they hold the
+        # oldest rids — same order the fused host restage produces)
         mask = np.zeros(self.n_slots, bool)
         need = np.zeros(self.n_slots, np.int32)
         free_pages = None
-        if self.spec is not None and self.queue:
+        if self.spec is not None and (self.queue or self._requeue):
             # debug-path host check (the fused path does this on device)
             free_pages = int(jax.device_get(PG.free_page_count(self.pool)))
         for i, sl in enumerate(self.slots):
-            if sl.req is None and self.queue:
-                budget = self.request_budget(self.queue[0])
-                if self.spec is not None:
-                    want = int(self.spec.pages_for(budget))
-                    if want > free_pages:
-                        # FIFO head-of-line blocking: admission stalls
-                        # until running requests release pages
-                        break
-                    free_pages -= want
-                    need[i] = want
-                sl.req = self.queue.popleft()
-                sl.cursor = 0
+            if sl.req is not None or not (self._requeue or self.queue):
+                continue
+            if self._requeue:
+                rid, req = self._requeue[0]
+                resumed = True
+            else:
+                rid, req = -1, self.queue[0]
+                resumed = False
+            budget = self.request_budget(req)
+            feed = self._feed(req)
+            if self.spec is not None:
+                want = self._admit_pages(len(feed), budget)
+                if want > free_pages:
+                    # FIFO head-of-line blocking: admission stalls
+                    # until running requests release pages
+                    break
+                free_pages -= want
+                need[i] = want
+            if resumed:
+                self._requeue.popleft()
+            else:
+                self.queue.popleft()
                 # admission order matches the fused path's staging order,
                 # so sampling keys (keyed on rid) agree between the paths
-                sl.rid = self._next_rid
+                rid = self._next_rid
                 self._next_rid += 1
-                sl.budget = budget
-                self.pos[i] = 0
-                mask[i] = True
+            sl.req = req
+            sl.cursor = 0
+            sl.rid = rid
+            sl.budget = budget
+            sl.feed = feed
+            sl.pages = int(need[i])
+            sl.tok_base = len(req.out)
+            self.pos[i] = 0
+            mask[i] = True
         if mask.any():
             if self.spec is not None:
                 self.pool = PG.reserve(
@@ -308,8 +521,30 @@ class ServeEngine:
                 self.caches = PG.set_page_table(self.caches, self.pool.table)
             self.caches = T.reset_slot_state(self.caches, mask)
 
+    def _preempt_slot(self, i: int, freed: np.ndarray) -> int:
+        """Evict slot ``i`` mid-stream: release its pages and either
+        requeue (retry budget left) or terminate as ``preempted``.
+        Returns the outcome code for the report tally."""
+        sl = self.slots[i]
+        req = sl.req
+        if self._preempt_left(req) > 0:
+            req.preempts += 1
+            self._requeue.append((sl.rid, req))
+            code = OUTCOME_REQUEUED
+        else:
+            req.outcome = OUTCOME_NAMES[OUTCOME_PREEMPTED]
+            code = OUTCOME_PREEMPTED
+        freed[i] = True
+        self.slots[i] = _Slot()
+        return code
+
     def step(self) -> None:
-        """One tick: every active slot consumes one token (prompt or gen)."""
+        """One tick: active slots consume one token (prompt or gen).
+
+        Mirrors the fused tick body exactly — admission order, page
+        growth, victim policy, stall-tick pausing, outcome precedence —
+        so eager and fused-B1 runs agree tick for tick (the parity tests
+        assert token streams *and* terminal outcomes)."""
         if self._live or self._staged:
             raise RuntimeError(
                 "fused run in flight; cannot interleave eager ticks")
@@ -317,41 +552,143 @@ class ServeEngine:
         live = [i for i, sl in enumerate(self.slots) if sl.req is not None]
         if not live:
             return
+        tally = self._tally
+        # residency ledger: every live slot consumes one resident tick
+        # (including slots paused by a stall and this tick's victims) —
+        # the same rows the fused path counts from the rid events
+        for i in live:
+            rid = self.slots[i].rid
+            self._resident[rid] = self._resident.get(rid, 0) + 1
+        prefilling = {i: self.slots[i].cursor < len(self.slots[i].feed)
+                      for i in live}
+        # -- reserve-as-you-go growth + victim preemption (pre-forward)
+        stalled: List[int] = []
+        victims: List[int] = []
+        if self.rayg:
+            growers = [i for i in live if not prefilling[i]
+                       and self.spec.pages_for(int(self.pos[i]) + 1)
+                       > self.slots[i].pages]
+            if growers:
+                free = int(jax.device_get(PG.free_page_count(self.pool)))
+                if (self.faults is not None and bool(jax.device_get(
+                        FI.exhausted(self.faults, self.ticks)))):
+                    free = 0
+                # grant oldest-first by rid (deterministic, matches the
+                # fused prefix rank)
+                grants = 0
+                for i in sorted(growers, key=lambda i: self.slots[i].rid):
+                    if free > 0:
+                        free -= 1
+                        grants += 1
+                        gmask = np.zeros(self.n_slots, bool)
+                        gmask[i] = True
+                        self.pool = PG.extend(
+                            self.pool, jnp.asarray(gmask.astype(np.int32)),
+                            jnp.asarray(gmask),
+                            jnp.asarray([sl.pages for sl in self.slots],
+                                        np.int32))
+                        self.slots[i].pages += 1
+                    else:
+                        stalled.append(i)
+                if grants:
+                    # re-point the layer table copies *before* the forward:
+                    # a write through a stale row would drop silently and
+                    # later reads would alias page 0
+                    self.caches = PG.set_page_table(
+                        self.caches, self.pool.table)
+        if self.faults is not None and self.faults.force_preempt:
+            for i in live:
+                sl = self.slots[i]
+                if i in victims or sl.req is None:
+                    continue
+                hit = any(sl.rid == r and len(sl.req.out) == k
+                          and sl.tok_base < k
+                          for r, k in self.faults.force_preempt)
+                if hit:
+                    victims.append(i)
+        if stalled:
+            # youngest resident pays for the stall (may be the grower
+            # itself); one preemption per tick frees >= 1 page, so stall
+            # chains resolve in bounded ticks
+            y = max(live, key=lambda i: self.slots[i].rid)
+            if y not in victims:
+                victims.append(y)
+        freed = np.zeros(self.n_slots, bool)
+        if victims:
+            for i in victims:
+                code = self._preempt_slot(i, freed)
+                name = ("requeued" if code == OUTCOME_REQUEUED
+                        else OUTCOME_NAMES[code])
+                tally[name] = tally.get(name, 0) + 1
+            live = [i for i in live if self.slots[i].req is not None]
+            stalled = [i for i in stalled if self.slots[i].req is not None]
+        stall_tick = bool(stalled)
+        if not live:
+            self._finish_tick(freed)
+            return
+        # -- forward: decode everywhere, or the masked block path on a
+        # stall tick (generating slots pause; prefilling slots feed) —
+        # the eager mirror of the fused block_tick at B = 1
         toks = np.zeros((self.n_slots, 1), np.int32)
+        valid = np.zeros(self.n_slots, bool)
         for i in live:
             sl = self.slots[i]
-            if sl.cursor < len(sl.req.prompt):
-                toks[i, 0] = int(sl.req.prompt[sl.cursor])
+            if prefilling[i]:
+                toks[i, 0] = int(sl.feed[sl.cursor])
+                valid[i] = True
             else:
                 toks[i, 0] = sl.req.out[-1]
+                valid[i] = not stall_tick
         rids = np.asarray([sl.rid if sl.req is not None else -1
                            for sl in self.slots], np.int32)
         tok_idx = np.asarray([len(sl.req.out) if sl.req is not None else 0
                               for sl in self.slots], np.int32)
-        next_tok, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches,
-            jnp.asarray(self.pos, jnp.int32),
-            jnp.asarray(rids), jnp.asarray(tok_idx),
-        )
-        next_tok = _telemetry._fetch(next_tok)
-        freed = np.zeros(self.n_slots, bool)
+        if stall_tick:
+            next_tok, finite, self.caches = self._decode_masked(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.pos, jnp.int32), jnp.asarray(valid),
+                jnp.asarray(rids), jnp.asarray(tok_idx))
+        else:
+            next_tok, finite, self.caches = self._decode(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.pos, jnp.int32),
+                jnp.asarray(rids), jnp.asarray(tok_idx))
+        next_tok, finite = _telemetry._fetch((next_tok, finite))
+        # -- advance lifecycle: emit, numerics, done/trunc, deadline
         for i in live:
             sl = self.slots[i]
-            self.pos[i] += 1
-            if sl.cursor < len(sl.req.prompt):
-                sl.cursor += 1
-                if sl.cursor == len(sl.req.prompt):
+            code = OUTCOME_NONE
+            if valid[i]:  # paused slots make no progress but still age
+                self.pos[i] += 1
+                emit = False
+                if prefilling[i]:
+                    sl.cursor += 1
+                    emit = sl.cursor == len(sl.feed)
+                else:
+                    emit = True
+                if emit and not bool(finite[i]):
+                    code = OUTCOME_NUMERICS
+                elif emit:
                     sl.req.out.append(int(next_tok[i]))
-            else:
-                sl.req.out.append(int(next_tok[i]))
-            if len(sl.req.out) >= sl.req.max_new:
-                sl.req.done = True
-            elif self.pos[i] >= sl.budget - 1:
-                sl.req.done = True
-                sl.req.truncated = True
-            if sl.req.done:
+                    if len(sl.req.out) >= sl.req.max_new:
+                        code = OUTCOME_DONE
+                    elif self.pos[i] >= sl.budget - 1:
+                        code = OUTCOME_TRUNCATED
+            if code == OUTCOME_NONE and (
+                    self._resident.get(sl.rid, 0)
+                    >= self._deadline(sl.req)):
+                code = OUTCOME_EXPIRED
+            if code != OUTCOME_NONE:
+                sl.req.outcome = OUTCOME_NAMES[code]
+                if code in (OUTCOME_DONE, OUTCOME_TRUNCATED):
+                    sl.req.done = True
+                    sl.req.truncated = code == OUTCOME_TRUNCATED
+                tally[sl.req.outcome] = tally.get(sl.req.outcome, 0) + 1
                 self.slots[i] = _Slot()
                 freed[i] = True
+        self._finish_tick(freed)
+
+    def _finish_tick(self, freed: np.ndarray) -> None:
         if freed.any():
             if self.spec is not None:
                 # evict pages, not stripes: freed slots return their pages
@@ -378,7 +715,8 @@ class ServeEngine:
         return SlotState(
             prompt=jnp.zeros((self.n_slots, self.max_len), jnp.int32),
             prompt_len=z(), cursor=z(), pos=z(), last_tok=z(), remaining=z(),
-            budget=z(), active=jnp.zeros((self.n_slots,), bool), rid=z() - 1)
+            budget=z(), active=jnp.zeros((self.n_slots,), bool), rid=z() - 1,
+            pages=z(), ttl=z(), tok_base=z(), preempt_left=z())
 
     def scan_compiles(self) -> int:
         """Compiled ``scan_ticks`` programs (one per distinct chunk size)."""
@@ -412,8 +750,17 @@ class ServeEngine:
             B = self.prefill_block
             slots = self.n_slots
             spec = self.spec
+            rayg = self.rayg
+            faults = self.faults
+            # trace-time fault gating: a faultless engine compiles zero
+            # fault code (python conditionals, not lax.cond)
+            force_pre_on = faults is not None and bool(faults.force_preempt)
+            nan_on = faults is not None and bool(faults.nan_logits)
+            exhaust_on = (rayg and faults is not None
+                          and faults.exhaust_ticks is not None)
+            preempt_on = rayg or force_pre_on
 
-            def body(params, carry):
+            def body(params, carry, gt):
                 state, caches, pend, pool = carry
 
                 # -- admit: free slots claim pending entries in FIFO order
@@ -449,6 +796,11 @@ class ServeEngine:
                     budget=sel(pend.budget[src], state.budget),
                     active=state.active | take,
                     rid=sel(pend.rid[src], state.rid),
+                    pages=sel(pend.n_pages[src], state.pages),
+                    ttl=sel(pend.ttl[src], state.ttl),
+                    tok_base=sel(pend.tok_base[src], state.tok_base),
+                    preempt_left=sel(pend.preempt_left[src],
+                                     state.preempt_left),
                 )
                 n_admit = jnp.sum(take.astype(jnp.int32))
                 pend = pend._replace(head=pend.head + n_admit)
@@ -458,13 +810,75 @@ class ServeEngine:
                     caches = PG.set_page_table(caches, pool.table)
                 caches = T.reset_slot_state(caches, take)
 
+                # event-row snapshots: a slot preempted or evicted this
+                # tick still reports under its rid (the host counts these
+                # rows for residency/deadline bookkeeping)
+                rid_row = state.rid
+                active_row = state.active
+
                 prefilling = state.active & (state.cursor < state.prompt_len)
+
+                # -- reserve-as-you-go growth: a generating slot crossing
+                # a page boundary claims its next page; grants go oldest-
+                # first (by rid) while the free-list lasts; the rest stall
+                stalled = jnp.zeros((slots,), bool)
+                if rayg:
+                    grow = (state.active & ~prefilling
+                            & (spec.pages_for(state.pos + 1) > state.pages))
+                    avail = PG.free_page_count(pool)
+                    if exhaust_on:
+                        avail = jnp.where(FI.exhausted(faults, gt), 0, avail)
+                    prio = jnp.where(grow, state.rid, jnp.int32(2**31 - 1))
+                    before = jnp.sum(
+                        (prio[None, :] < prio[:, None]).astype(jnp.int32),
+                        axis=1)
+                    granted = grow & (before < avail)
+                    pool = PG.extend(pool, granted.astype(jnp.int32),
+                                     granted, state.pages)
+                    caches = PG.set_page_table(caches, pool.table)
+                    state = state._replace(
+                        pages=state.pages + granted.astype(jnp.int32))
+                    stalled = grow & ~granted
+
+                # -- preemption: pool exhaustion (or an injected fault)
+                # evicts the youngest resident mid-stream — release pages,
+                # invalidate table rows, free the slot; the host requeues
+                # its prompt + generated prefix for a recompute swap (or
+                # terminates it when the retry budget is spent)
+                pre_final = pre_requeue = jnp.zeros((slots,), bool)
+                if preempt_on:
+                    emitted = (jnp.maximum(state.pos - state.prompt_len, 0)
+                               + state.tok_base)
+                    victims = jnp.zeros((slots,), bool)
+                    if force_pre_on:
+                        victims = state.active & FI.preempt_hit(
+                            faults, state.rid, emitted, state.tok_base)
+                    if rayg:
+                        vrid = jnp.where(state.active, state.rid, -1)
+                        youngest = ((jnp.arange(slots) == jnp.argmax(vrid))
+                                    & state.active)
+                        victims = victims | (jnp.any(stalled) & youngest)
+                    pre_final = victims & (state.preempt_left <= 0)
+                    pre_requeue = victims & ~pre_final
+                    if spec is not None:
+                        pool = PG.release(pool, victims)
+                        caches = PG.set_page_table(caches, pool.table)
+                    state = state._replace(
+                        active=state.active & ~victims,
+                        rid=jnp.where(victims, -1, state.rid),
+                        pages=jnp.where(victims, 0, state.pages))
+                    prefilling = prefilling & state.active
+                    stalled = stalled & state.active
+                any_stall = jnp.any(stalled)
 
                 # -- forward: one token per slot, or a prompt block while
                 # any slot is still prefilling.  Generating slots pause
                 # during block ticks, so every generated token comes from
                 # the exact single-token decode program regardless of B —
-                # the bit-parity contract between block sizes.
+                # the bit-parity contract between block sizes.  A stall
+                # (out-of-pages) tick also routes through the block path:
+                # all-False valid rows pause the page-starved slots without
+                # advancing their cache state.
                 def decode_tick(caches):
                     ptok = jnp.take_along_axis(
                         state.prompt,
@@ -498,7 +912,11 @@ class ServeEngine:
 
                 if B > 1:
                     caches, logits, n_tok = lax.cond(
-                        jnp.any(prefilling), block_tick, decode_tick, caches)
+                        jnp.any(prefilling) | any_stall,
+                        block_tick, decode_tick, caches)
+                elif rayg:
+                    caches, logits, n_tok = lax.cond(
+                        any_stall, block_tick, decode_tick, caches)
                 else:
                     caches, logits, n_tok = decode_tick(caches)
 
@@ -509,37 +927,65 @@ class ServeEngine:
                     ~prefilling | (cursor >= state.prompt_len))
                 pos = state.pos + n_tok
                 # each slot's next emit is token (pos - prompt_len) of its
-                # request: the schedule-free coordinates the sampler keys on
-                next_tok = self._pick(
-                    logits, state.rid,
-                    jnp.maximum(pos - state.prompt_len, 0))
-                remaining = state.remaining - emit.astype(jnp.int32)
-                done = state.active & (
+                # request plus the resumed prefix: the schedule-free
+                # coordinates the sampler keys (and fault injection) use
+                tok_idx = (jnp.maximum(pos - state.prompt_len, 0)
+                           + state.tok_base)
+                if nan_on:
+                    hit = FI.nan_hit(faults, state.rid, tok_idx)
+                    logits = jnp.where(hit[:, None], jnp.nan, logits)
+                # numerics guard: a non-finite row on an emitting slot
+                # suppresses the emit and terminates the stream instead of
+                # sampling garbage into its feedback token
+                finite = jnp.all(jnp.isfinite(logits), axis=-1)
+                bad = emit & ~finite
+                good_emit = emit & finite
+                next_tok = self._pick(logits, state.rid, tok_idx)
+                remaining = state.remaining - good_emit.astype(jnp.int32)
+                done = state.active & ~bad & (
                     (remaining <= 0) | (pos >= state.budget - 1))
                 trunc = done & (remaining > 0)  # evicted with budget unmet
-                ys = (state.rid, jnp.where(emit, next_tok, -1), done, trunc,
-                      jnp.any(state.active), n_admit)
+                # deadline: ttl counts resident ticks (pre-preemption
+                # occupancy included — the host ledger counts the same
+                # event rows), and expiry only fires on streams that have
+                # no other terminal outcome this tick
+                ttl = state.ttl - active_row.astype(jnp.int32)
+                expired = state.active & ~bad & ~done & (ttl <= 0)
+                term = done | bad | expired
+                outcome = jnp.zeros((slots,), jnp.int32)
+                outcome = jnp.where(done, OUTCOME_DONE, outcome)
+                outcome = jnp.where(trunc, OUTCOME_TRUNCATED, outcome)
+                outcome = jnp.where(expired, OUTCOME_EXPIRED, outcome)
+                outcome = jnp.where(bad, OUTCOME_NUMERICS, outcome)
+                if preempt_on:
+                    outcome = jnp.where(
+                        pre_requeue, OUTCOME_REQUEUED, outcome)
+                    outcome = jnp.where(
+                        pre_final, OUTCOME_PREEMPTED, outcome)
+                ys = (rid_row, jnp.where(good_emit, next_tok, -1), outcome,
+                      jnp.any(active_row), n_admit)
                 state = state._replace(
                     cursor=cursor, pos=pos,
-                    last_tok=jnp.where(emit, next_tok, state.last_tok),
-                    remaining=remaining,
-                    active=state.active & ~done,
-                    rid=jnp.where(done, -1, state.rid))
+                    last_tok=jnp.where(good_emit, next_tok, state.last_tok),
+                    remaining=remaining, ttl=ttl,
+                    active=state.active & ~term,
+                    rid=jnp.where(term, -1, state.rid),
+                    pages=jnp.where(term, 0, state.pages))
                 if spec is not None:
                     # evict pages, not stripes: finished slots release
                     # their pages and their table rows go unmapped, so a
                     # paused slot's stale-length write can never land in a
                     # page re-allocated next tick
-                    pool = PG.release(pool, done)
+                    pool = PG.release(pool, term)
                     caches = PG.set_page_table(caches, pool.table)
                 return (state, caches, pend, pool), ys
 
-            def run(params, state, caches, pend, pool, budget, backlog):
+            def run(params, state, caches, pend, pool, budget, backlog,
+                    tick0):
                 ys0 = (
                     jnp.full((chunk, slots), -1, jnp.int32),   # rid
                     jnp.full((chunk, slots), -1, jnp.int32),   # token
-                    jnp.zeros((chunk, slots), bool),           # done
-                    jnp.zeros((chunk, slots), bool),           # truncated
+                    jnp.zeros((chunk, slots), jnp.int32),      # outcome
                     jnp.zeros((chunk,), bool),                 # any active
                     jnp.zeros((chunk,), jnp.int32),            # admitted
                 )
@@ -555,7 +1001,7 @@ class ServeEngine:
                 def body_fn(c):
                     t, state, caches, pend, pool, ys = c
                     (state, caches, pend, pool), row = body(
-                        params, (state, caches, pend, pool))
+                        params, (state, caches, pend, pool), tick0 + t)
                     ys = jax.tree_util.tree_map(
                         lambda buf, r: lax.dynamic_update_index_in_dim(
                             buf, r.astype(buf.dtype), t, 0), ys, row)
@@ -582,19 +1028,32 @@ class ServeEngine:
         budget = np.zeros((P,), np.int32)
         n_pages = np.zeros((P,), np.int32)
         rid = np.full((P,), -1, np.int32)
+        ttl = np.zeros((P,), np.int32)
+        tok_base = np.zeros((P,), np.int32)
+        preempt_left = np.zeros((P,), np.int32)
         for j, (r, req) in enumerate(self._staged):
-            n = len(req.prompt)
-            prompt[j, :n] = np.asarray(req.prompt, np.int32)
+            # a restaged (preempted) entry re-prefills its full history —
+            # prompt plus generated prefix — and owes only the remaining
+            # emits; a fresh entry is the degenerate case of that
+            feed = self._feed(req)
+            n = len(feed)
+            prompt[j, :n] = feed
             length[j] = n
-            max_new[j] = req.max_new
+            max_new[j] = req.max_new - len(req.out)
             budget[j] = self.request_budget(req)
-            if self.spec is not None:
-                n_pages[j] = self.spec.pages_for(budget[j])
+            n_pages[j] = self._admit_pages(n, int(budget[j]))
             rid[j] = r
+            # the deadline balance survives preemption: remaining ttl =
+            # deadline minus resident ticks already consumed under this rid
+            ttl[j] = min(self._deadline(req) - self._resident.get(r, 0),
+                         _NO_DEADLINE)
+            tok_base[j] = len(req.out)
+            preempt_left[j] = self._preempt_left(req)
         self._pending_cache = PendingBuffer(
             jnp.asarray(prompt), jnp.asarray(length), jnp.asarray(max_new),
             jnp.asarray(budget), jnp.asarray(n_pages),
-            jnp.asarray(rid), jnp.zeros((), jnp.int32),
+            jnp.asarray(rid), jnp.asarray(ttl), jnp.asarray(tok_base),
+            jnp.asarray(preempt_left), jnp.zeros((), jnp.int32),
             jnp.asarray(np.int32(len(self._staged))))
         self._pending_dirty = False
         return self._pending_cache
@@ -610,9 +1069,16 @@ class ServeEngine:
             self._state = self._init_state()
         used = chunks = dispatched = peak = 0
         syncs0 = _telemetry.host_sync_count()
-        while (self.queue or self._staged or self._live) and used < max_ticks:
-            # refill the host staging mirror; it becomes the device pending
-            # buffer for this chunk (host -> device, never a blocking sync)
+        while ((self.queue or self._staged or self._live or self._requeue)
+               and used < max_ticks):
+            # restage preempted streams at the head of the staging mirror,
+            # in preemption order (overflow waits for the next chunk),
+            # then refill with fresh work;
+            # the mirror becomes the device pending buffer for this chunk
+            # (host -> device, never a blocking sync)
+            while self._requeue and len(self._staged) < self.pending_size:
+                self._staged.appendleft(self._requeue.pop())
+                self._pending_dirty = True
             while self.queue and len(self._staged) < self.pending_size:
                 req = self.queue.popleft()
                 rid = self._next_rid
@@ -625,14 +1091,14 @@ class ServeEngine:
             # free, so the freed slot refills here instead of idling out the
             # chunk.  budget is a traced scalar: tail chunks near max_ticks
             # reuse the one compiled program per chunk size.
-            backlog = bool(self.queue)
+            backlog = bool(self.queue or self._requeue)
             budget = min(chunk, max_ticks - used)
             run = self.scan_ticks(chunk)
             self._state, self.caches, _, self.pool, ys, t_exec = run(
                 self.params, self._state, self.caches, self._make_pending(),
-                self.pool, budget, backlog)
+                self.pool, budget, backlog, np.int32(self.ticks))
             # the single blocking transfer of the chunk: per-tick events
-            (rids, toks, dones, truncs, act, n_admit), t_exec = (
+            (rids, toks, outs, act, n_admit), t_exec = (
                 _telemetry._fetch((ys, t_exec)))
             consumed = int(n_admit.sum())
             for _ in range(consumed):
@@ -640,18 +1106,42 @@ class ServeEngine:
                 self._live.add(rid)
             if consumed:
                 self._pending_dirty = True
+            # residency ledger for deadlines: each rid event row is one
+            # resident tick (preemption/eviction ticks included) — counted
+            # from the already-fetched arrays, no extra transfer
+            res_rids, res_counts = np.unique(rids[rids >= 0],
+                                             return_counts=True)
+            for r, c in zip(res_rids, res_counts):
+                r = int(r)
+                self._resident[r] = self._resident.get(r, 0) + int(c)
             # drain O(emitted + finished) event cells, not chunk x slots:
             # np.nonzero walks ticks row-major, so per-request appends stay
-            # in generation order (done cells coincide with their last emit,
-            # hence the second pass)
+            # in generation order (terminal cells coincide with their last
+            # emit, hence the second pass)
             for t, i in zip(*np.nonzero(toks >= 0)):
                 self._by_rid[int(rids[t, i])].out.append(int(toks[t, i]))
-            for t, i in zip(*np.nonzero(dones)):
+            for t, i in zip(*np.nonzero(outs > 0)):
                 rid = int(rids[t, i])
+                code = int(outs[t, i])
+                if code == OUTCOME_REQUEUED:
+                    # preempted with retry budget: back to the host for
+                    # restage at the top of the next chunk
+                    req = self._by_rid[rid]
+                    req.preempts += 1
+                    self._live.discard(rid)
+                    self._requeue.append((rid, req))
+                    self._tally["requeued"] = (
+                        self._tally.get("requeued", 0) + 1)
+                    continue
                 req = self._by_rid.pop(rid)
-                req.done = True
-                req.truncated = bool(truncs[t, i])
+                req.outcome = OUTCOME_NAMES[code]
+                if code in (OUTCOME_DONE, OUTCOME_TRUNCATED):
+                    req.done = True
+                    req.truncated = code == OUTCOME_TRUNCATED
+                self._tally[req.outcome] = (
+                    self._tally.get(req.outcome, 0) + 1)
                 self._live.discard(rid)
+                self._resident.pop(rid, None)
             ticks_used = int(act.sum())
             used += ticks_used
             self.ticks += ticks_used
@@ -672,6 +1162,7 @@ class ServeEngine:
             # remainders
             "ticks_dispatched": dispatched,
             "peak_resident": peak,
+            "outcomes": dict(self._tally),
             "memory": self.memory_report(),
         }
 
@@ -682,17 +1173,21 @@ class ServeEngine:
     def memory_report(self) -> Dict[str, Any]:
         """KV-cache memory accounting, sync-free.
 
-        Residency and page occupancy come from host bookkeeping (the
-        reserve/release ledger is deterministic: a resident request holds
-        exactly ``pages_for(budget)`` pages), so this never blocks on the
-        device — safe to read every ``run()`` without touching the
-        one-sync-per-chunk contract.
+        Residency and page occupancy come from host bookkeeping, so this
+        never blocks on the device — safe to read every ``run()`` without
+        touching the one-sync-per-chunk contract.  Under ``worstcase``
+        the ledger is exact (a resident request holds
+        ``pages_for(budget)`` pages); under ``asyougo`` fused residents
+        are estimated from their drained history
+        (``pages_for(len(prompt) + len(out))``) — accurate at chunk
+        boundaries to within one page per stream (the page a stream
+        claims on its next boundary crossing).
         """
         total, arena = PG.cache_bytes(self.caches)
-        budgets = [sl.budget for sl in self.slots if sl.req is not None]
-        budgets += [self.request_budget(self._by_rid[r])
-                    for r in self._live if r in self._by_rid]
-        resident = len(budgets)
+        eager_live = [sl for sl in self.slots if sl.req is not None]
+        fused_live = [self._by_rid[r] for r in self._live
+                      if r in self._by_rid]
+        resident = len(eager_live) + len(fused_live)
         rep: Dict[str, Any] = {
             "kv_paging": self.spec is not None,
             "kv_cache_bytes": int(total),
@@ -704,7 +1199,16 @@ class ServeEngine:
             rep["kv_bytes_per_stream"] = int(total) // self.n_slots
             return rep
         spec = self.spec
-        in_use = sum(int(spec.pages_for(b)) for b in budgets)
+        if self.rayg:
+            in_use = sum(sl.pages for sl in eager_live)
+            in_use += sum(
+                int(spec.pages_for(len(r.prompt) + len(r.out)))
+                for r in fused_live)
+        else:
+            in_use = sum(int(spec.pages_for(sl.budget))
+                         for sl in eager_live)
+            in_use += sum(int(spec.pages_for(self.request_budget(r)))
+                          for r in fused_live)
         page_bytes = int(arena) // spec.n_pages  # all layers, one page
         rep.update({
             "kv_int8": spec.int8,
@@ -737,13 +1241,24 @@ class ServeEngine:
         """
         for r in requests:  # validate the whole batch before enqueuing any:
             self._validate(r)  # a mid-batch reject must not leave a partial
-        self.queue.extend(requests)  # batch queued for a later run()
+        self._tally = {}
+        for r in requests:
+            # admission backpressure: overflow beyond queue_limit is shed
+            # with a typed terminal outcome, never silently dropped and
+            # never an unbounded host queue
+            if (self.queue_limit is not None
+                    and self.backlog_size() >= self.queue_limit):
+                r.outcome = "rejected"
+                self._tally["rejected"] = self._tally.get("rejected", 0) + 1
+            else:
+                self.queue.append(r)
         if self.fused:
             self._run_fused(max_ticks, chunk)
         else:
             used = peak = 0
             syncs0 = _telemetry.host_sync_count()
-            while ((self.queue or any(sl.req for sl in self.slots))
+            while ((self.queue or self._requeue
+                    or any(sl.req for sl in self.slots))
                    and used < max_ticks):
                 self.step()
                 peak = max(peak, sum(
@@ -753,6 +1268,7 @@ class ServeEngine:
                 "ticks": used, "chunks": used,
                 "host_syncs": _telemetry.host_sync_count() - syncs0,
                 "peak_resident": peak,
+                "outcomes": dict(self._tally),
                 "memory": self.memory_report(),
             }
         return requests

@@ -1,0 +1,149 @@
+"""Deterministic fault injection for the serving engine and adapt loop.
+
+Chaos testing a device-resident engine is hard precisely because the hot
+path is one compiled program: you cannot monkeypatch tick 37.  This
+module injects faults *in-graph* from a static :class:`FaultConfig`, so
+the same compiled ``scan_ticks`` program deterministically reproduces a
+failure on both the fused and eager paths:
+
+- **NaN logits** at (request id, token index) pairs — schedule-invariant
+  coordinates (the same ones the sampler keys on), so the fault lands on
+  the same emitted token regardless of batch neighbours, chunk size or
+  prefill block.  Exercises the ``numerics`` terminal outcome.
+- **Forced preemption** of request ``rid`` once it has emitted ``k``
+  tokens (``k >= 1``) — exercises the preempt/release/requeue/resume
+  path without needing a genuinely exhausted pool.  The trigger fires at
+  most once per (rid, k): a resumed stream carries ``tok_base == k``, and
+  the predicate requires ``tok_base < k``.
+- **Forced page exhaustion** over a global engine-tick window — the
+  reserve-as-you-go grant reads zero free pages, so every growing stream
+  stalls and the victim policy engages.  Models a saturated pool without
+  having to craft an oversubscribed workload.
+- **Pending-buffer overflow** — a host-side queue-limit override that
+  forces ``submit()`` rejections (admission backpressure) under test.
+
+The injector is zero-cost when disabled: ``ServeEngine(faults=None)``
+traces no fault code at all (python-level gating, not ``lax.cond``).
+
+The adapt-side hook (`nan_loss_steps`) is threaded through
+``core.sparse.scan_train_loop`` / the eager step builders behind the same
+debug flag and forces a non-finite loss at chosen step indices, to
+exercise the skip-and-count non-finite guard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static, trace-time fault plan.  All coordinates are deterministic:
+    engine request ids are assigned in submission order starting at the
+    engine's ``_next_rid`` (0 for a fresh engine), token indices are the
+    per-request emitted-token index (the sampler-key coordinate)."""
+
+    # (rid, token_index): replace that emitted token's logits with NaN
+    nan_logits: Tuple[Tuple[int, int], ...] = ()
+    # (rid, emitted_count >= 1): force-preempt rid once it has emitted
+    # exactly that many tokens (fires once; resumed streams carry
+    # tok_base == count and are exempt)
+    force_preempt: Tuple[Tuple[int, int], ...] = ()
+    # [t0, t1) global engine-tick window: page grants read 0 free pages
+    exhaust_ticks: Optional[Tuple[int, int]] = None
+    # host-side admission bound override (forces queue-full rejections)
+    queue_limit: Optional[int] = None
+    # adapt-loop hook: step indices whose loss is forced to NaN
+    nan_loss_steps: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        for r, k in self.force_preempt:
+            if k < 1:
+                raise ValueError(
+                    f"force_preempt needs emitted_count >= 1, got "
+                    f"({r}, {k}): a stream that has emitted nothing has "
+                    "tok_base == 0 and the once-only predicate "
+                    "(tok_base < count) could never arm")
+        if self.exhaust_ticks is not None:
+            t0, t1 = self.exhaust_ticks
+            if t1 <= t0:
+                raise ValueError(
+                    f"exhaust_ticks window must be non-empty, got "
+                    f"[{t0}, {t1})")
+
+    @property
+    def any_serving(self) -> bool:
+        return bool(self.nan_logits or self.force_preempt
+                    or self.exhaust_ticks is not None
+                    or self.queue_limit is not None)
+
+
+def nan_hit(faults: FaultConfig, rid, tok_idx):
+    """(slots,) bool: this slot's emitted token is a NaN-injection target.
+
+    ``rid`` / ``tok_idx`` are traced int32 arrays; the target pairs are
+    python constants baked into the trace.
+    """
+    hit = jnp.zeros(rid.shape, bool)
+    for r, k in faults.nan_logits:
+        hit = hit | ((rid == r) & (tok_idx == k))
+    return hit
+
+
+def preempt_hit(faults: FaultConfig, rid, emitted, tok_base):
+    """(slots,) bool: force-preempt this slot now.
+
+    ``emitted`` is the per-slot count of tokens emitted so far (the next
+    token's index); the ``tok_base < k`` clause makes each (rid, k)
+    trigger one-shot — a stream resumed after this very preemption
+    re-enters generation with ``tok_base == k`` and sails past.
+    """
+    hit = jnp.zeros(rid.shape, bool)
+    for r, k in faults.force_preempt:
+        hit = hit | ((rid == r) & (emitted == k) & (tok_base < k))
+    return hit
+
+
+def exhausted(faults: FaultConfig, gtick):
+    """() bool: the global tick falls in the forced-exhaustion window."""
+    if faults.exhaust_ticks is None:
+        return jnp.zeros((), bool)
+    t0, t1 = faults.exhaust_ticks
+    return (gtick >= t0) & (gtick < t1)
+
+
+def parse_inject(spec: str) -> FaultConfig:
+    """Parse a CLI fault spec into a :class:`FaultConfig`.
+
+    Comma-separated entries::
+
+        nan:RID:TOK       NaN logits for request RID at token index TOK
+        pre:RID:COUNT     force-preempt RID after COUNT emitted tokens
+        exhaust:T0:T1     zero free pages during engine ticks [T0, T1)
+        qlimit:N          cap the host admission queue at N requests
+
+    e.g. ``--inject pre:0:3,nan:2:5,exhaust:10:20``.
+    """
+    nan: list = []
+    pre: list = []
+    exhaust = None
+    qlimit = None
+    for entry in filter(None, (e.strip() for e in spec.split(","))):
+        parts = entry.split(":")
+        kind, args = parts[0], [int(p) for p in parts[1:]]
+        if kind == "nan" and len(args) == 2:
+            nan.append(tuple(args))
+        elif kind == "pre" and len(args) == 2:
+            pre.append(tuple(args))
+        elif kind == "exhaust" and len(args) == 2:
+            exhaust = tuple(args)
+        elif kind == "qlimit" and len(args) == 1:
+            qlimit = args[0]
+        else:
+            raise ValueError(
+                f"bad fault spec entry {entry!r}; see "
+                "repro.serving.faults.parse_inject for the grammar")
+    return FaultConfig(nan_logits=tuple(nan), force_preempt=tuple(pre),
+                       exhaust_ticks=exhaust, queue_limit=qlimit)

@@ -23,11 +23,16 @@ from a device-resident free-list, vLLM-style:
   single-token writes exact: a page never needs requantising when a new
   row's absmax exceeds the old page maximum.
 
-Requests **reserve their worst-case page count at admission** (per-request
-``max_len`` rounded up to pages) and release all of it at eviction.  That
-keeps allocation a single fixed-shape step per tick — no mid-stream growth
-or copy-on-append — while still letting short requests coexist with long
-ones under one fixed page budget.
+Two reservation disciplines share the allocator.  Under
+``reserve='worstcase'`` a request pins ``ceil(max_len / page_size)`` pages
+at admission and releases them at eviction — allocation is a single
+fixed-shape :func:`reserve` per tick, no mid-stream growth.  Under the
+default ``reserve='asyougo'`` admission reserves only the pages the
+*prompt* needs and a generating stream grows page-by-page in-scan via
+:func:`extend` when its position crosses a page boundary; on pool
+exhaustion the engine preempts a victim stream (youngest first),
+:func:`release`-ing its pages and requeueing it for a recompute swap —
+vLLM-style packing at the cost of a mid-stream out-of-pages path.
 
 Reads materialise the logical contiguous ``(B, cap, *feat)`` view by
 gathering pages through the table (the jnp fallback); on TPU the Pallas
@@ -155,6 +160,43 @@ def reserve(pool: PagePool, need: jax.Array, mask: jax.Array) -> PagePool:
     page = rank_to_page[jnp.clip(target_rank, 0, n_pages - 1)]
     new_rows = jnp.where(want, page, -1)
     table = jnp.where(mask[:, None], new_rows, pool.table)
+    taken = jnp.zeros((n_pages,), bool).at[
+        jnp.where(want, page, n_pages)
+    ].set(True, mode="drop")
+    return PagePool(table, pool.free & ~taken)
+
+
+def extend(pool: PagePool, need: jax.Array, mask: jax.Array,
+           held: jax.Array) -> PagePool:
+    """Append ``need[s]`` pages to each masked slot, preserving its rows.
+
+    The reserve-as-you-go growth primitive: where :func:`reserve`
+    overwrites a slot's whole table row (admission-time reset), ``extend``
+    fills only entries ``held[s] .. held[s]+need[s]-1`` — the pages a
+    running stream acquires when its cursor crosses a page boundary —
+    and leaves the already-mapped prefix untouched.  Free pages are
+    handed out by the same cumsum-rank inversion as :func:`reserve`.
+
+    Contract: the caller guarantees the masked demand fits the free-list
+    and ``held + need <= max_pages`` (positions never exceed the
+    per-request budget, which :meth:`PagingSpec.build` sizes the table
+    for).  Fixed-shape and traceable inside ``lax.while_loop``.
+    """
+    n_pages = pool.free.shape[0]
+    mp = pool.table.shape[1]
+    need = jnp.where(mask, need, 0).astype(jnp.int32)
+    held = held.astype(jnp.int32)
+    offs = jnp.cumsum(need) - need  # exclusive prefix per slot
+    j = jnp.arange(mp, dtype=jnp.int32)[None, :]
+    want = mask[:, None] & (j >= held[:, None]) & (
+        j < (held + need)[:, None])
+    target_rank = offs[:, None] + (j - held[:, None])
+    rank = jnp.cumsum(pool.free.astype(jnp.int32)) - 1
+    rank_to_page = jnp.full((n_pages,), -1, jnp.int32).at[
+        jnp.where(pool.free, rank, n_pages)
+    ].set(jnp.arange(n_pages, dtype=jnp.int32), mode="drop")
+    page = rank_to_page[jnp.clip(target_rank, 0, n_pages - 1)]
+    table = jnp.where(want, page, pool.table)
     taken = jnp.zeros((n_pages,), bool).at[
         jnp.where(want, page, n_pages)
     ].set(True, mode="drop")

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 
 
 @pytest.fixture
@@ -53,8 +53,51 @@ class TestCheckpoint:
         mgr = CheckpointManager(tmpdir)
         mgr.save(1, _tree())
         bad = {"a": jnp.zeros((4, 8))}  # missing leaf
-        with pytest.raises(AssertionError):
+        with pytest.raises(CheckpointError):
             mgr.restore(1, bad)
+
+    def test_shape_mismatch_rejected(self, tmpdir):
+        mgr = CheckpointManager(tmpdir)
+        mgr.save(1, _tree())
+        bad = {"a": jnp.zeros((4, 9)),
+               "b": {"c": jnp.zeros((6,), jnp.int32)}}
+        with pytest.raises(CheckpointError, match="shape"):
+            mgr.restore(1, bad)
+
+    def test_dtype_mismatch_rejected(self, tmpdir):
+        """Restoring into a differently-typed target must not silently
+        cast — a float32 checkpoint is not an int32 training state."""
+        mgr = CheckpointManager(tmpdir)
+        mgr.save(1, _tree())
+        bad = {"a": jnp.zeros((4, 8)),
+               "b": {"c": jnp.zeros((6,), jnp.float32)}}  # saved as int32
+        with pytest.raises(CheckpointError, match="dtype"):
+            mgr.restore(1, bad)
+
+    def test_corrupt_npz_rejected(self, tmpdir):
+        """A truncated/overwritten arrays.npz raises CheckpointError, not
+        a zipfile traceback or silent garbage."""
+        mgr = CheckpointManager(tmpdir)
+        mgr.save(1, _tree())
+        with open(os.path.join(tmpdir, "step_1", "arrays.npz"), "wb") as f:
+            f.write(b"not a zip archive")
+        with pytest.raises(CheckpointError):
+            mgr.restore(1, jax.eval_shape(lambda: _tree()))
+
+    def test_meta_array_disagreement_rejected(self, tmpdir):
+        """tree.json is the integrity record: an arrays.npz swapped in
+        from another run (leaf shapes/dtypes disagree with the metadata)
+        is refused even when it happens to match the restore target."""
+        mgr = CheckpointManager(tmpdir)
+        mgr.save(1, _tree())
+        meta_path = os.path.join(tmpdir, "step_1", "tree.json")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        meta["shapes"]["leaf_0"] = [2, 16]  # claim a different saved shape
+        with open(meta_path, "w") as f:
+            json.dump(meta, f)
+        with pytest.raises(CheckpointError, match="tree.json"):
+            mgr.restore(1, jax.eval_shape(lambda: _tree()))
 
     def test_tmp_dir_not_published(self, tmpdir):
         """A stale .tmp dir (crash mid-save) must not be listed as a step."""

@@ -108,6 +108,83 @@ def test_pool_free_list_invariants(seed):
     assert int(PG.free_page_count(pool)) == n_pages  # full drain: no leak
 
 
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_pool_invariants_with_asyougo_growth(seed):
+    """The reserve-as-you-go cycle: random admit (prompt pages) / extend
+    (growth) / release (preempt) schedules keep the same ledger invariants
+    — no double-allocation, no leak, grown rows are contiguous prefixes,
+    released rows invalidated — and the pool drains clean."""
+    rng = np.random.default_rng(seed)
+    slots = int(rng.integers(1, 6))
+    max_pages = int(rng.integers(2, 6))
+    n_pages = int(rng.integers(max_pages, slots * max_pages + 3))
+    spec = PG.PagingSpec(page_size=int(rng.integers(1, 9)),
+                         n_pages=n_pages, max_pages=max_pages)
+    pool = PG.make_pool(spec, slots)
+    held = {}  # slot -> page count currently mapped
+
+    for _ in range(40):
+        free_now = int(PG.free_page_count(pool))
+        idle = [s for s in range(slots) if s not in held]
+        growable = [s for s in held if held[s] < max_pages]
+        op = rng.random()
+        if idle and (op < 0.4 or not held):
+            # admission: reserve only the prompt's pages
+            s = int(rng.choice(idle))
+            need = int(rng.integers(1, max_pages + 1))
+            if need > free_now:
+                continue
+            mask = np.zeros(slots, bool)
+            mask[s] = True
+            nd = np.zeros(slots, np.int32)
+            nd[s] = need
+            pool = PG.reserve(pool, jnp.asarray(nd), jnp.asarray(mask))
+            held[s] = need
+        elif growable and op < 0.75:
+            # in-scan growth: possibly several slots cross a boundary in
+            # the same tick (the fused path extends them in one call)
+            grow = [s for s in growable
+                    if rng.random() < 0.7][:max(free_now, 0)]
+            if not grow:
+                continue
+            mask = np.zeros(slots, bool)
+            nd = np.zeros(slots, np.int32)
+            hd = np.zeros(slots, np.int32)
+            for s in range(slots):
+                hd[s] = held.get(s, 0)
+            for s in grow:
+                mask[s] = True
+                nd[s] = 1
+            pool = PG.extend(pool, jnp.asarray(nd), jnp.asarray(mask),
+                             jnp.asarray(hd))
+            for s in grow:
+                held[s] += 1
+        elif held:
+            # preemption: victim releases everything it holds
+            s = int(rng.choice(sorted(held)))
+            mask = np.zeros(slots, bool)
+            mask[s] = True
+            pool = PG.release(pool, jnp.asarray(mask))
+            del held[s]
+
+        table = np.asarray(pool.table)
+        free = np.asarray(pool.free)
+        owned = table[table >= 0]
+        assert len(owned) == len(set(owned.tolist()))  # no double-alloc
+        assert not free[owned].any()
+        assert len(owned) == sum(held.values())  # ledger balances: no leak
+        assert int(PG.pages_in_use(pool)) == sum(held.values())
+        for s in range(slots):
+            row = table[s]
+            h = held.get(s, 0)
+            # mapped pages form a contiguous row prefix even after growth
+            assert (row[:h] >= 0).all() and (row[h:] == -1).all()
+
+    pool = PG.release(pool, jnp.ones((slots,), bool))
+    assert int(PG.free_page_count(pool)) == n_pages
+
+
 # ---------------------------------------------------------------------------
 # fp-page parity with the contiguous cache (the serving matrix)
 # ---------------------------------------------------------------------------
@@ -338,10 +415,12 @@ def test_per_request_max_len_evicts_early(fused):
 
 
 def test_tight_page_budget_blocks_admission_until_pages_free():
-    """With pages for only one worst-case request, concurrent slots cannot
-    all be resident: admission stalls head-of-line until eviction releases
-    pages, every request still completes, and streams match the roomy
-    engine."""
+    """Worstcase reservation: with pages for only one worst-case request,
+    concurrent slots cannot all be resident — admission stalls head-of-line
+    until eviction releases pages, every request still completes, and
+    streams match the roomy engine.  (Pinned to ``reserve='worstcase'``:
+    the reserve-as-you-go default admits on prompt pages and packs more
+    streams under the same budget — covered by the pressure tests.)"""
     cfg = tiny_cfg()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -356,6 +435,7 @@ def test_tight_page_budget_blocks_admission_until_pages_free():
     for fused in (False, True):
         got, eng = _streams(cfg, params, mk, dict(fused=fused), max_len=16,
                             kv_paging=True, kv_page_size=4,
+                            reserve="worstcase",
                             page_budget=4)  # one 16-token request's worth
         assert got == ref
         assert eng.last_run_report["peak_resident"] == 1
@@ -367,7 +447,8 @@ def test_tight_page_budget_blocks_admission_until_pages_free():
                 for i, p in enumerate(prompts)]
 
     got, eng = _streams(cfg, params, mk_short, dict(fused=True), max_len=16,
-                        kv_paging=True, kv_page_size=4, page_budget=4)
+                        kv_paging=True, kv_page_size=4, page_budget=4,
+                        reserve="worstcase")
     assert eng.last_run_report["peak_resident"] == 2
     assert [o for o, _ in got] == [o for o, _ in ref]  # none truncated sooner
 
@@ -493,8 +574,10 @@ def test_memory_report_accounting():
     assert 0.0 <= rep["page_utilisation"] <= 1.0
     assert eng.last_run_report["peak_resident"] >= 2
     # mid-flight occupancy: admit without draining via the eager path
+    # (worstcase pins the full budget at admission, so the ledger is
+    # exact; the as-you-go default would hold only the prompt's page)
     eager = ServeEngine(cfg, params, slots=4, max_len=32, fused=False,
-                        kv_paging=True, kv_page_size=8)
+                        kv_paging=True, kv_page_size=8, reserve="worstcase")
     eager.submit(Request(uid=9, prompt=np.zeros(4, np.int32), max_new=50,
                          max_len=16))
     eager.step()
@@ -502,3 +585,12 @@ def test_memory_report_accounting():
     assert rep["resident_streams"] == 1
     assert rep["pages_in_use"] == 2  # ceil(16 / 8)
     assert rep["kv_bytes_per_stream"] == 2 * rep["page_bytes"]
+    # as-you-go: the same admission holds only ceil(prompt / page) pages
+    rayg = ServeEngine(cfg, params, slots=4, max_len=32, fused=False,
+                       kv_paging=True, kv_page_size=8)
+    rayg.submit(Request(uid=9, prompt=np.zeros(4, np.int32), max_new=50,
+                        max_len=16))
+    rayg.step()
+    rep = rayg.memory_report()
+    assert rep["resident_streams"] == 1
+    assert rep["pages_in_use"] == 1  # ceil(4 / 8)

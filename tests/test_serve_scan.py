@@ -348,3 +348,40 @@ def test_eager_admits_immediately_after_eviction():
     # the tick that evicted r1 must already have admitted r2 into the slot
     assert eng.slots[0].req is r2
     assert not eng.queue
+
+
+def test_outcome_parity_eager_vs_fused_under_faults():
+    """Extends the parity matrix to terminal *outcomes*: with
+    token-by-token prefill the eager loop and the fused scan agree tick
+    for tick on residency, so deadlines, forced preemption, NaN logits
+    and page pressure must yield identical (outcome, stream, preempts)
+    triples.  (Block prefill spends fewer resident ticks, so deadline
+    parity is only defined at prefill_block=1.)"""
+    from repro.serving.faults import FaultConfig
+
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 9)))
+               .astype(np.int32) for _ in range(6)]
+
+    def mk():
+        reqs = [Request(uid=i, prompt=p, max_new=8)
+                for i, p in enumerate(prompts)]
+        reqs[4].deadline_ticks = 6  # expires mid-stream on both paths
+        return reqs
+
+    faults = FaultConfig(force_preempt=((1, 2),), nan_logits=((2, 3),))
+    runs = []
+    for fused in (False, True):
+        eng = ServeEngine(cfg, params, slots=2, max_len=32, chunk=8,
+                          fused=fused, prefill_block=1, kv_paging=True,
+                          kv_page_size=8, page_budget=4,
+                          reserve="asyougo", faults=faults)
+        reqs = eng.run(mk())
+        assert all(r.terminal for r in reqs)
+        runs.append([(r.outcome, list(r.out), r.preempts) for r in reqs])
+    assert runs[0] == runs[1]
+    outcomes = {o for o, _, _ in runs[0]}
+    # the scenario actually exercised the distinct terminal paths
+    assert {"done", "expired", "numerics"} <= outcomes
