@@ -103,6 +103,11 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
             }
             if fk != "none":
                 g["ffn"] = jnp.ones((len(ids), n, fc), jnp.float32)
+            if cfg.is_encoder_decoder:
+                # decoder cross-attention heads are Eq. 2 candidates too:
+                # leaving them untapped would silently exclude xattn from
+                # the sparse-update plan on whisper-style configs
+                g["xattn"] = jnp.ones((len(ids), n, cfg.n_heads), jnp.float32)
             taps[f"g{gi}"] = g
         return taps
 
@@ -119,6 +124,11 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
                 d_ffn = np.sum(gf**2, axis=1) / (2.0 * n)
                 for j, lid in enumerate(ids):
                     chans[(lid, fk)] = d_ffn[j]
+            if cfg.is_encoder_decoder:
+                gx = np.asarray(tg[f"g{gi}"]["xattn"], np.float64)
+                d_x = np.sum(gx**2, axis=1) / (2.0 * n)
+                for j, lid in enumerate(ids):
+                    chans[(lid, "xattn")] = d_x[j]
         potentials = np.array(
             [chans[(c.layer, c.kind)].sum() for c in costs], np.float64
         )
@@ -137,6 +147,10 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
                     if cfg.mla
                     else ML.attn_delta_init(cfg, k, dtype)
                 )
+            elif kind == "xattn":
+                # cross-attention shares the self-attention projection
+                # shapes (K/V just read encoder rows), so the same delta init
+                d = ML.attn_delta_init(cfg, k, dtype)
             elif kind == "ssm":
                 d = MS.ssd_delta_init(cfg, k, dtype)
             elif kind == "moe":
@@ -181,6 +195,13 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
                 elif fk == "moe":
                     wg = np.asarray(st["moe"]["w_up"][j], np.float64)
                     out[(lid, "moe")] = np.sqrt((wg**2).sum((1, 2)))
+                if cfg.is_encoder_decoder:
+                    wq = np.asarray(st["xattn"]["wq"][j], np.float64)
+                    wo = np.asarray(st["xattn"]["wo"][j], np.float64)
+                    h, dh = cfg.n_heads, cfg.head_dim
+                    nq = (wq.reshape(-1, h, dh) ** 2).sum((0, 2))
+                    no = (wo.reshape(h, dh, -1) ** 2).sum((1, 2))
+                    out[(lid, "xattn")] = np.sqrt(nq + no)
         return out
 
     def fisher_reduce(tg, n, mask=None):
@@ -216,6 +237,10 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
                 d_ffn = reduce_one(tg[f"g{gi}"]["ffn"])
                 for j, lid in enumerate(ids):
                     chans[(lid, fk)] = d_ffn[j]
+            if cfg.is_encoder_decoder:
+                d_x = reduce_one(tg[f"g{gi}"]["xattn"])
+                for j, lid in enumerate(ids):
+                    chans[(lid, "xattn")] = d_x[j]
         return chans
 
     def features(params, batch, *, deltas=None, plan=None, taps=None, chan_idx=None):

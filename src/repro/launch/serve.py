@@ -118,11 +118,23 @@ def main() -> None:
             print(f"[serve] adapted on {args.device}: "
                   f"{adaptation.policy.describe()}")
 
+    def enc_feats() -> "np.ndarray | None":
+        # encoder-decoder / multimodal families carry precomputed frontend
+        # embeddings per the config stubs (whisper frames / SigLIP patches)
+        if cfg.is_encoder_decoder:
+            return rng.standard_normal(
+                (cfg.enc_len, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            return rng.standard_normal(
+                (cfg.n_img_tokens, cfg.img_embed_dim)).astype(np.float32)
+        return None
+
     reqs = [
         api.Request(
             uid=i,
             prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24))).astype(np.int32),
-            max_new=args.max_new)
+            max_new=args.max_new,
+            enc_feats=enc_feats())
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
@@ -165,6 +177,13 @@ def main() -> None:
               f"MiB across {args.slots} slots "
               f"({mem['kv_bytes_per_stream']/2**10:.1f} KiB/stream), "
               f"peak {peak} resident streams")
+    if mem.get("enc_tokens"):
+        per = (f"{mem['enc_pages_per_stream']} pages/stream"
+               if mem["kv_paging"] else "fixed stripe")
+        print(f"[serve] encoder runs: {mem['enc_tokens']} enc tokens "
+              f"pinned per stream ({per}), arena "
+              f"{mem['enc_arena_bytes']/2**10:.1f} KiB, resident "
+              f"{mem['enc_run_bytes']/2**10:.1f} KiB")
     if any(r.truncated for r in reqs):
         print(f"[serve] {sum(r.truncated for r in reqs)} requests truncated "
               f"at max_len={args.max_len}")

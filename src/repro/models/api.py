@@ -112,11 +112,27 @@ class ArchConfig:
     def is_encoder_decoder(self) -> bool:
         return self.n_enc_layers > 0
 
+    @property
+    def enc_feats_shape(self) -> Optional[Tuple[int, int]]:
+        """Per-request encoder-input geometry the serving engine expects on
+        ``Request.enc_feats`` (the config-stub frontend output): whisper
+        frame embeddings ``(enc_len, d_model)``, SigLIP patch embeddings
+        ``(n_img_tokens, img_embed_dim)``; None for decoder-only configs."""
+        if self.is_encoder_decoder:
+            return (self.enc_len, self.d_model)
+        if self.family == "vlm":
+            return (self.n_img_tokens, self.img_embed_dim)
+        return None
+
     def validate(self) -> "ArchConfig":
         assert self.family in {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
         assert self.serve_prefill_block >= 1
         assert self.kv_page_size >= 1
         assert self.kv_reserve in ("asyougo", "worstcase")
+        if self.family == "audio":
+            assert self.is_encoder_decoder and self.enc_len > 0
+        if self.family == "vlm":
+            assert self.n_img_tokens > 0 and self.img_embed_dim > 0
         if self.family in {"dense", "moe", "vlm", "audio"}:
             assert self.n_heads > 0 and self.head_dim > 0
         if self.family == "moe":

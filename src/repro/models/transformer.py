@@ -89,6 +89,11 @@ def unit_descs(cfg: ArchConfig) -> List[UnitDesc]:
             else:
                 np_ = d * (cfg.q_dim * 2 + cfg.kv_dim * 2)
                 out.append(UnitDesc(i, "attn", cfg.n_heads, np_, np_))
+            if cfg.is_encoder_decoder:
+                # decoder cross-attention is selectable per head like self
+                # attention (same projection shapes; K/V over enc tokens)
+                np_x = d * (cfg.q_dim * 2 + cfg.kv_dim * 2)
+                out.append(UnitDesc(i, "xattn", cfg.n_heads, np_x, np_x))
         elif bk == "ssm":
             di, n = cfg.d_inner, cfg.ssm_state
             np_ = d * (2 * di + 2 * n + cfg.n_ssm_heads) + di * d
@@ -295,12 +300,26 @@ def _apply_block(
                 )
         x = x + y
 
-    if enc_out is not None:
-        # decoder-with-cross-attn variant (whisper): xattn after self attn
+    if "norm_x" in p:
+        # decoder-with-cross-attn variant (whisper): xattn after self attn.
+        # Gate on the layer's own parameters, not on enc_out — running an
+        # encoder-decoder layer without encoder outputs must fail at trace
+        # time instead of silently decoding without cross-attention.
+        if enc_out is None:
+            raise ValueError(
+                "encoder-decoder layer has cross-attention parameters but "
+                "no enc_out was supplied — refusing to silently skip xattn "
+                "(pass the encoder outputs / Request.enc_feats)"
+            )
         h = L.apply_norm(cfg.norm, p["norm_x"], x)
         y, _ = L.attention_apply(
             p["xattn"], h, cfg, positions=positions, cross_hidden=enc_out,
+            delta=deltas.get("xattn"), head_idx=chan_idx.get("xattn"),
         )
+        if "xattn" in taps:
+            nb = taps["xattn"].shape[-1]
+            yb = y.reshape(y.shape[0], y.shape[1], nb, -1)
+            y = (yb * taps["xattn"][:, None, :, None]).reshape(y.shape)
         x = x + y
     return x, new_cache, aux
 
@@ -797,6 +816,21 @@ def reset_slot_state(caches: Dict[str, Any], mask: jax.Array) -> Dict[str, Any]:
     return named_tree_map(fix, caches)
 
 
+def _swap_prefix(x: jax.Array, positions: jax.Array,
+                 embed_prefix: Optional[jax.Array]) -> jax.Array:
+    """Replace token embeddings at absolute positions < P with rows of
+    ``embed_prefix`` (B, P, d_model) — the serving-path equivalent of
+    :func:`build_inputs`'s image-prefix concat for VLM requests, applied
+    positionally so block prefill and single-token decode both work."""
+    if embed_prefix is None:
+        return x
+    n = embed_prefix.shape[1]
+    sel = jnp.clip(positions, 0, n - 1)
+    rows = jnp.take_along_axis(
+        embed_prefix.astype(x.dtype), sel[..., None], axis=1)
+    return jnp.where((positions < n)[..., None], rows, x)
+
+
 def decode_step(
     cfg: ArchConfig,
     params: Params,
@@ -805,6 +839,7 @@ def decode_step(
     pos: jax.Array,  # () shared or (B,) per-slot positions
     enc_out: Optional[jax.Array] = None,
     *,
+    embed_prefix: Optional[jax.Array] = None,
     drop_free: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decode step: new token -> logits over vocab, updated caches.
@@ -812,6 +847,11 @@ def decode_step(
     ``drop_free=True`` is the serving engines' setting: MoE expert queues
     are sized so no routed token drops, keeping a slot's stream independent
     of its batch neighbours (and of prefill block size).
+
+    ``embed_prefix`` (B, P, d_model) substitutes precomputed embeddings at
+    positions ``< P`` (the VLM image prefix): the engine feeds placeholder
+    tokens there and this swap reproduces ``build_inputs``'s concat — image
+    rows enter *without* the gemma sqrt(d) token-embedding scale.
     """
     x = embed_tokens(cfg, params, tokens)
     pos = jnp.asarray(pos)
@@ -819,6 +859,7 @@ def decode_step(
         positions = jnp.broadcast_to(pos[None, None], tokens.shape)
     else:
         positions = pos[:, None]
+    x = _swap_prefix(x, positions, embed_prefix)
     h, new_caches, _ = forward_hidden(
         cfg, params, x, positions, caches=caches, enc_out=enc_out,
         drop_free=drop_free,
@@ -836,6 +877,7 @@ def prefill_block(
     valid: Optional[jax.Array] = None,  # (B, S) bool; None = all valid
     enc_out: Optional[jax.Array] = None,
     *,
+    embed_prefix: Optional[jax.Array] = None,
     drop_free: bool = True,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Sequence-mode prompt ingestion: a whole (B, S) block per dispatch.
@@ -856,6 +898,7 @@ def prefill_block(
     x = embed_tokens(cfg, params, tokens)
     s = tokens.shape[1]
     positions = jnp.asarray(pos)[:, None] + jnp.arange(s)[None, :]
+    x = _swap_prefix(x, positions, embed_prefix)
     if valid is None:
         valid = jnp.ones(tokens.shape, bool)
     h, new_caches, _ = forward_hidden(

@@ -66,6 +66,23 @@ one-sync-per-chunk contract survives):
   logits / forced preemption / forced pool exhaustion / queue overflow,
   traced into the same compiled programs (see ``serving.faults``).
 
+**Encoder-decoder and multimodal serving** (whisper / paligemma): a
+request on such a config carries ``enc_feats`` (precomputed frame/patch
+embeddings).  The engine encodes **once** at first staging and parks the
+result as a read-only per-request **page run** in the same page arena the
+KV cache draws from (:func:`paging.reserve_run`; a degenerate per-slot
+stripe when paging is off).  Admission prices the run together with the
+KV demand, every tick gathers the run rows through its table inside the
+compiled programs (cross-attention ``enc_out`` for whisper, the
+``embed_prefix`` image-prefix swap for paligemma), and eviction or
+preemption releases the run in-graph — the one-sync-per-chunk contract
+is untouched.  A preempted stream's recompute swap re-attaches the same
+encoded rows from the host cache without re-encoding, so resumed streams
+stay bit-identical.  Submitting without ``enc_feats`` on an
+encoder-decoder config (or with them on a decoder-only config) is a
+typed rejection — the engine refuses to decode without cross-attention
+rather than silently skipping it.
+
 TinyTrain integration: ``fold_deltas`` folds channel deltas into a serving
 parameter copy (W ⊕ scatter(ΔW)), so adapted models serve at exactly base
 cost.
@@ -134,6 +151,13 @@ class Request:
     outcome: Optional[str] = None
     # times this stream was preempted and requeued
     preempts: int = 0
+    # encoder inputs, REQUIRED on encoder-decoder/multimodal configs and
+    # rejected elsewhere: (enc_len, d_model) frame embeddings for audio,
+    # (n_img_tokens, img_embed_dim) patch embeddings for vlm.  Encoded
+    # once at first staging; the encoder output is pinned as a page run
+    # for the stream's whole residency (re-attached, not re-encoded, on
+    # preempt/requeue)
+    enc_feats: Optional[np.ndarray] = None
 
     @property
     def terminal(self) -> bool:
@@ -144,7 +168,8 @@ class SubmitResult(NamedTuple):
     """Typed admission verdict from :meth:`ServeEngine.submit`."""
 
     accepted: bool
-    reason: str  # "ok" | "queue_full"
+    # "ok" | "queue_full" | "missing_enc_feats" | "unexpected_enc_feats"
+    reason: str
 
 
 @dataclasses.dataclass
@@ -189,8 +214,23 @@ class PendingBuffer(NamedTuple):
     ttl: jax.Array      # (P,) int32 remaining deadline (resident ticks)
     tok_base: jax.Array  # (P,) int32 emitted tokens before (re)admission
     preempt_left: jax.Array  # (P,) int32 requeues left
+    enc: jax.Array      # (P, enc_tokens, d_model) encoded rows ((P,1,1) off)
     head: jax.Array     # () int32 next entry to admit
     count: jax.Array    # () int32 valid entries
+
+
+class EncRun(NamedTuple):
+    """Per-request pinned encoder-output run: a caller-owned run table over
+    the shared page arena (paged) or a fixed per-slot stripe (unpaged).
+
+    ``table`` is ``(slots, enc_pages)`` int32 (−1 = unmapped) and ``store``
+    a :func:`paging.store_init` arena whose rows hold encoder outputs
+    (d_model features per token; never int8 — the run is read every tick).
+    Part of the fused scan carry so reserve/write/release stay in-graph.
+    """
+
+    table: jax.Array
+    store: Dict[str, jax.Array]
 
 
 class ServeEngine:
@@ -254,6 +294,62 @@ class ServeEngine:
                 f"reserve must be 'asyougo' or 'worstcase', got {reserve!r}")
         self.reserve = reserve
         self.rayg = self.spec is not None and reserve == "asyougo"
+        # encoder-decoder / multimodal: per-request encoder outputs are
+        # pinned as a read-only page run (audio: cross-attention enc_out;
+        # vlm: the image-prefix embedding swap).  The run shares the KV
+        # pool's free-list when paging is on; with paging off it
+        # degenerates to a fixed per-slot stripe behind an identity run
+        # table — same write/read primitives, no allocator involved.
+        if cfg.is_encoder_decoder:
+            self._enc_tokens = int(cfg.enc_len)
+        elif cfg.family == "vlm":
+            self._enc_tokens = int(cfg.n_img_tokens)
+        else:
+            self._enc_tokens = 0
+        # vlm feeds placeholder tokens for the image prefix; their
+        # embeddings are swapped for the pinned run rows every tick
+        self._feed_prefix = (self._enc_tokens
+                             if cfg.family == "vlm" else 0)
+        dtype = jnp.dtype(cfg.dtype)
+        if self._enc_tokens:
+            E = self._enc_tokens
+            if self.spec is not None:
+                self._enc_spec = PG.PagingSpec(
+                    page_size=self.spec.page_size,
+                    n_pages=self.spec.n_pages,
+                    max_pages=self.spec.pages_for(E))
+                self._enc_pages = self._enc_spec.max_pages
+                enc_table = jnp.full(
+                    (slots, self._enc_pages), -1, jnp.int32)
+            else:
+                # unpaged: one whole-run "page" per slot, slot s -> page s
+                self._enc_spec = PG.PagingSpec(
+                    page_size=E, n_pages=slots, max_pages=1)
+                self._enc_pages = 0  # draws nothing from a shared pool
+                enc_table = jnp.arange(slots, dtype=jnp.int32)[:, None]
+            self._enc = EncRun(
+                table=enc_table,
+                store=PG.store_init(self._enc_spec, (cfg.d_model,), dtype))
+            # encode exactly once per request: the host caches the encoder
+            # output per rid and every (re)admission re-attaches the same
+            # rows — a requeued stream is never re-encoded, so resumed
+            # streams are bit-identical to unpreempted ones
+            if cfg.is_encoder_decoder:
+                def _encode_one(p, feats):
+                    return T.encode(cfg, p, feats.astype(dtype)[None])[0]
+            else:
+                def _encode_one(p, feats):
+                    return feats.astype(dtype) @ p["img_proj"]
+            self._encode_one = jax.jit(_encode_one)
+            self._enc_host: Dict[int, np.ndarray] = {}
+        else:
+            self._enc_spec = None
+            self._enc_pages = 0
+            # fixed placeholder so the fused carry keeps one pytree shape
+            self._enc = EncRun(
+                table=jnp.full((slots, 1), -1, jnp.int32),
+                store={"pages": jnp.zeros((1, 1, 1), dtype)})
+            self._enc_host = {}
         # robustness knobs: engine-wide defaults that per-request fields
         # override; faults is the trace-time chaos plan (None = no fault
         # code in the compiled programs at all)
@@ -334,21 +430,37 @@ class ServeEngine:
             finite = jnp.all(jnp.isfinite(logits), axis=-1)
             return self._pick(logits, rids, tok_idx), finite
 
-        def decode(p, t, c, pos, rids, tok_idx):
-            logits, c = T.decode_step(cfg, p, t, c, pos, drop_free=True)
+        def decode(p, t, c, pos, rids, tok_idx, enc):
+            logits, c = T.decode_step(cfg, p, t, c, pos, drop_free=True,
+                                      **self._enc_fwd_kwargs(enc))
             tok, finite = postproc(logits[:, 0], rids, tok_idx)
             return tok, finite, c
 
         # stall-tick forward: generating slots pause (valid=False rows
         # advance nothing on the block path), prefilling slots keep
         # feeding — the eager mirror of the fused path's block_tick
-        def decode_masked(p, t, c, pos, valid, rids, tok_idx):
-            logits, c = T.prefill_block(cfg, p, t, c, pos, valid[:, None])
+        def decode_masked(p, t, c, pos, valid, rids, tok_idx, enc):
+            logits, c = T.prefill_block(cfg, p, t, c, pos, valid[:, None],
+                                        **self._enc_fwd_kwargs(enc))
             tok, finite = postproc(logits[:, 0], rids, tok_idx)
             return tok, finite, c
 
         self._decode = jax.jit(decode)
         self._decode_masked = jax.jit(decode_masked)
+
+    def _enc_fwd_kwargs(self, enc: EncRun) -> Dict[str, jax.Array]:
+        """Gather the pinned encoder-run rows through the run table and
+        route them into the forward: cross-attention ``enc_out`` on
+        encoder-decoder configs, the ``embed_prefix`` image swap on vlm.
+        Traceable (used inside the jitted tick programs); unmapped slots
+        alias page 0 — finite garbage whose outputs are never emitted."""
+        if not self._enc_tokens:
+            return {}
+        rows = PG.read_rows(enc.store, enc.table, self._enc_spec,
+                            jnp.dtype(self.cfg.dtype))[:, :self._enc_tokens]
+        if self.cfg.is_encoder_decoder:
+            return {"enc_out": rows}
+        return {"embed_prefix": rows}
 
     def _pick(self, logits: jax.Array, rids: jax.Array,
               tok_idx: jax.Array) -> jax.Array:
@@ -394,9 +506,10 @@ class ServeEngine:
             raise ValueError(
                 f"request max_len {budget} leaves no room for a prompt "
                 "token plus a generated token (need >= 2)")
-        n = int(len(req.prompt))
-        if n == 0:
+        if int(len(req.prompt)) == 0:
             raise ValueError("empty prompt: nothing to prefill")
+        # the image prefix (vlm) occupies KV rows like prompt tokens do
+        n = int(len(req.prompt)) + self._feed_prefix
         if n >= budget - 1:
             raise ValueError(
                 f"prompt of length {n} cannot fit: the engine evicts at "
@@ -405,24 +518,49 @@ class ServeEngine:
                 f"{budget - 2})")
         if req.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {req.max_new}")
+        if req.enc_feats is not None:
+            feats = np.asarray(req.enc_feats)
+            want = self.cfg.enc_feats_shape
+            if self._enc_tokens and tuple(feats.shape) != want:
+                raise ValueError(
+                    f"enc_feats shape {tuple(feats.shape)} does not match "
+                    f"the config's encoder geometry {want}")
         if self.spec is not None:
-            need = self.spec.pages_for(budget)
+            need = self.spec.pages_for(budget) + self._enc_pages
             if need > self.spec.n_pages:
                 raise ValueError(
-                    f"request needs {need} pages but the pool holds only "
+                    f"request needs {need} pages (incl. {self._enc_pages} "
+                    f"encoder-run pages) but the pool holds only "
                     f"{self.spec.n_pages}: it could never be admitted")
 
     def backlog_size(self) -> int:
         """Un-admitted host state: queued + staged + awaiting restage."""
         return len(self.queue) + len(self._staged) + len(self._requeue)
 
+    def _enc_reason(self, req: Request) -> Optional[str]:
+        """Fail-fast encoder guard: an encoder-decoder/multimodal config
+        must never decode without its encoder inputs (the silent
+        no-cross-attention path is unreachable), and a decoder-only
+        config must not silently ignore supplied ones."""
+        if self._enc_tokens and req.enc_feats is None:
+            return "missing_enc_feats"
+        if not self._enc_tokens and req.enc_feats is not None:
+            return "unexpected_enc_feats"
+        return None
+
     def submit(self, req: Request) -> SubmitResult:
         """Enqueue one request.  Malformed requests still raise
         (``ValueError`` — a caller bug); a *full* queue is load, not a
         bug, so with ``queue_limit`` set it returns a typed rejection
         and marks the request ``outcome='rejected'`` instead of growing
-        unbounded host state."""
+        unbounded host state.  Missing/unexpected ``enc_feats`` is also
+        a typed rejection: the request would otherwise decode without
+        (or silently drop) its encoder conditioning."""
         self._validate(req)
+        reason = self._enc_reason(req)
+        if reason is not None:
+            req.outcome = "rejected"
+            return SubmitResult(False, reason)
         if (self.queue_limit is not None
                 and self.backlog_size() >= self.queue_limit):
             req.outcome = "rejected"
@@ -449,11 +587,26 @@ class ServeEngine:
         any already-generated prefix (empty for fresh requests).  The
         recompute swap — a resumed stream replays its own history, so
         positions, cache rows and sample-key token indices all realign
-        with the unpreempted run."""
-        if not req.out:
-            return np.asarray(req.prompt, np.int32)
-        return np.concatenate([np.asarray(req.prompt, np.int32),
-                               np.asarray(req.out, np.int32)])
+        with the unpreempted run.  On vlm configs the feed leads with
+        ``n_img_tokens`` placeholder tokens whose embeddings the forward
+        swaps for the pinned image-prefix rows — positions, KV rows and
+        the per-request budget all count the prefix."""
+        parts = [np.asarray(req.prompt, np.int32)]
+        if self._feed_prefix:
+            parts.insert(0, np.zeros(self._feed_prefix, np.int32))
+        if req.out:
+            parts.append(np.asarray(req.out, np.int32))
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def _encode_cached(self, rid: int, req: Request) -> np.ndarray:
+        """Encoder output for ``rid``, computed exactly once per request
+        (first staging) and re-attached verbatim on every readmission."""
+        hit = self._enc_host.get(rid)
+        if hit is None:
+            hit = np.asarray(self._encode_one(
+                self.params, jnp.asarray(req.enc_feats)))
+            self._enc_host[rid] = hit
+        return hit
 
     def _admit_pages(self, feed_len: int, budget: int) -> int:
         """Pages reserved at admission: the prompt's own demand under
@@ -490,12 +643,14 @@ class ServeEngine:
             budget = self.request_budget(req)
             feed = self._feed(req)
             if self.spec is not None:
+                # a request's admission price is its KV demand plus its
+                # pinned encoder run (0 on decoder-only configs)
                 want = self._admit_pages(len(feed), budget)
-                if want > free_pages:
+                if want + self._enc_pages > free_pages:
                     # FIFO head-of-line blocking: admission stalls
                     # until running requests release pages
                     break
-                free_pages -= want
+                free_pages -= want + self._enc_pages
                 need[i] = want
             if resumed:
                 self._requeue.popleft()
@@ -520,6 +675,30 @@ class ServeEngine:
                     self.pool, jnp.asarray(need), jnp.asarray(mask))
                 self.caches = PG.set_page_table(self.caches, self.pool.table)
             self.caches = T.reset_slot_state(self.caches, mask)
+            if self._enc_tokens:
+                # park the (cached) encoder output as this slot's pinned
+                # run — the same rows on every readmission, never
+                # re-encoded
+                vals = np.zeros(
+                    (self.n_slots, self._enc_tokens, self.cfg.d_model),
+                    np.float32)
+                for i in np.nonzero(mask)[0]:
+                    sl = self.slots[i]
+                    vals[i] = self._encode_cached(sl.rid, sl.req)
+                jmask = jnp.asarray(mask)
+                table = self._enc.table
+                if self.spec is not None:
+                    self.pool, table = PG.reserve_run(
+                        self.pool, table,
+                        jnp.full((self.n_slots,), self._enc_pages,
+                                 jnp.int32), jmask)
+                store = PG.write_rows(
+                    self._enc.store, table, self._enc_spec,
+                    jnp.zeros((self.n_slots,), jnp.int32),
+                    jnp.asarray(vals),
+                    jnp.broadcast_to(jmask[:, None],
+                                     (self.n_slots, self._enc_tokens)))
+                self._enc = EncRun(table, store)
 
     def _preempt_slot(self, i: int, freed: np.ndarray) -> int:
         """Evict slot ``i`` mid-stream: release its pages and either
@@ -534,6 +713,7 @@ class ServeEngine:
         else:
             req.outcome = OUTCOME_NAMES[OUTCOME_PREEMPTED]
             code = OUTCOME_PREEMPTED
+            self._enc_host.pop(sl.rid, None)
         freed[i] = True
         self.slots[i] = _Slot()
         return code
@@ -647,12 +827,12 @@ class ServeEngine:
             next_tok, finite, self.caches = self._decode_masked(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(self.pos, jnp.int32), jnp.asarray(valid),
-                jnp.asarray(rids), jnp.asarray(tok_idx))
+                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc)
         else:
             next_tok, finite, self.caches = self._decode(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(self.pos, jnp.int32),
-                jnp.asarray(rids), jnp.asarray(tok_idx))
+                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc)
         next_tok, finite = _telemetry._fetch((next_tok, finite))
         # -- advance lifecycle: emit, numerics, done/trunc, deadline
         for i in live:
@@ -684,6 +864,7 @@ class ServeEngine:
                     sl.req.done = True
                     sl.req.truncated = code == OUTCOME_TRUNCATED
                 tally[sl.req.outcome] = tally.get(sl.req.outcome, 0) + 1
+                self._enc_host.pop(sl.rid, None)
                 self.slots[i] = _Slot()
                 freed[i] = True
         self._finish_tick(freed)
@@ -696,6 +877,11 @@ class ServeEngine:
                 # land in a re-allocated page
                 self.pool = PG.release(self.pool, jnp.asarray(freed))
                 self.caches = PG.set_page_table(self.caches, self.pool.table)
+                if self._enc_tokens:
+                    # the pinned encoder run goes back with the KV pages
+                    self.pool, table = PG.release_run(
+                        self.pool, self._enc.table, jnp.asarray(freed))
+                    self._enc = EncRun(table, self._enc.store)
             # freed slots claim queued work this tick, not next tick — the
             # fused scan admits at the top of every tick body, so the eager
             # path must leave the same occupancy behind
@@ -752,6 +938,12 @@ class ServeEngine:
             spec = self.spec
             rayg = self.rayg
             faults = self.faults
+            # trace-time encoder gating: decoder-only engines compile zero
+            # encoder-run code and their EncRun carry is a placeholder
+            enc_on = self._enc_tokens > 0
+            enc_pages = self._enc_pages
+            enc_spec = self._enc_spec
+            E = self._enc_tokens
             # trace-time fault gating: a faultless engine compiles zero
             # fault code (python conditionals, not lax.cond)
             force_pre_on = faults is not None and bool(faults.force_preempt)
@@ -761,7 +953,7 @@ class ServeEngine:
             preempt_on = rayg or force_pre_on
 
             def body(params, carry, gt):
-                state, caches, pend, pool = carry
+                state, caches, pend, pool, enc = carry
 
                 # -- admit: free slots claim pending entries in FIFO order
                 free = ~state.active
@@ -774,13 +966,30 @@ class ServeEngine:
                     # strictly increasing over candidates (every request
                     # needs >= 1 page), so admission keeps FIFO order with
                     # head-of-line blocking — exactly the PendingBuffer
-                    # contract, now in pages
+                    # contract, now in pages.  The demand prices the pinned
+                    # encoder run along with the KV rows — one free-list,
+                    # one ledger
                     need = jnp.where(fifo, pend.n_pages[src], 0)
-                    fits = jnp.cumsum(need) <= PG.free_page_count(pool)
+                    price = need + (jnp.where(fifo, enc_pages, 0)
+                                    if enc_on else 0)
+                    fits = jnp.cumsum(price) <= PG.free_page_count(pool)
                     take = fifo & fits
                     pool = PG.reserve(pool, need, take)
+                    if enc_on:
+                        pool, enc_table = PG.reserve_run(
+                            pool, enc.table,
+                            jnp.full((slots,), enc_pages, jnp.int32), take)
+                        enc = EncRun(enc_table, enc.store)
                 else:
                     take = fifo
+                if enc_on:
+                    # park the staged encoder rows in the freshly-reserved
+                    # run (unpaged: the slot's fixed stripe) — read-only
+                    # for the stream's whole residency from here on
+                    enc = EncRun(enc.table, PG.write_rows(
+                        enc.store, enc.table, enc_spec,
+                        jnp.zeros((slots,), jnp.int32), pend.enc[src],
+                        jnp.broadcast_to(take[:, None], (slots, E))))
 
                 def sel(new, old):
                     return jnp.where(take, new, old)
@@ -862,6 +1071,13 @@ class ServeEngine:
                     pre_requeue = victims & ~pre_final
                     if spec is not None:
                         pool = PG.release(pool, victims)
+                        if enc_on:
+                            # the victim's pinned run goes back too; its
+                            # readmission reserves a fresh run and
+                            # re-attaches the host-cached rows
+                            pool, enc_table = PG.release_run(
+                                pool, enc.table, victims)
+                            enc = EncRun(enc_table, enc.store)
                         caches = PG.set_page_table(caches, pool.table)
                     state = state._replace(
                         active=state.active & ~victims,
@@ -879,6 +1095,10 @@ class ServeEngine:
                 # (out-of-pages) tick also routes through the block path:
                 # all-False valid rows pause the page-starved slots without
                 # advancing their cache state.
+                # gather the pinned encoder rows once per tick (empty dict
+                # on decoder-only configs — zero compiled code)
+                enc_kw = self._enc_fwd_kwargs(enc)
+
                 def decode_tick(caches):
                     ptok = jnp.take_along_axis(
                         state.prompt,
@@ -889,7 +1109,7 @@ class ServeEngine:
                         jnp.where(prefilling, ptok, state.last_tok), 0)
                     logits, caches = T.decode_step(
                         cfg, params, tok[:, None], caches, state.pos,
-                        drop_free=True)
+                        drop_free=True, **enc_kw)
                     return (caches, logits[:, 0],
                             state.active.astype(jnp.int32))
 
@@ -904,7 +1124,7 @@ class ServeEngine:
                         valid, jnp.take_along_axis(state.prompt, gidx, axis=1),
                         0)
                     logits, caches = T.prefill_block(
-                        cfg, params, toks, caches, state.pos, valid)
+                        cfg, params, toks, caches, state.pos, valid, **enc_kw)
                     last = jnp.clip(n_tok - 1, 0, B - 1)
                     last_logits = jnp.take_along_axis(
                         logits, last[:, None, None], axis=1)[:, 0]
@@ -977,10 +1197,14 @@ class ServeEngine:
                     # paused slot's stale-length write can never land in a
                     # page re-allocated next tick
                     pool = PG.release(pool, term)
+                    if enc_on:
+                        pool, enc_table = PG.release_run(
+                            pool, enc.table, term)
+                        enc = EncRun(enc_table, enc.store)
                     caches = PG.set_page_table(caches, pool.table)
-                return (state, caches, pend, pool), ys
+                return (state, caches, pend, pool, enc), ys
 
-            def run(params, state, caches, pend, pool, budget, backlog,
+            def run(params, state, caches, pend, pool, enc, budget, backlog,
                     tick0):
                 ys0 = (
                     jnp.full((chunk, slots), -1, jnp.int32),   # rid
@@ -991,7 +1215,7 @@ class ServeEngine:
                 )
 
                 def cond_fn(c):
-                    t, state, caches, pend, pool, ys = c
+                    t, state, caches, pend, pool, enc, ys = c
                     drained = pend.head >= pend.count
                     free = jnp.any(~state.active)
                     idle = ~jnp.any(state.active)
@@ -999,18 +1223,18 @@ class ServeEngine:
                     return (t < budget) & ~stop
 
                 def body_fn(c):
-                    t, state, caches, pend, pool, ys = c
-                    (state, caches, pend, pool), row = body(
-                        params, (state, caches, pend, pool), tick0 + t)
+                    t, state, caches, pend, pool, enc, ys = c
+                    (state, caches, pend, pool, enc), row = body(
+                        params, (state, caches, pend, pool, enc), tick0 + t)
                     ys = jax.tree_util.tree_map(
                         lambda buf, r: lax.dynamic_update_index_in_dim(
                             buf, r.astype(buf.dtype), t, 0), ys, row)
-                    return (t + 1, state, caches, pend, pool, ys)
+                    return (t + 1, state, caches, pend, pool, enc, ys)
 
-                t, state, caches, pend, pool, ys = lax.while_loop(
+                t, state, caches, pend, pool, enc, ys = lax.while_loop(
                     cond_fn, body_fn,
-                    (jnp.int32(0), state, caches, pend, pool, ys0))
-                return state, caches, pend, pool, ys, t
+                    (jnp.int32(0), state, caches, pend, pool, enc, ys0))
+                return state, caches, pend, pool, enc, ys, t
 
             self._scan_cache[chunk] = jax.jit(run, donate_argnums=(1, 2))
         return self._scan_cache[chunk]
@@ -1031,6 +1255,9 @@ class ServeEngine:
         ttl = np.zeros((P,), np.int32)
         tok_base = np.zeros((P,), np.int32)
         preempt_left = np.zeros((P,), np.int32)
+        enc = np.zeros((P, self._enc_tokens or 1,
+                        self.cfg.d_model if self._enc_tokens else 1),
+                       np.float32)
         for j, (r, req) in enumerate(self._staged):
             # a restaged (preempted) entry re-prefills its full history —
             # prompt plus generated prefix — and owes only the remaining
@@ -1049,11 +1276,15 @@ class ServeEngine:
                          _NO_DEADLINE)
             tok_base[j] = len(req.out)
             preempt_left[j] = self._preempt_left(req)
+            if self._enc_tokens:
+                # encoded once at first staging, then re-attached verbatim
+                enc[j] = self._encode_cached(r, req)
         self._pending_cache = PendingBuffer(
             jnp.asarray(prompt), jnp.asarray(length), jnp.asarray(max_new),
             jnp.asarray(budget), jnp.asarray(n_pages),
             jnp.asarray(rid), jnp.asarray(ttl), jnp.asarray(tok_base),
-            jnp.asarray(preempt_left), jnp.zeros((), jnp.int32),
+            jnp.asarray(preempt_left), jnp.asarray(enc),
+            jnp.zeros((), jnp.int32),
             jnp.asarray(np.int32(len(self._staged))))
         self._pending_dirty = False
         return self._pending_cache
@@ -1094,9 +1325,10 @@ class ServeEngine:
             backlog = bool(self.queue or self._requeue)
             budget = min(chunk, max_ticks - used)
             run = self.scan_ticks(chunk)
-            self._state, self.caches, _, self.pool, ys, t_exec = run(
+            (self._state, self.caches, _, self.pool, self._enc, ys,
+             t_exec) = run(
                 self.params, self._state, self.caches, self._make_pending(),
-                self.pool, budget, backlog, np.int32(self.ticks))
+                self.pool, self._enc, budget, backlog, np.int32(self.ticks))
             # the single blocking transfer of the chunk: per-tick events
             (rids, toks, outs, act, n_admit), t_exec = (
                 _telemetry._fetch((ys, t_exec)))
@@ -1142,6 +1374,7 @@ class ServeEngine:
                     self._tally.get(req.outcome, 0) + 1)
                 self._live.discard(rid)
                 self._resident.pop(rid, None)
+                self._enc_host.pop(rid, None)
             ticks_used = int(act.sum())
             used += ticks_used
             self.ticks += ticks_used
@@ -1193,6 +1426,21 @@ class ServeEngine:
             "kv_cache_bytes": int(total),
             "resident_streams": resident,
         }
+        if self._enc_tokens:
+            # pinned encoder runs: exact under both disciplines — every
+            # resident stream holds exactly its constant run size, no
+            # growth, no estimation
+            enc_arena = sum(int(x.size) * x.dtype.itemsize
+                            for x in self._enc.store.values())
+            rep["enc_tokens"] = self._enc_tokens
+            rep["enc_arena_bytes"] = enc_arena
+            if self.spec is not None:
+                rep["enc_pages_per_stream"] = self._enc_pages
+                rep["enc_run_bytes"] = (
+                    resident * self._enc_pages
+                    * (enc_arena // self._enc_spec.n_pages))
+            else:
+                rep["enc_run_bytes"] = resident * (enc_arena // self.n_slots)
         if self.spec is None:
             # fixed stripes: every slot pins a full-length share whether
             # or not it is occupied
@@ -1209,6 +1457,8 @@ class ServeEngine:
                          for sl in eager_live)
             in_use += sum(int(spec.pages_for(self.request_budget(r)))
                           for r in fused_live)
+        # pinned encoder runs share the free-list: one ledger for both
+        in_use += resident * self._enc_pages
         page_bytes = int(arena) // spec.n_pages  # all layers, one page
         rep.update({
             "kv_int8": spec.int8,
@@ -1245,8 +1495,11 @@ class ServeEngine:
         for r in requests:
             # admission backpressure: overflow beyond queue_limit is shed
             # with a typed terminal outcome, never silently dropped and
-            # never an unbounded host queue
-            if (self.queue_limit is not None
+            # never an unbounded host queue.  The encoder guard sheds the
+            # same way — a request that would decode without (or silently
+            # drop) its encoder conditioning never reaches a slot
+            if self._enc_reason(r) is not None or (
+                    self.queue_limit is not None
                     and self.backlog_size() >= self.queue_limit):
                 r.outcome = "rejected"
                 self._tally["rejected"] = self._tally.get("rejected", 0) + 1
@@ -1326,6 +1579,17 @@ def _fold_attn(cfg, stack, j, d, idx):
         d["wq"].T.astype(attn["wq"].dtype))
     attn["wo"] = attn["wo"].at[j, cols, :].add(
         d["wo"].astype(attn["wo"].dtype))
+
+
+@register_unit_folder("xattn")
+def _fold_xattn(cfg, stack, j, d, idx):
+    xattn = stack["xattn"]
+    cols = (idx[:, None] * cfg.head_dim
+            + np.arange(cfg.head_dim)[None, :]).reshape(-1)
+    xattn["wq"] = xattn["wq"].at[j, :, cols].add(
+        d["wq"].T.astype(xattn["wq"].dtype))
+    xattn["wo"] = xattn["wo"].at[j, cols, :].add(
+        d["wo"].astype(xattn["wo"].dtype))
 
 
 @register_unit_folder("mla")

@@ -25,6 +25,13 @@ failure on both the fused and eager paths:
 The injector is zero-cost when disabled: ``ServeEngine(faults=None)``
 traces no fault code at all (python-level gating, not ``lax.cond``).
 
+All coordinates are (request id, emitted-token index) pairs, so the plan
+is agnostic to what conditions the decode: encoder-decoder and multimodal
+requests (whisper/paligemma, pinned encoder-output runs) inject through
+the exact same predicates — a forced preemption of such a request also
+exercises the release-and-re-attach path of its encoder run (the resume
+re-pins the same rows without re-encoding).
+
 The adapt-side hook (`nan_loss_steps`) is threaded through
 ``core.sparse.scan_train_loop`` / the eager step builders behind the same
 debug flag and forces a non-finite loss at chosen step indices, to

@@ -39,6 +39,15 @@ gathering pages through the table (the jnp fallback); on TPU the Pallas
 flash kernel walks the page table directly from SMEM
 (:func:`repro.kernels.ops.paged_flash_attention`) with no gather.
 
+Besides the growable KV rows, the pool also backs **pinned runs**: a
+read-only per-request page run (encoder outputs for whisper/paligemma
+serving) reserved in full at admission via :func:`reserve_run` into a
+caller-owned run table and held unchanged — never extended, never
+quantised — until :func:`release_run` frees it at eviction/preemption.
+Runs draw from the *same* free-list as KV reservations, so one ledger
+(``pages_in_use``) accounts for both and the admission predicate can
+price a request as ``kv_pages + run_pages``.
+
 This module must stay import-light: ``models/`` imports it lazily at call
 time, so it must never import ``repro.models`` or ``repro.serving.engine``.
 """
@@ -130,39 +139,66 @@ def pages_in_use(pool: PagePool) -> jax.Array:
     return pool.free.shape[0] - free_page_count(pool)
 
 
+def _handout(free: jax.Array, need: jax.Array, mask: jax.Array,
+             held: jax.Array, width: int):
+    """Cumsum-rank free-page handout for a ``(slots, width)`` table.
+
+    Free pages get ranks 0..F−1 in page order and slot ``s`` with
+    exclusive-prefix demand ``offs[s]`` receives the pages ranked
+    ``offs[s] .. offs[s]+need[s]`` into table entries
+    ``held[s] .. held[s]+need[s]-1`` (the ``PendingBuffer`` admission
+    idiom).  Returns ``(want, page, taken)``: the entry mask, the page id
+    per entry, and the free-list bits consumed.  Shared core of
+    :func:`reserve`, :func:`extend` and :func:`reserve_run`.
+    """
+    n_pages = free.shape[0]
+    need = jnp.where(mask, need, 0).astype(jnp.int32)
+    held = held.astype(jnp.int32)
+    offs = jnp.cumsum(need) - need  # exclusive prefix per slot
+    j = jnp.arange(width, dtype=jnp.int32)[None, :]
+    want = mask[:, None] & (j >= held[:, None]) & (
+        j < (held + need)[:, None])                     # (slots, width)
+    target_rank = offs[:, None] + (j - held[:, None])    # rank per entry
+    # invert rank -> page id: free pages are ranked in page order
+    rank = jnp.cumsum(free.astype(jnp.int32)) - 1        # (n_pages,)
+    rank_to_page = jnp.full((n_pages,), -1, jnp.int32).at[
+        jnp.where(free, rank, n_pages)
+    ].set(jnp.arange(n_pages, dtype=jnp.int32), mode="drop")
+    page = rank_to_page[jnp.clip(target_rank, 0, n_pages - 1)]
+    taken = jnp.zeros((n_pages,), bool).at[
+        jnp.where(want, page, n_pages)
+    ].set(True, mode="drop")
+    return want, page, taken
+
+
+def _free_rows(free: jax.Array, table: jax.Array, mask: jax.Array):
+    """Return masked slots' mapped pages to ``free`` and the invalidated
+    (−1) table.  Shared core of :func:`release` and :func:`release_run`."""
+    n_pages = free.shape[0]
+    owned = mask[:, None] & (table >= 0)
+    freed = jnp.zeros((n_pages,), bool).at[
+        jnp.where(owned, table, n_pages)
+    ].set(True, mode="drop")
+    return free | freed, jnp.where(mask[:, None], -1, table)
+
+
 def reserve(pool: PagePool, need: jax.Array, mask: jax.Array) -> PagePool:
     """Allocate ``need[s]`` pages to each masked slot, in slot order.
 
-    The free-list is drained by cumsum rank (the ``PendingBuffer``
-    admission idiom): free pages get ranks 0..F−1 in page order and slot
-    ``s`` with exclusive-prefix demand ``offs[s]`` receives the pages
-    ranked ``offs[s] .. offs[s]+need[s]``.  Masked slots overwrite their
-    whole table row (tail entries −1), so reserve doubles as the row
-    reset at admission.
+    The free-list is drained by cumsum rank (:func:`_handout`).  Masked
+    slots overwrite their whole table row (tail entries −1), so reserve
+    doubles as the row reset at admission.
 
     Contract: the caller guarantees the masked demand fits
     (``sum(need * mask) <= free_page_count``) — both the fused admission
     predicate and the eager admission loop check before reserving.
     Fixed-shape and traceable inside ``lax.scan``/``while_loop``.
     """
-    n_pages = pool.free.shape[0]
     mp = pool.table.shape[1]
-    need = jnp.where(mask, need, 0).astype(jnp.int32)
-    offs = jnp.cumsum(need) - need  # exclusive prefix per slot
-    j = jnp.arange(mp, dtype=jnp.int32)[None, :]
-    want = mask[:, None] & (j < need[:, None])          # (slots, mp)
-    target_rank = offs[:, None] + j                      # rank per entry
-    # invert rank -> page id: free pages are ranked in page order
-    rank = jnp.cumsum(pool.free.astype(jnp.int32)) - 1   # (n_pages,)
-    rank_to_page = jnp.full((n_pages,), -1, jnp.int32).at[
-        jnp.where(pool.free, rank, n_pages)
-    ].set(jnp.arange(n_pages, dtype=jnp.int32), mode="drop")
-    page = rank_to_page[jnp.clip(target_rank, 0, n_pages - 1)]
+    held = jnp.zeros(mask.shape, jnp.int32)
+    want, page, taken = _handout(pool.free, need, mask, held, mp)
     new_rows = jnp.where(want, page, -1)
     table = jnp.where(mask[:, None], new_rows, pool.table)
-    taken = jnp.zeros((n_pages,), bool).at[
-        jnp.where(want, page, n_pages)
-    ].set(True, mode="drop")
     return PagePool(table, pool.free & ~taken)
 
 
@@ -174,32 +210,16 @@ def extend(pool: PagePool, need: jax.Array, mask: jax.Array,
     overwrites a slot's whole table row (admission-time reset), ``extend``
     fills only entries ``held[s] .. held[s]+need[s]-1`` — the pages a
     running stream acquires when its cursor crosses a page boundary —
-    and leaves the already-mapped prefix untouched.  Free pages are
-    handed out by the same cumsum-rank inversion as :func:`reserve`.
+    and leaves the already-mapped prefix untouched.
 
     Contract: the caller guarantees the masked demand fits the free-list
     and ``held + need <= max_pages`` (positions never exceed the
     per-request budget, which :meth:`PagingSpec.build` sizes the table
     for).  Fixed-shape and traceable inside ``lax.while_loop``.
     """
-    n_pages = pool.free.shape[0]
     mp = pool.table.shape[1]
-    need = jnp.where(mask, need, 0).astype(jnp.int32)
-    held = held.astype(jnp.int32)
-    offs = jnp.cumsum(need) - need  # exclusive prefix per slot
-    j = jnp.arange(mp, dtype=jnp.int32)[None, :]
-    want = mask[:, None] & (j >= held[:, None]) & (
-        j < (held + need)[:, None])
-    target_rank = offs[:, None] + (j - held[:, None])
-    rank = jnp.cumsum(pool.free.astype(jnp.int32)) - 1
-    rank_to_page = jnp.full((n_pages,), -1, jnp.int32).at[
-        jnp.where(pool.free, rank, n_pages)
-    ].set(jnp.arange(n_pages, dtype=jnp.int32), mode="drop")
-    page = rank_to_page[jnp.clip(target_rank, 0, n_pages - 1)]
+    want, page, taken = _handout(pool.free, need, mask, held, mp)
     table = jnp.where(want, page, pool.table)
-    taken = jnp.zeros((n_pages,), bool).at[
-        jnp.where(want, page, n_pages)
-    ].set(True, mode="drop")
     return PagePool(table, pool.free & ~taken)
 
 
@@ -207,13 +227,48 @@ def release(pool: PagePool, mask: jax.Array) -> PagePool:
     """Return all pages of masked slots to the free-list and invalidate
     their page-table rows (−1), so a stale table copy can never route a
     write into a page that has been handed to another slot."""
-    n_pages = pool.free.shape[0]
-    owned = mask[:, None] & (pool.table >= 0)
-    freed = jnp.zeros((n_pages,), bool).at[
-        jnp.where(owned, pool.table, n_pages)
-    ].set(True, mode="drop")
-    table = jnp.where(mask[:, None], -1, pool.table)
-    return PagePool(table, pool.free | freed)
+    free, table = _free_rows(pool.free, pool.table, mask)
+    return PagePool(table, free)
+
+
+# ---------------------------------------------------------------------------
+# Pinned runs: read-only per-request page runs (encoder outputs)
+# ---------------------------------------------------------------------------
+
+
+def reserve_run(pool: PagePool, run_table: jax.Array, need: jax.Array,
+                mask: jax.Array) -> Tuple[PagePool, jax.Array]:
+    """Reserve a pinned page run for each masked slot from the shared
+    free-list, into the caller-owned ``run_table`` ``(slots, run_pages)``.
+
+    A run is reserved in full at admission (``need[s]`` pages, typically
+    the constant ``ceil(enc_tokens / page_size)``), never extended, and
+    held until :func:`release_run` — the encoder-output lifecycle.
+    Masked slots overwrite their whole run row (tail entries −1).  The
+    KV ``pool.table`` is untouched; only the free-list advances, so KV
+    reservations and runs share one ledger.
+
+    Contract: the caller's admission predicate prices the run together
+    with the KV demand (``sum((kv_need + run_need) * mask) <= free``).
+    Fixed-shape and traceable inside ``lax.while_loop``.
+    """
+    width = run_table.shape[1]
+    held = jnp.zeros(mask.shape, jnp.int32)
+    want, page, taken = _handout(pool.free, need, mask, held, width)
+    new_rows = jnp.where(want, page, -1)
+    table = jnp.where(mask[:, None], new_rows, run_table)
+    return PagePool(pool.table, pool.free & ~taken), table
+
+
+def release_run(pool: PagePool, run_table: jax.Array, mask: jax.Array,
+                ) -> Tuple[PagePool, jax.Array]:
+    """Return masked slots' pinned-run pages to the shared free-list and
+    invalidate their run-table rows (−1).  The KV table is untouched —
+    callers release KV rows and runs independently (a preempted stream
+    drops both; a worst-case KV reservation without an encoder keeps
+    ``run_table`` all-(−1) and this is a no-op)."""
+    free, table = _free_rows(pool.free, run_table, mask)
+    return PagePool(pool.table, free), table
 
 
 # ---------------------------------------------------------------------------

@@ -179,6 +179,69 @@ class TestMLAAbsorbedDecode:
             np.array(lg[:, 0]), np.array(ref_logits[:, -1]), rtol=2e-3, atol=2e-3)
 
 
+class TestXattnCandidateSet:
+    """Decoder cross-attention on encoder-decoder configs is part of the
+    Eq. 2 candidate set — selectable, tapped, Fisher-scored and foldable —
+    never silently omitted."""
+
+    def _bb(self):
+        from repro import configs
+        from repro.core import lm_backbone
+        cfg = configs.get_reduced("whisper-base")
+        return cfg, lm_backbone(cfg, 64, 2)
+
+    def test_xattn_units_are_candidates(self):
+        cfg, bb = self._bb()
+        xunits = [c for c in bb.unit_costs if c.kind == "xattn"]
+        assert len(xunits) == cfg.n_layers  # every decoder layer
+        assert all(c.n_channels == cfg.n_heads for c in xunits)
+        taps = bb.make_taps(4)
+        assert taps["g0"]["xattn"].shape == (cfg.n_layers, 4, cfg.n_heads)
+        # weight-magnitude prior covers xattn rows too
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        w = bb.weight_l2(params)
+        assert all((lid, "xattn") in w for lid in range(cfg.n_layers))
+
+    def test_xattn_scores_invariant_to_padding_rows(self):
+        """Eq. 2 channel scores from a bucket-padded batch == unpadded
+        scores for the xattn taps: padded rows carry zero mask weight and
+        the normaliser is the valid count, not the padded batch."""
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        cfg, bb = self._bb()
+        n = 3
+
+        @settings(max_examples=4, deadline=None)
+        @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+               extra=st.integers(min_value=1, max_value=5))
+        def check(seed, extra):
+            rng = np.random.default_rng(seed)
+            taps = bb.make_taps(n)
+            tg = jax.tree_util.tree_map(
+                lambda x: jnp.asarray(
+                    rng.standard_normal(x.shape).astype(np.float32)), taps)
+            want = {k: np.asarray(v)
+                    for k, v in bb.fisher_reduce(tg, np.float32(n)).items()}
+            assert any(kind == "xattn" for _, kind in want)
+
+            def pad(x):  # garbage rows the mask must zero out exactly
+                g = 7.0 * rng.standard_normal(
+                    (x.shape[0], n + extra, x.shape[2])).astype(np.float32)
+                g[:, :n] = np.asarray(x)
+                return jnp.asarray(g)
+
+            tgp = jax.tree_util.tree_map(pad, tg)
+            mask = jnp.asarray(np.arange(n + extra) < n)
+            got = bb.fisher_reduce(tgp, np.float32(n), mask)
+            assert set(got) == set(want)
+            for k in want:
+                np.testing.assert_allclose(np.asarray(got[k]), want[k],
+                                           rtol=1e-4, atol=1e-7)
+
+        check()
+
+
 class TestSSMFold:
     def test_ssm_deltas_fold(self):
         """SSD-head deltas folded into weights == delta forward (exactness)."""

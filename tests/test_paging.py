@@ -185,6 +185,101 @@ def test_pool_invariants_with_asyougo_growth(seed):
     assert int(PG.free_page_count(pool)) == n_pages
 
 
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_pool_invariants_with_pinned_runs(seed):
+    """Pinned encoder runs share the KV pool's single free-list: random
+    admit (KV reserve + full-run reserve), as-you-go growth, preempt and
+    evict (both releases) schedules keep one balanced ledger — no page is
+    ever owned by a KV table row and a run row at once, runs are reserved
+    whole (a full row prefix, never grown), released runs' rows are
+    invalidated, and a full drain returns every page."""
+    rng = np.random.default_rng(seed)
+    slots = int(rng.integers(1, 5))
+    max_pages = int(rng.integers(2, 5))
+    enc_pages = int(rng.integers(1, 4))
+    n_pages = int(rng.integers(max_pages + enc_pages,
+                               slots * (max_pages + enc_pages) + 3))
+    spec = PG.PagingSpec(page_size=int(rng.integers(1, 9)),
+                         n_pages=n_pages, max_pages=max_pages)
+    pool = PG.make_pool(spec, slots)
+    run_table = jnp.full((slots, enc_pages), -1, jnp.int32)
+    held = {}  # slot -> KV page count (every held slot also pins a run)
+
+    for _ in range(40):
+        free_now = int(PG.free_page_count(pool))
+        idle = [s for s in range(slots) if s not in held]
+        growable = [s for s in held if held[s] < max_pages]
+        op = rng.random()
+        if idle and (op < 0.4 or not held):
+            # admission prices the KV demand plus the whole pinned run
+            s = int(rng.choice(idle))
+            need = int(rng.integers(1, max_pages + 1))
+            if need + enc_pages > free_now:
+                continue
+            mask = np.zeros(slots, bool)
+            mask[s] = True
+            nd = np.zeros(slots, np.int32)
+            nd[s] = need
+            pool = PG.reserve(pool, jnp.asarray(nd), jnp.asarray(mask))
+            pool, run_table = PG.reserve_run(
+                pool, run_table,
+                jnp.full((slots,), enc_pages, jnp.int32), jnp.asarray(mask))
+            held[s] = need
+        elif growable and op < 0.75:
+            # KV growth only — runs never extend
+            grow = [s for s in growable
+                    if rng.random() < 0.7][:max(free_now, 0)]
+            if not grow:
+                continue
+            mask = np.zeros(slots, bool)
+            nd = np.zeros(slots, np.int32)
+            hd = np.zeros(slots, np.int32)
+            for s in range(slots):
+                hd[s] = held.get(s, 0)
+            for s in grow:
+                mask[s] = True
+                nd[s] = 1
+            pool = PG.extend(pool, jnp.asarray(nd), jnp.asarray(mask),
+                             jnp.asarray(hd))
+            for s in grow:
+                held[s] += 1
+        elif held:
+            # preemption / eviction: KV pages and the pinned run go back
+            s = int(rng.choice(sorted(held)))
+            mask = np.zeros(slots, bool)
+            mask[s] = True
+            pool = PG.release(pool, jnp.asarray(mask))
+            pool, run_table = PG.release_run(pool, run_table,
+                                             jnp.asarray(mask))
+            del held[s]
+
+        table = np.asarray(pool.table)
+        free = np.asarray(pool.free)
+        runs = np.asarray(run_table)
+        kv_owned = table[table >= 0]
+        run_owned = runs[runs >= 0]
+        owned = np.concatenate([kv_owned, run_owned])
+        # one free-list, one ledger: no page owned twice across both kinds
+        assert len(owned) == len(set(owned.tolist()))
+        assert not free[owned].any()
+        assert len(kv_owned) == sum(held.values())
+        assert len(run_owned) == len(held) * enc_pages
+        assert int(np.asarray(pool.free).sum()) == (
+            n_pages - sum(held.values()) - len(held) * enc_pages)
+        for s in range(slots):
+            if s in held:
+                # runs are whole: reserved in full at admission
+                assert (runs[s] >= 0).all()
+            else:
+                assert (runs[s] == -1).all()  # released rows invalidated
+
+    pool = PG.release(pool, jnp.ones((slots,), bool))
+    pool, run_table = PG.release_run(pool, run_table,
+                                     jnp.ones((slots,), bool))
+    assert int(PG.free_page_count(pool)) == n_pages  # full drain: no leak
+
+
 # ---------------------------------------------------------------------------
 # fp-page parity with the contiguous cache (the serving matrix)
 # ---------------------------------------------------------------------------

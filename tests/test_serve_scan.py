@@ -350,6 +350,228 @@ def test_eager_admits_immediately_after_eviction():
     assert not eng.queue
 
 
+# ---------------------------------------------------------------------------
+# Encoder-decoder / multimodal serving (whisper-smoke, paligemma-smoke)
+# ---------------------------------------------------------------------------
+
+# whisper-smoke: cross-attention enc_out through pinned encoder-output
+# runs; paligemma-smoke: image-prefix embedding swap through the same runs
+ENC_ARCHS = ["whisper-base", "paligemma-3b"]
+
+
+def _enc_request_factory(cfg, rng, n=4, max_new=4):
+    shape = cfg.enc_feats_shape
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 7)))
+               .astype(np.int32) for _ in range(n)]
+    feats = [rng.standard_normal(shape).astype(np.float32)
+             for _ in range(n)]
+
+    def mk():
+        return [Request(uid=i, prompt=p, max_new=max_new, enc_feats=f)
+                for i, (p, f) in enumerate(zip(prompts, feats))]
+
+    return mk
+
+
+@pytest.mark.parametrize("arch", ENC_ARCHS)
+@pytest.mark.parametrize("sampled", [False, True])
+def test_encoder_decoder_parity_matrix(arch, sampled):
+    """Whisper/paligemma rows of the parity matrix: eager vs fused-B1 vs
+    fused-B8 over paged-fp KV, greedy and sampled — the pinned
+    encoder-output runs must leave token streams bit-identical across
+    the three engines, with the one-host-sync-per-chunk budget intact."""
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    mk = _enc_request_factory(cfg, np.random.default_rng(11))
+    kw = dict(slots=2, max_len=24, chunk=8, kv_paging=True, kv_page_size=4)
+    if sampled:
+        kw.update(temperature=0.7, top_k=8, sample_seed=11)
+    runs = []
+    for ekw in (dict(fused=False), dict(fused=True, prefill_block=1),
+                dict(fused=True, prefill_block=8)):
+        eng = ServeEngine(cfg, params, **ekw, **kw)
+        reqs = mk()
+        eng.run(reqs)
+        assert all(r.done for r in reqs), [r.outcome for r in reqs]
+        runs.append([(r.out, r.truncated) for r in reqs])
+        if ekw.get("fused"):
+            rep = eng.last_run_report
+            assert rep["host_syncs"] <= rep["chunks"]
+    assert runs[0] == runs[1] == runs[2]
+
+
+def _reference_greedy(cfg, params, prompt, feats, n):
+    """Teacher-forced greedy continuation through the *training* path
+    (``build_inputs`` + full ``forward_hidden``), which conditions on the
+    encoder inputs by construction — the serving oracle."""
+    import jax.numpy as jnp
+
+    toks = list(map(int, prompt))
+    for _ in range(n):
+        batch = {"tokens": jnp.asarray(np.asarray(toks, np.int32)[None])}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.asarray(feats[None])
+        else:
+            batch["image_embeds"] = jnp.asarray(feats[None])
+        x, positions, enc_out = T.build_inputs(cfg, params, batch)
+        h, _, _ = T.forward_hidden(cfg, params, x, positions,
+                                   enc_out=enc_out)
+        logits = T.unembed(cfg, params, h)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+@pytest.mark.parametrize("arch", ENC_ARCHS)
+def test_encoder_conditioning_reaches_every_decode(arch):
+    """Regression for the root bug (silently skipped cross-attention):
+    served greedy streams must equal the training-path oracle — which
+    conditions on the encoder inputs by construction — for *different*
+    encoder inputs whose oracle logits demonstrably differ.  An engine
+    that dropped ``enc_out`` (or the vlm prefix swap) could not match
+    both oracles."""
+    import jax.numpy as jnp
+
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+    shape = cfg.enc_feats_shape
+    fa = rng.standard_normal(shape).astype(np.float32)
+    fb = rng.standard_normal(shape).astype(np.float32)
+
+    def oracle_logits(f):
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        batch["frames" if cfg.is_encoder_decoder else "image_embeds"] = (
+            jnp.asarray(f[None]))
+        x, positions, enc_out = T.build_inputs(cfg, params, batch)
+        h, _, _ = T.forward_hidden(cfg, params, x, positions,
+                                   enc_out=enc_out)
+        return np.asarray(T.unembed(cfg, params, h)[0, -1], np.float32)
+
+    # the two encoder inputs produce measurably different logits, so
+    # matching both oracles requires actually threading the conditioning
+    assert np.abs(oracle_logits(fa) - oracle_logits(fb)).max() > 1e-3
+    for f in (fa, fb):
+        ref = _reference_greedy(cfg, params, prompt, f, 4)
+        for fused in (False, True):
+            eng = ServeEngine(cfg, params, slots=1, max_len=32, fused=fused)
+            r = Request(uid=0, prompt=prompt.copy(), max_new=4, enc_feats=f)
+            eng.run([r])
+            assert r.done and r.out == ref
+
+
+def test_no_xattn_decode_is_unreachable():
+    """The model layer refuses to run an encoder-decoder block without
+    encoder outputs instead of silently skipping cross-attention."""
+    cfg = configs.get_reduced("whisper-base")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = np.zeros((1, 4), np.int32)
+    x = T.embed_tokens(cfg, params, jax.numpy.asarray(tokens))
+    positions = np.broadcast_to(np.arange(4)[None], (1, 4))
+    with pytest.raises(ValueError, match="refusing to silently skip"):
+        T.forward_hidden(cfg, params, x, jax.numpy.asarray(positions))
+
+
+def test_submit_enc_feats_guard():
+    """Fail-fast admission guard: encoder-decoder/multimodal configs
+    reject requests lacking ``enc_feats`` with a typed SubmitResult (and
+    decoder-only configs reject unexpected ones) — the silent
+    no-cross-attention decode path is unreachable from submit() or run()."""
+    rng = np.random.default_rng(0)
+    for arch in ENC_ARCHS:
+        cfg = configs.get_reduced(arch)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, slots=1, max_len=24)
+        bad = Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                      max_new=2)
+        res = eng.submit(bad)
+        assert res == (False, "missing_enc_feats")
+        assert bad.outcome == "rejected" and not eng.queue
+        # run() sheds through the same guard instead of bypassing it
+        bad2 = Request(uid=1, prompt=np.asarray([1, 2], np.int32), max_new=2)
+        good = Request(
+            uid=2, prompt=np.asarray([1, 2], np.int32), max_new=2,
+            enc_feats=rng.standard_normal(
+                cfg.enc_feats_shape).astype(np.float32))
+        eng.run([bad2, good])
+        assert bad2.outcome == "rejected" and bad2.out == []
+        assert good.done
+        assert eng.last_run_report["outcomes"]["rejected"] == 1
+        # malformed (wrong-geometry) encoder inputs are a caller bug
+        with pytest.raises(ValueError, match="encoder geometry"):
+            eng.submit(Request(
+                uid=3, prompt=np.asarray([1], np.int32), max_new=1,
+                enc_feats=np.zeros((3, 5), np.float32)))
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=1, max_len=16)
+    stray = Request(uid=0, prompt=np.asarray([1, 2], np.int32), max_new=2,
+                    enc_feats=np.zeros((4, 8), np.float32))
+    assert eng.submit(stray) == (False, "unexpected_enc_feats")
+    assert stray.outcome == "rejected"
+
+
+@pytest.mark.parametrize("arch", ENC_ARCHS)
+def test_encoder_run_preempt_resume_bit_parity(arch):
+    """A forced mid-stream preemption of an encoder-decoder request must
+    resume bit-identically on both paths: the requeued stream re-attaches
+    its host-cached encoder output (never re-encodes) into a freshly
+    reserved run, so the full stream equals the unpreempted run's."""
+    from repro.serving.faults import FaultConfig
+
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    mk = _enc_request_factory(cfg, np.random.default_rng(7), max_new=6)
+    kw = dict(slots=2, max_len=32, chunk=8, prefill_block=1,
+              kv_paging=True, kv_page_size=4, reserve="asyougo")
+    runs = {}
+    for faults in (None, FaultConfig(force_preempt=((1, 2),))):
+        for fused in (False, True):
+            eng = ServeEngine(cfg, params, fused=fused, faults=faults, **kw)
+            reqs = mk()
+            eng.run(reqs)
+            assert all(r.outcome == "done" for r in reqs)
+            runs[(faults is not None, fused)] = [
+                (list(r.out), r.preempts) for r in reqs]
+    # eager == fused, with and without the injected preemption
+    assert runs[(False, False)] == runs[(False, True)]
+    assert runs[(True, False)] == runs[(True, True)]
+    # the preemption actually happened ...
+    assert runs[(True, False)][1][1] >= 1
+    # ... and the resumed stream is bit-identical to the unpreempted one
+    assert ([o for o, _ in runs[(True, False)]]
+            == [o for o, _ in runs[(False, False)]])
+
+
+@pytest.mark.parametrize("arch", ENC_ARCHS)
+def test_encoder_run_memory_accounting(arch):
+    """``memory_report()`` accounts pinned encoder runs exactly: resident
+    streams times the constant per-stream run size, and the page ledger
+    prices the runs alongside KV pages in the one shared free-list."""
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    mk = _enc_request_factory(cfg, np.random.default_rng(5), max_new=8)
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, fused=False,
+                      kv_paging=True, kv_page_size=4)
+    reqs = mk()
+    for r in reqs:
+        assert eng.submit(r).accepted
+    for _ in range(4):
+        eng.step()
+    mem = eng.memory_report()
+    assert mem["resident_streams"] == 2
+    per_page = mem["enc_arena_bytes"] // eng._enc_spec.n_pages
+    assert mem["enc_pages_per_stream"] == eng._enc_pages
+    assert mem["enc_run_bytes"] == 2 * eng._enc_pages * per_page
+    # ledger: in-use pages = KV pages held + pinned runs, both streams
+    kv_held = sum(sl.pages for sl in eng.slots if sl.req is not None)
+    assert mem["pages_in_use"] == kv_held + 2 * eng._enc_pages
+    while not all(r.terminal for r in reqs):
+        eng.step()
+    mem = eng.memory_report()
+    assert mem["enc_run_bytes"] == 0 and mem["pages_in_use"] == 0
+
+
 def test_outcome_parity_eager_vs_fused_under_faults():
     """Extends the parity matrix to terminal *outcomes*: with
     token-by-token prefill the eager loop and the fused scan agree tick

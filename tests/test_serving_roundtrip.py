@@ -23,6 +23,7 @@ ARCH_KINDS = {
     "mixtral-8x7b": {"attn", "moe"},
     "deepseek-v3-671b": {"attn", "mlp", "moe"},  # attn resolves to mla
     "mamba2-1.3b": {"ssm"},
+    "whisper-base": {"attn", "mlp", "xattn"},  # enc-dec: cross-attn folds
 }
 
 
@@ -63,14 +64,19 @@ def test_fold_matches_delta_forward(arch):
 
     toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
     batch = {"tokens": toks, "labels": toks}
-    x, positions, _ = T.build_inputs(cfg, params, batch)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            key, (2, cfg.enc_len, cfg.d_model), jnp.float32)
+    x, positions, enc_out = T.build_inputs(cfg, params, batch)
     h_delta, _, _ = T.forward_hidden(cfg, params, x, positions,
-                                     deltas=deltas, plan=policy)
+                                     deltas=deltas, plan=policy,
+                                     enc_out=enc_out)
     logits_delta = T.unembed(cfg, params, h_delta)
 
     folded = fold_deltas(cfg, params, deltas, policy)
-    x2, _, _ = T.build_inputs(cfg, folded, batch)
-    h_fold, _, _ = T.forward_hidden(cfg, folded, x2, positions)
+    x2, _, enc_out2 = T.build_inputs(cfg, folded, batch)
+    h_fold, _, _ = T.forward_hidden(cfg, folded, x2, positions,
+                                    enc_out=enc_out2)
     logits_fold = T.unembed(cfg, folded, h_fold)
 
     np.testing.assert_allclose(np.asarray(logits_delta),
