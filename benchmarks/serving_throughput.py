@@ -508,6 +508,186 @@ def run_encdec(
     }
 
 
+def run_personalise(
+    *,
+    arch: str = "micro",
+    n_users: int = 4,
+    n_requests: int = 16,
+    slots: int = 4,
+    max_new: int = 16,
+    max_len: int = 64,
+    chunk: int = 16,
+    reps: int = 2,
+    seed: int = 0,
+) -> Dict[str, object]:
+    """Per-slot delta overlays vs a folded params copy per user.
+
+    ``n_users`` distinct delta sets serve one mixed request stream two
+    ways: the **overlay** engine holds ONE shared base-params copy plus a
+    per-slot delta arena (``personalise=policy``), while the **folded**
+    baseline routes each user's requests to their own ``fold_deltas``
+    serving copy (the pre-arena deployment: N engines, N full param
+    copies).  Greedy streams are asserted bit-identical between the two,
+    so the record isolates what the shared representation buys: params
+    bytes per user (delta payload vs full copy) and a mid-serve
+    ``swap_deltas`` hot-swap latency, at comparable tokens/sec.
+    """
+    from repro.core import lm_backbone
+    from repro.core.policy import SelectedUnit, SparseUpdatePolicy
+    from repro.serving import DeltaSet, fold_deltas
+
+    cfg = _config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    bb = lm_backbone(cfg, tokens_per_batch=32, batch_size=2)
+    units, seen = [], set()
+    for c in reversed(bb.unit_costs):
+        if c.kind not in seen:
+            units.append(SelectedUnit(
+                c.layer, c.kind, tuple(sorted({0, c.n_channels - 1}))))
+            seen.add(c.kind)
+    units.sort(key=lambda u: (u.layer, u.kind))
+    policy = SparseUpdatePolicy(horizon=0, units=tuple(units))
+
+    def user_deltas(u):
+        d = bb.init_deltas(policy)
+        leaves, treedef = jax.tree_util.tree_flatten(d)
+        keys = jax.random.split(jax.random.PRNGKey(1000 + u), len(leaves))
+        leaves = [jax.random.normal(k, x.shape, x.dtype) * 0.05
+                  for k, x in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    deltas = {u: user_deltas(u) for u in range(n_users)}
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12)))
+               .astype(np.int32) for _ in range(n_requests)]
+
+    def mk(uids=None):
+        return [Request(uid=i % n_users, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)
+                if uids is None or i % n_users in uids]
+
+    paths: Dict[str, object] = {}
+    # -- overlay: one engine, one base copy, N users resident at once ------
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len, fused=True,
+                      chunk=chunk, personalise=policy)
+    for u, d in deltas.items():
+        eng.swap_deltas(u, DeltaSet.from_policy(policy, d))
+    eng.run(mk())  # warm-up: compile out of the timed passes
+    best, toks, syncs, reqs = float("inf"), 0, 0, None
+    for _ in range(reps):
+        reqs = mk()
+        adapt_mod.reset_host_sync_count()
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        best = min(best, time.perf_counter() - t0)
+        syncs = adapt_mod.host_sync_count()
+        toks = sum(len(r.out) for r in reqs)
+    assert all(r.done for r in reqs)
+    overlay_by_idx = [r.out for r in reqs]
+    rep = eng.last_run_report
+    mem = rep["memory"]
+    delta_bytes = mem["delta_arena_bytes"] // max(eng.n_slots, 1)
+    paths["overlay"] = {
+        "engines": 1,
+        "slots": slots,
+        "new_tokens": toks,
+        "seconds_total": best,
+        "tokens_per_sec": toks / best,
+        "host_syncs_per_chunk": syncs / max(rep["chunks"], 1),
+        "params_bytes_base": mem["params_bytes_folded_copy"],
+        "delta_arena_bytes": mem["delta_arena_bytes"],
+        "params_bytes_per_user": delta_bytes,
+    }
+
+    # -- folded baseline: one fold_deltas copy (and engine) per user -------
+    folded = {u: fold_deltas(cfg, params, d, policy)
+              for u, d in deltas.items()}
+    engines = {u: ServeEngine(cfg, p, slots=slots, max_len=max_len,
+                              fused=True, chunk=chunk)
+               for u, p in folded.items()}
+    for u, e in engines.items():
+        e.run(mk(uids={u}))  # warm-up
+    best = float("inf")
+    for _ in range(reps):
+        all_reqs = []
+        t0 = time.perf_counter()
+        for u, e in engines.items():
+            rs = mk(uids={u})
+            e.run(rs)
+            all_reqs.extend(rs)
+        best = min(best, time.perf_counter() - t0)
+    assert all(r.done for r in all_reqs)
+    # greedy streams depend only on (prompt, effective weights), so the
+    # overlay engine must reproduce each user's folded copy exactly
+    assert sorted(map(tuple, overlay_by_idx)) == \
+        sorted(tuple(r.out) for r in all_reqs), \
+        "overlay streams != folded-copy-per-user streams"
+    toks_f = sum(len(r.out) for r in all_reqs)
+    base_bytes = paths["overlay"]["params_bytes_base"]
+    paths["folded_copies"] = {
+        "engines": n_users,
+        "slots": slots,
+        "new_tokens": toks_f,
+        "seconds_total": best,
+        "tokens_per_sec": toks_f / best,
+        "params_bytes_per_user": base_bytes,
+    }
+
+    # -- hot-swap latency against resident streams -------------------------
+    long_reqs = [Request(uid=u, prompt=prompts[u].copy(),
+                         max_new=8 * chunk) for u in range(min(slots, 2))]
+    eng.run(long_reqs, max_ticks=chunk, chunk=chunk)  # streams now resident
+    ds0 = DeltaSet.from_policy(policy, deltas[0])
+    swap_best = float("inf")
+    for _ in range(max(3, reps)):
+        t0 = time.perf_counter()
+        eng.swap_deltas(0, ds0)
+        swap_best = min(swap_best, time.perf_counter() - t0)
+    eng.run([])  # drain the long streams
+
+    return {
+        "bench": "serving_personalise",
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "config": {"arch": arch, "n_users": n_users,
+                   "n_requests": n_requests, "slots": slots,
+                   "max_new": max_new, "max_len": max_len, "chunk": chunk},
+        "paths": paths,
+        "personalise": {
+            "swap_latency_ms": 1000.0 * swap_best,
+            "params_bytes_per_user_overlay": delta_bytes,
+            "params_bytes_per_user_folded": base_bytes,
+            "bytes_per_user_shrink":
+                base_bytes / max(delta_bytes, 1),
+            "throughput_vs_folded":
+                paths["overlay"]["tokens_per_sec"]
+                / paths["folded_copies"]["tokens_per_sec"],
+        },
+    }
+
+
+def main_personalise(quick: bool = True, out_path: str = DEFAULT_OUT
+                     ) -> List[str]:
+    kw = (dict(arch="micro", n_users=4, n_requests=16, slots=4, max_new=16,
+               max_len=64, chunk=16)
+          if quick else
+          dict(arch="qwen2-1.5b", n_users=8, n_requests=32, slots=8,
+               max_new=32, max_len=128, chunk=32))
+    record = run_personalise(**kw)
+    write_record(record, out_path)
+    out = ["path,engines,new_tokens,tokens_per_sec,params_bytes_per_user"]
+    for name, p in record["paths"].items():
+        out.append(f"{name},{p['engines']},{p['new_tokens']},"
+                   f"{p['tokens_per_sec']:.1f},{p['params_bytes_per_user']}")
+    g = record["personalise"]
+    out.append(
+        f"personalise,swap_latency_ms={g['swap_latency_ms']:.2f},"
+        f"bytes_per_user_shrink={g['bytes_per_user_shrink']:.1f}x,"
+        f"throughput_vs_folded={g['throughput_vs_folded']:.2f}x"
+        f" -> {out_path}")
+    return out
+
+
 def main_encdec(quick: bool = True, out_path: str = DEFAULT_OUT
                 ) -> List[str]:
     kw = (dict(n_requests=8, slots=2, max_new=8, max_len=32, chunk=8)
@@ -607,9 +787,14 @@ if __name__ == "__main__":
     ap.add_argument("--encdec", action="store_true",
                     help="run the encoder-decoder / multimodal serving "
                          "smoke (whisper + paligemma, pinned encoder runs)")
+    ap.add_argument("--personalise", action="store_true",
+                    help="run the per-slot delta-overlay benchmark "
+                         "(N users' deltas on one base copy vs a folded "
+                         "params copy per user, plus hot-swap latency)")
     ap.add_argument("--out", type=str, default=DEFAULT_OUT)
     args = ap.parse_args()
-    entry = (main_encdec if args.encdec
+    entry = (main_personalise if args.personalise
+             else main_encdec if args.encdec
              else main_pressure if args.pressure
              else main_paging if args.paging else main)
     for line in entry(quick=args.quick, out_path=args.out):

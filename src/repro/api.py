@@ -46,7 +46,7 @@ from .core.session import (  # noqa: F401  (façade re-exports)
 from .models import edge_cnn as _edge_cnn
 from .models.api import ArchConfig
 from .serving import (  # noqa: F401  (deploy surface)
-    FaultConfig, Request, ServeEngine, SubmitResult,
+    FaultConfig, Personaliser, Request, ServeEngine, SubmitResult,
 )
 
 __all__ = [
@@ -59,11 +59,11 @@ __all__ = [
     # backbones
     "Backbone", "backbone", "backbones", "register_backbone",
     # tasks
-    "sample_task", "sample_lm_task",
+    "sample_task", "sample_lm_task", "sample_encdec_task",
     # batch workloads
     "plan_sparse_update",
     # deploy
-    "Request", "ServeEngine", "SubmitResult", "FaultConfig",
+    "Request", "ServeEngine", "SubmitResult", "FaultConfig", "Personaliser",
     # low-level escape hatch
     "Budget",
 ]
@@ -170,6 +170,37 @@ def sample_lm_task(
     ep = lm_episode(rng, vocab, seq, max_way=max_way,
                     support_pad=support_pad, query_pad=query_pad)
     return Task.from_episode(ep, rng, max_way, name="lm-task")
+
+
+def sample_encdec_task(
+    rng: np.random.Generator,
+    cfg: ArchConfig,
+    seq: int = 32,
+    *,
+    max_way: int = 5,
+    support_pad: int = 48,
+    query_pad: int = 48,
+    **episode_kw: Any,
+) -> Task:
+    """Sample a conditioned-decoder episode for whisper/paligemma backbones.
+
+    The conditioning key and feature shape come straight from the config
+    (``"frames"``/``(enc_len, d_model)`` for encoder-decoders,
+    ``"image_embeds"``/``(n_img_tokens, img_embed_dim)`` for VLM prefixes),
+    so the sampled batches flow through the same ``build_inputs`` path the
+    serving engine uses.
+    """
+    from .data import encdec_episode
+
+    shape = cfg.enc_feats_shape
+    if shape is None:
+        raise ValueError(
+            f"{cfg.name!r} takes no encoder conditioning; use sample_lm_task")
+    key = "frames" if cfg.is_encoder_decoder else "image_embeds"
+    ep = encdec_episode(rng, cfg.vocab, seq, feat_key=key, feat_shape=shape,
+                        max_way=max_way, support_pad=support_pad,
+                        query_pad=query_pad, **episode_kw)
+    return Task.from_episode(ep, rng, max_way, name=f"encdec-{cfg.name}")
 
 
 # ---------------------------------------------------------------------------

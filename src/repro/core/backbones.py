@@ -16,6 +16,7 @@ import numpy as np
 
 from ..models import edge_cnn as E
 from ..models import layers as ML
+from ..models import overlay as OV
 from ..models import ssm as MS
 from ..models import transformer as T
 from ..models.api import ArchConfig
@@ -136,33 +137,14 @@ def lm_backbone(cfg: ArchConfig, tokens_per_batch: int, batch_size: int) -> Back
 
     def init_deltas(policy: SparseUpdatePolicy):
         # deltas follow the model dtype: keeps backward cotangents (the
-        # (B,S,K) gathered-dy tensors) out of f32; adam math is f32 anyway
+        # (B,S,K) gathered-dy tensors) out of f32; adam math is f32 anyway.
+        # Per-kind shapes come from the overlay registry (attn resolves to
+        # mla on MLA configs; xattn shares attn's projection shapes).
         dtype = jnp.dtype(cfg.dtype)
         deltas: Dict[str, Dict[str, Any]] = {}
         for u in policy.units:
-            lid, kind, k = u.layer, u.kind, u.n_channels
-            if kind == "attn":
-                d = (
-                    ML.mla_delta_init(cfg, k, dtype)
-                    if cfg.mla
-                    else ML.attn_delta_init(cfg, k, dtype)
-                )
-            elif kind == "xattn":
-                # cross-attention shares the self-attention projection
-                # shapes (K/V just read encoder rows), so the same delta init
-                d = ML.attn_delta_init(cfg, k, dtype)
-            elif kind == "ssm":
-                d = MS.ssd_delta_init(cfg, k, dtype)
-            elif kind == "moe":
-                d = ML.moe_delta_init(cfg, k, dtype)
-            else:
-                f = (
-                    cfg.dense_d_ff
-                    if (cfg.n_experts and lid < cfg.moe_start_layer)
-                    else cfg.d_ff
-                )
-                d = ML.mlp_delta_init(cfg.d_model, k, cfg.act, dtype)
-            deltas.setdefault(f"L{lid}", {})[kind] = d
+            d = OV.delta_init(cfg, u.layer, u.kind, u.n_channels, dtype)
+            deltas.setdefault(f"L{u.layer}", {})[u.kind] = d
         return deltas
 
     def weight_l2(params) -> Dict[Tuple[int, str], np.ndarray]:

@@ -195,9 +195,16 @@ class Task:
     def from_episode(cls, ep, rng: np.random.Generator, max_way: int,
                      name: str = "") -> "Task":
         """Build a Task from a ``repro.data`` Episode (vision or LM)."""
-        from ..data import augment_lm_support, augment_support
+        from ..data import (
+            augment_encdec_support, augment_lm_support, augment_support,
+        )
 
-        augment = augment_support if "images" in ep.support else augment_lm_support
+        if "images" in ep.support:
+            augment = augment_support
+        elif "frames" in ep.support or "image_embeds" in ep.support:
+            augment = augment_encdec_support
+        else:
+            augment = augment_lm_support
         return cls(
             name=name or getattr(ep, "domain", "task"),
             support={k: jnp.asarray(v) for k, v in ep.support.items()},

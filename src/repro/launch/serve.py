@@ -71,6 +71,15 @@ def main() -> None:
     ap.add_argument("--device", default="jetson-nano",
                     help="device profile preset used with --adapt")
     ap.add_argument("--adapt-iters", type=int, default=10)
+    ap.add_argument("--personalise", action="store_true",
+                    help="per-slot delta arena + online refresh: requests "
+                         "are spread over --users users, finished streams "
+                         "feed a background adapt_many pass between chunks "
+                         "and refreshed delta sets hot-swap in without "
+                         "draining (int8-EF compressed exchange)")
+    ap.add_argument("--users", type=int, default=4,
+                    help="distinct users sharing the engine with "
+                         "--personalise (uid = request index mod users)")
     args = ap.parse_args()
 
     cfg = configs.preset_config(args.arch, args.preset)
@@ -89,6 +98,25 @@ def main() -> None:
         page_budget = max(1, int(stripe * args.pressure))
         print(f"[serve] pressure {args.pressure}x: {page_budget} pages "
               f"(fixed-stripe capacity {stripe})")
+    rng = np.random.default_rng(0)
+    session = policy = None
+    if args.personalise:
+        # one probe adaptation fixes the shared delta structure: every
+        # user's refresh runs policy_override=policy, so arena rows stay
+        # template-compatible across hot-swaps
+        bb = api.backbone(args.arch, preset=args.preset, batch_size=48,
+                          seq=64)
+        session = api.TinyTrainSession(bb, params, max_way=8)
+        probe = session.adapt(api.sample_lm_task(rng, cfg.vocab, seq=64,
+                                                 max_way=5),
+                              api.device_profile(args.device), iters=1)
+        if probe.policy.n_units == 0:
+            print(f"[serve] WARNING: {args.device} budget selected no "
+                  "units; --personalise disabled, serving base weights")
+        else:
+            policy = probe.policy
+            print(f"[serve] personalising {args.users} users under "
+                  f"{args.device}: {policy.describe()}")
     eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                           fused=not args.eager, chunk=args.chunk,
                           prefill_block=args.prefill_block,
@@ -100,8 +128,8 @@ def main() -> None:
                           reserve=args.reserve,
                           deadline_ticks=args.deadline_ticks,
                           queue_limit=args.queue_limit,
-                          faults=faults)
-    rng = np.random.default_rng(0)
+                          faults=faults,
+                          personalise=policy)
 
     if args.adapt:
         bb = api.backbone(args.arch, preset=args.preset, batch_size=48, seq=64)
@@ -131,15 +159,30 @@ def main() -> None:
 
     reqs = [
         api.Request(
-            uid=i,
+            uid=i % args.users if policy is not None else i,
             prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24))).astype(np.int32),
             max_new=args.max_new,
             enc_feats=enc_feats())
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
-    eng.run(reqs)
-    dt = time.perf_counter() - t0
+    if policy is not None:
+        pers = api.Personaliser(session, eng, policy,
+                                profile=args.device,
+                                iters=args.adapt_iters)
+        online = pers.run_online(reqs)
+        dt = time.perf_counter() - t0
+        for ref in online["refreshes"]:
+            print(f"[serve] refresh {ref['round']}: users {ref['users']}, "
+                  f"{ref['resident_rows_swapped']} resident rows swapped, "
+                  f"wire {ref['payload_bytes_wire']} B vs f32 "
+                  f"{ref['payload_bytes_f32']} B "
+                  f"({ref['payload_ratio']:.1f}x), adapt "
+                  f"{ref['adapt_seconds']:.2f}s, swap "
+                  f"{1000 * ref['swap_seconds']:.1f}ms")
+    else:
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in reqs)
     prompt_toks = sum(len(r.prompt) for r in reqs)
     mode = ("eager" if args.eager else
@@ -177,6 +220,11 @@ def main() -> None:
               f"MiB across {args.slots} slots "
               f"({mem['kv_bytes_per_stream']/2**10:.1f} KiB/stream), "
               f"peak {peak} resident streams")
+    if mem.get("delta_arena_bytes"):
+        print(f"[serve] delta arena: {mem['delta_arena_bytes']/2**10:.1f} "
+              f"KiB ({mem['delta_bytes_per_stream']/2**10:.2f} KiB/stream) "
+              f"vs {mem['params_bytes_folded_copy']/2**20:.2f} MiB per "
+              "folded params copy")
     if mem.get("enc_tokens"):
         per = (f"{mem['enc_pages_per_stream']} pages/stream"
                if mem["kv_paging"] else "fixed stripe")

@@ -100,18 +100,27 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Channel-delta helpers (TinyTrain sparse update)
+# Channel-delta helpers (TinyTrain sparse update) — the column math lives in
+# the unit-kind overlay registry (models/overlay.py), shared with the
+# serving-side fold and the per-slot runtime overlay.
 # ---------------------------------------------------------------------------
 
+from . import overlay as OV
+from .overlay import delta_in_rows, delta_out_cols  # noqa: F401  (re-export)
 
-def delta_out_cols(y: jax.Array, x: jax.Array, dw: jax.Array, idx: np.ndarray) -> jax.Array:
-    """y[..., idx] += x @ dw  (thin GEMM + static scatter)."""
-    return y.at[..., idx].add((x @ dw.astype(x.dtype)))
+_head_cols = OV.head_cols
 
 
-def delta_in_rows(y: jax.Array, h: jax.Array, dw: jax.Array, idx: np.ndarray) -> jax.Array:
-    """y += h[..., idx] @ dw (static gather + thin GEMM)."""
-    return y + h[..., idx] @ dw.astype(h.dtype)
+def bmm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w``, or per-sample batched weights when ``w`` carries a leading
+    slot axis ``(B, d, f)`` — the serving engine's per-slot delta overlay.
+    The batched einsum contracts each row against its own weight matrix and
+    is bitwise-identical to the shared matmul when the slot weights are
+    broadcast copies (row-stability relied on by the B1-vs-B8 parity suite).
+    """
+    if w.ndim == 2:
+        return x @ w
+    return jnp.einsum("b...d,bdf->b...f", x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -149,18 +158,18 @@ def mlp_apply(
     idx: Optional[np.ndarray] = None,
 ) -> jax.Array:
     if act in ("swiglu", "geglu"):
-        g = x @ p["w_gate"]
-        u = x @ p["w_up"]
+        g = bmm(x, p["w_gate"])
+        u = bmm(x, p["w_up"])
         if delta is not None:
             g = delta_out_cols(g, x, delta["w_gate"], idx)
             u = delta_out_cols(u, x, delta["w_up"], idx)
         h = _act(act, g) * u
     else:
-        h = x @ p["w_up"]
+        h = bmm(x, p["w_up"])
         if delta is not None:
             h = delta_out_cols(h, x, delta["w_up"], idx)
         h = _act(act, h)
-    y = h @ p["w_down"]
+    y = bmm(h, p["w_down"])
     if delta is not None:
         y = delta_in_rows(y, h, delta["w_down"], idx)
     return y
@@ -203,11 +212,6 @@ def attn_delta_init(cfg, n_sel_heads: int, dtype=jnp.float32) -> Params:
         "wq": jnp.zeros((cfg.d_model, k), dtype),
         "wo": jnp.zeros((k, cfg.d_model), dtype),
     }
-
-
-def _head_cols(idx: np.ndarray, head_dim: int) -> np.ndarray:
-    """Flat column indices covering whole heads for static scatter/gather."""
-    return (idx[:, None] * head_dim + np.arange(head_dim)[None, :]).reshape(-1)
 
 
 def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
@@ -445,7 +449,7 @@ def attention_apply(
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
-    q = x @ p["wq"]
+    q = bmm(x, p["wq"])
     if "bq" in p:
         q = q + p["bq"]
     if delta is not None:
@@ -571,7 +575,7 @@ def attention_apply(
                 )
 
     out_flat = out.reshape(b, s, h * dh)
-    y = out_flat @ p["wo"]
+    y = bmm(out_flat, p["wo"])
     if delta is not None:
         cols = _head_cols(head_idx, dh)
         y = delta_in_rows(y, out_flat, delta["wo"], cols)
@@ -631,7 +635,7 @@ def mla_apply(
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
 
     cq = rms_norm(x @ p["w_dq"], p["q_norm"])
-    q = cq @ p["w_uq"]
+    q = bmm(cq, p["w_uq"])
     if delta is not None:
         cols = _head_cols(head_idx, dn + dr)
         q = delta_out_cols(q, cq, delta["w_uq"], cols)
@@ -730,7 +734,7 @@ def mla_apply(
         out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)
         out_flat = out.reshape(b, s, h * dv)
 
-    y = out_flat @ p["wo"]
+    y = bmm(out_flat, p["wo"])
     if delta is not None:
         cols = _head_cols(head_idx, dv)
         y = delta_in_rows(y, out_flat, delta["wo"], cols)
@@ -798,7 +802,10 @@ def moe_apply(
     """
     from ..dist import context as _ctx
 
-    if _ctx.get("moe_row_dispatch"):
+    if _ctx.get("moe_row_dispatch") or p["w_gate"].ndim == 4:
+        # per-slot overlay weights (B, E, D, F) need row-local queues: each
+        # slot's tokens must hit its own expert stack.  The row dispatch is
+        # bitwise-identical to the global one at drop_free capacities.
         return _moe_apply_rows(p, x, cfg, delta=delta, expert_idx=expert_idx,
                                tap=tap, drop_free=drop_free)
     b, s, d = x.shape
@@ -927,10 +934,19 @@ def _moe_apply_rows(
     ).reshape(b, e, cap, d)
     buf = _ctx.constrain(buf, _ctx.get("moe_dispatch_spec"))
 
-    gbuf = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
-    ubuf = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    # expert weights: (E, D, F) shared, or (B, E, D, F) per-slot overlay
+    def ein_in(bf, w):
+        eq = "becd,edf->becf" if w.ndim == 3 else "becd,bedf->becf"
+        return jnp.einsum(eq, bf, w)
+
+    def ein_out(hh, w):
+        eq = "becf,efd->becd" if w.ndim == 3 else "becf,befd->becd"
+        return jnp.einsum(eq, hh, w)
+
+    gbuf = ein_in(buf, p["w_gate"])
+    ubuf = ein_in(buf, p["w_up"])
     h = jax.nn.silu(gbuf) * ubuf
-    y_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    y_buf = ein_out(h, p["w_down"])
 
     if delta is not None:
         xb_sel = buf[:, expert_idx]  # (b, ksel, cap, d)
@@ -958,3 +974,24 @@ def _moe_apply_rows(
     if "shared" in p:
         y = y + mlp_apply(p["shared"], x.reshape(b * s, d), "swiglu").reshape(b, s, d)
     return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Register per-kind delta initialisers with the overlay registry — the
+# shapes live here, the dispatch (and the rest of the per-kind math) lives
+# in models/overlay.py.
+# ---------------------------------------------------------------------------
+
+OV.set_delta_init(
+    "mlp", lambda cfg, lid, k, dtype: mlp_delta_init(
+        cfg.d_model, k, cfg.act, dtype))
+OV.set_delta_init(
+    "attn", lambda cfg, lid, k, dtype: attn_delta_init(cfg, k, dtype))
+# cross-attention shares the self-attention projection shapes (K/V just
+# read encoder rows), so the same delta init
+OV.set_delta_init(
+    "xattn", lambda cfg, lid, k, dtype: attn_delta_init(cfg, k, dtype))
+OV.set_delta_init(
+    "mla", lambda cfg, lid, k, dtype: mla_delta_init(cfg, k, dtype))
+OV.set_delta_init(
+    "moe", lambda cfg, lid, k, dtype: moe_delta_init(cfg, k, dtype))

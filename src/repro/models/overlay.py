@@ -1,0 +1,310 @@
+"""One delta representation from adaptation to serving: the unit-kind
+overlay registry.
+
+TinyTrain deltas are column/row/expert-slice edits of a handful of weight
+matrices: ``W ⊕ scatter(ΔW, idx)``.  Historically that math lived in three
+places — the adaptation forward (per-layer ``delta_out_cols`` calls with
+hand-computed head columns), the serving fold (`fold_deltas` scatter-add
+folders, one per kind) and the delta initialisers — each repeating the same
+per-kind column bookkeeping.  This module collapses them into one
+declarative spec per unit kind, from which every consumer derives:
+
+- ``fold``: in-place scatter-add into a *stacked* parameter group (the
+  offline ``Adaptation.fold_into`` deployment path);
+- ``slot_weights``: per-slot effective weights ``W_eff[b] = W ⊕
+  scatter(ΔW_b, idx_b)`` built with a vmapped scatter over a slot axis —
+  the serving engine's runtime overlay.  The scatter adds the exact same
+  addends at the exact same positions as ``fold``, and batched matmuls
+  against the stacked weights are bitwise identical to the shared-weight
+  matmul (see tests/test_personalise.py), so overlay streams match the
+  folded-params oracle bit for bit;
+- ``unit_cols``: the channel-index -> weight-column expansion consumed by
+  the adaptation-side sparse forward (``layers.attention_apply`` etc.);
+- ``delta_init``: the per-kind zero delta pack (registered by the model
+  modules at import, since the shapes live there).
+
+A spec declares, per edited weight matrix, an :class:`Edit` with a
+``mode``:
+
+- ``"out"``: selected channels are output *columns* — fold adds
+  ``ΔW (D, K)`` at ``W[:, cols]``;
+- ``"in"``: selected channels are input *rows* — fold adds ``ΔW (K, D)``
+  at ``W[cols, :]``;
+- ``"lead"``: selected channels index the leading axis (MoE experts) —
+  fold adds ``ΔW (K, ...)`` at ``W[idx]``.
+
+New unit kinds (or external model families) plug in with one
+:func:`register_unit_overlay` call; the legacy
+:func:`register_unit_folder` decorator keeps accepting a raw fold
+function for folders that do not fit the declarative shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def head_cols(idx, head_dim: int):
+    """Expand head indices to flat column indices: head h -> its head_dim
+    contiguous columns.  Works for static numpy and traced jnp indices."""
+    return (idx[:, None] * head_dim + np.arange(head_dim)[None, :]).reshape(-1)
+
+
+def delta_out_cols(y: jax.Array, x: jax.Array, dw: jax.Array, idx) -> jax.Array:
+    """y[..., idx] += x @ dw — sparse output-channel delta (dw: (D, K))."""
+    return y.at[..., idx].add(x @ dw.astype(x.dtype))
+
+
+def delta_in_rows(y: jax.Array, h: jax.Array, dw: jax.Array, idx) -> jax.Array:
+    """y += h[..., idx] @ dw — sparse input-channel delta (dw: (K, D))."""
+    return y + h[..., idx] @ dw.astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Declarative per-kind specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Edit:
+    """One edited weight matrix of a unit kind."""
+
+    delta_name: str  # key in the unit's delta pack
+    param_name: str  # key in the stack's parameter dict
+    mode: str  # out | in | lead
+    # channel indices -> weight columns (None: channels index directly)
+    cols: Optional[Callable[[Any, Any], Any]] = None
+    optional: bool = False  # skip silently when absent from the delta pack
+
+    def col_idx(self, cfg, idx):
+        return idx if self.cols is None else self.cols(cfg, idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitOverlay:
+    """Fold + runtime-apply for one unit kind, derived from its edits."""
+
+    kind: str
+    param_key: str  # key of the parameter sub-dict inside a stack group
+    edits: Tuple[Edit, ...]
+    # zero delta pack: delta_init(cfg, layer_id, n_channels, dtype);
+    # registered by the model modules at import (shapes live there)
+    delta_init: Optional[Callable[..., Params]] = None
+
+    # -- offline fold (stacked params, layer j, static numpy idx) ----------
+
+    def fold(self, cfg, stack: Params, j: int, d: Params, idx) -> None:
+        sub = stack[self.param_key]
+        for e in self.edits:
+            if e.optional and e.delta_name not in d:
+                continue
+            w = sub[e.param_name]
+            dw = d[e.delta_name].astype(w.dtype)
+            cols = e.col_idx(cfg, idx)
+            if e.mode == "out":
+                # advanced idx (j, cols) split by the slice -> (K, D) rows
+                sub[e.param_name] = w.at[j, :, cols].add(dw.T)
+            elif e.mode == "in":
+                sub[e.param_name] = w.at[j, cols, :].add(dw)
+            elif e.mode == "lead":
+                sub[e.param_name] = w.at[j, cols].add(dw)
+            else:  # pragma: no cover - specs are module-level constants
+                raise ValueError(f"unknown edit mode {e.mode!r}")
+
+    # -- runtime per-slot overlay (sliced params, traced idx) --------------
+
+    def slot_weights(self, cfg, params: Params, d_stack: Params,
+                     idx_stack) -> Params:
+        """Per-slot effective weights for one layer's parameter dict.
+
+        ``params`` is the layer-sliced dict (weights without the stack
+        axis), ``d_stack`` the slot-stacked delta pack ((B, ...) leaves)
+        and ``idx_stack`` the slot-stacked channel indices (B, K).
+        Returns a copy of ``params`` where every edited weight gains a
+        leading slot axis: ``W_eff[b] = W ⊕ scatter(ΔW_b, cols(idx_b))``
+        — the same scatter-add the fold performs, vmapped over slots.
+        """
+        out = dict(params)
+        for e in self.edits:
+            if e.optional and e.delta_name not in d_stack:
+                continue
+            w = out[e.param_name]
+            dws = d_stack[e.delta_name]
+
+            def one(dw, idx, _w=w, _e=e):
+                dw = dw.astype(_w.dtype)
+                cols = _e.col_idx(cfg, idx)
+                if _e.mode == "out":
+                    return _w.at[:, cols].add(dw)
+                if _e.mode == "in":
+                    return _w.at[cols, :].add(dw)
+                return _w.at[cols].add(dw)  # lead
+
+            out[e.param_name] = jax.vmap(one)(dws, idx_stack)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_UNIT_OVERLAYS: Dict[str, Any] = {}
+
+
+def register_unit_overlay(spec: UnitOverlay) -> UnitOverlay:
+    _UNIT_OVERLAYS[spec.kind] = spec
+    return spec
+
+
+def register_unit_folder(kind: str):
+    """Register ``fn(cfg, stack, j, d, idx)`` as the folder for a unit kind.
+
+    Legacy escape hatch for folders that do not fit the declarative
+    :class:`Edit` shape: the kind folds offline but has no runtime
+    ``slot_weights`` overlay (the serving engine rejects it for per-slot
+    personalisation with a clear error).
+    """
+
+    def deco(fn):
+        _UNIT_OVERLAYS[kind] = fn
+        return fn
+
+    return deco
+
+
+def get_overlay(kind: str):
+    try:
+        return _UNIT_OVERLAYS[kind]
+    except KeyError:
+        raise ValueError(
+            f"no unit folder registered for kind {kind!r} "
+            f"(known: {sorted(_UNIT_OVERLAYS)})") from None
+
+
+def resolve_kind(cfg, kind: str) -> str:
+    """Resolve a policy unit kind to its registry key (attn splits on MLA)."""
+    if kind == "attn" and getattr(cfg, "mla", False):
+        return "mla"
+    return kind
+
+
+def unit_cols(cfg, kind: str, param_name: str):
+    """The channel->column expansion of one edited weight, shared with the
+    adaptation-side sparse forward: ``unit_cols(cfg, 'attn', 'wq')(idx)``."""
+    spec = get_overlay(resolve_kind(cfg, kind))
+    for e in spec.edits:
+        if e.param_name == param_name:
+            return lambda idx: e.col_idx(cfg, idx)
+    raise ValueError(
+        f"kind {kind!r} has no edit for weight {param_name!r} "
+        f"(edits: {[e.param_name for e in spec.edits]})")
+
+
+def set_delta_init(kind: str, fn: Callable[..., Params]) -> None:
+    """Attach ``delta_init(cfg, layer_id, n_channels, dtype)`` to a kind
+    (called by the model modules at import — the shapes live there)."""
+    spec = _UNIT_OVERLAYS[kind]
+    _UNIT_OVERLAYS[kind] = dataclasses.replace(spec, delta_init=fn)
+
+
+def delta_init(cfg, layer_id: int, kind: str, n_channels: int, dtype) -> Params:
+    """Zero delta pack for one selected unit, via the registry."""
+    spec = get_overlay(resolve_kind(cfg, kind))
+    if getattr(spec, "delta_init", None) is None:
+        raise ValueError(f"kind {kind!r} registered without a delta_init")
+    return spec.delta_init(cfg, layer_id, n_channels, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Built-in unit kinds.  Column math appears here ONCE; the fold, the
+# runtime slot overlay and the adaptation forward all read it from the
+# registry.  `attn` and `xattn` share one edit tuple — the historical
+# `_fold_attn`/`_fold_xattn` pair differed only in the param-dict key.
+# ---------------------------------------------------------------------------
+
+_ATTN_EDITS = (
+    Edit("wq", "wq", "out",
+         lambda cfg, idx: head_cols(idx, cfg.head_dim)),
+    Edit("wo", "wo", "in",
+         lambda cfg, idx: head_cols(idx, cfg.head_dim)),
+)
+
+register_unit_overlay(UnitOverlay("mlp", "mlp", (
+    Edit("w_gate", "w_gate", "out", optional=True),
+    Edit("w_up", "w_up", "out"),
+    Edit("w_down", "w_down", "in"),
+)))
+register_unit_overlay(UnitOverlay("attn", "attn", _ATTN_EDITS))
+register_unit_overlay(UnitOverlay("xattn", "xattn", _ATTN_EDITS))
+register_unit_overlay(UnitOverlay("mla", "attn", (
+    Edit("w_uq", "w_uq", "out",
+         lambda cfg, idx: head_cols(idx, cfg.qk_nope_dim + cfg.qk_rope_dim)),
+    Edit("wo", "wo", "in",
+         lambda cfg, idx: head_cols(idx, cfg.v_head_dim)),
+)))
+register_unit_overlay(UnitOverlay("ssm", "ssm", (
+    Edit("w_z", "w_z", "out",
+         lambda cfg, idx: head_cols(idx, cfg.ssm_head_dim)),
+    Edit("w_x", "w_x", "out",
+         lambda cfg, idx: head_cols(idx, cfg.ssm_head_dim)),
+    Edit("w_out", "w_out", "in",
+         lambda cfg, idx: head_cols(idx, cfg.ssm_head_dim)),
+)))
+register_unit_overlay(UnitOverlay("moe", "moe", (
+    Edit("w_gate", "w_gate", "lead"),
+    Edit("w_up", "w_up", "lead"),
+    Edit("w_down", "w_down", "lead"),
+)))
+
+
+# ---------------------------------------------------------------------------
+# Fold: the deployment path (W ⊕ scatter(ΔW, idx) into a serving copy)
+# ---------------------------------------------------------------------------
+
+
+def fold_deltas(cfg, params: Any, deltas: Any, policy) -> Any:
+    """Fold TinyTrain deltas into a serving copy: W += scatter(ΔW, idx)."""
+    from . import transformer as T  # late: transformer imports layers->here
+
+    groups = T.stack_groups(cfg)
+    lid_to_group = {}
+    for gi, (_, ids) in enumerate(groups):
+        for j, lid in enumerate(ids):
+            lid_to_group[lid] = (gi, j)
+    new_params = jax.tree_util.tree_map(lambda x: x, params)
+
+    for u in policy.units:
+        gi, j = lid_to_group[u.layer]
+        stack = new_params["stacks"][f"g{gi}"]
+        d = deltas[f"L{u.layer}"][u.kind]
+        idx = np.asarray(u.channels, np.int32)
+        spec = get_overlay(resolve_kind(cfg, u.kind))
+        if isinstance(spec, UnitOverlay):
+            spec.fold(cfg, stack, j, d, idx)
+        else:  # legacy raw folder function
+            spec(cfg, stack, j, d, idx)
+    return new_params
+
+
+def slot_params(cfg, kind: str, params: Params, d_stack: Params,
+                idx_stack) -> Params:
+    """Per-slot effective weights for one layer (serving runtime overlay).
+
+    ``kind`` is the *policy* kind (attn resolves to mla on MLA configs);
+    ``params`` the layer-sliced parameter dict for the unit's param group.
+    Raises for kinds registered without a declarative spec — those can
+    fold offline but cannot overlay per slot.
+    """
+    spec = get_overlay(resolve_kind(cfg, kind))
+    if not isinstance(spec, UnitOverlay):
+        raise ValueError(
+            f"kind {kind!r} has no per-slot overlay (registered via the "
+            "legacy register_unit_folder; use register_unit_overlay to "
+            "serve it per slot)")
+    return spec.slot_weights(cfg, params, d_stack, idx_stack)

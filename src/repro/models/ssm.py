@@ -17,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .layers import dense_init, delta_in_rows, delta_out_cols, rms_norm
+from . import overlay as OV
+from .layers import bmm, dense_init, delta_in_rows, delta_out_cols, rms_norm
+from .overlay import head_cols as _head_cols
 
 Params = Dict[str, Any]
 
@@ -48,10 +50,6 @@ def ssd_delta_init(cfg, n_sel_heads: int, dtype=jnp.float32) -> Params:
         "w_x": jnp.zeros((cfg.d_model, k), dtype),
         "w_out": jnp.zeros((k, cfg.d_model), dtype),
     }
-
-
-def _head_cols(idx: np.ndarray, head_dim: int) -> np.ndarray:
-    return (idx[:, None] * head_dim + np.arange(head_dim)[None, :]).reshape(-1)
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
@@ -171,8 +169,8 @@ def ssd_apply(
     b, s, d = x.shape
     di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
 
-    z = x @ p["w_z"]
-    xs = x @ p["w_x"]
+    z = bmm(x, p["w_z"])
+    xs = bmm(x, p["w_x"])
     if delta is not None:
         cols = _head_cols(head_idx, hd)
         z = delta_out_cols(z, x, delta["w_z"], cols)
@@ -246,8 +244,12 @@ def ssd_apply(
     y = y.reshape(b, s, di)
     gate = jax.nn.silu(z.astype(jnp.float32))
     y = rms_norm((y.astype(jnp.float32) * gate).astype(x.dtype), p["norm_w"])
-    out = y @ p["w_out"]
+    out = bmm(y, p["w_out"])
     if delta is not None:
         cols = _head_cols(head_idx, hd)
         out = delta_in_rows(out, y, delta["w_out"], cols)
     return out, new_cache
+
+
+OV.set_delta_init(
+    "ssm", lambda cfg, lid, k, dtype: ssd_delta_init(cfg, k, dtype))

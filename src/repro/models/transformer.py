@@ -28,6 +28,7 @@ import numpy as np
 from jax import lax
 
 from . import layers as L
+from . import overlay as OV
 from . import ssm as S
 from .api import ArchConfig
 
@@ -232,24 +233,39 @@ def _apply_block(
     taps: Optional[Dict[str, jax.Array]] = None,
     valid: Optional[jax.Array] = None,
     drop_free: bool = False,
+    overlay: Optional[Dict[str, Tuple[Any, Any]]] = None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """One decoder layer.  Returns (x, new_cache, moe_aux).
 
     ``valid`` (B, S) enables the mixers' block-prefill cache mode (per-slot
     multi-token cache writes with ragged-tail masking); ``drop_free`` sizes
     MoE expert queues so routed tokens are never dropped (serving parity).
+
+    ``overlay`` maps this layer's policy unit kinds to slot-stacked
+    ``(delta_pack, channel_idx)`` pairs (leaves carry a leading slot axis):
+    the affected weights are replaced with per-slot effective weights
+    ``W ⊕ scatter(ΔW_b, idx_b)`` via the unit-kind overlay registry — the
+    serving engine's per-user personalisation path (``deltas``/``chan_idx``
+    are the adaptation path; the two are not combined).
     """
     bk, fk = block_kind(cfg, layer), ffn_kind(cfg, layer)
     aux = jnp.zeros((), jnp.float32)
     deltas = deltas or {}
     chan_idx = chan_idx or {}
     taps = taps or {}
+    ov = overlay or {}
     new_cache: Optional[Params] = dict(cache) if cache is not None else None
+
+    def eff(kind: str, key: str) -> Params:
+        if kind in ov:
+            d_stk, i_stk = ov[kind]
+            return OV.slot_params(cfg, kind, p[key], d_stk, i_stk)
+        return p[key]
 
     h = L.apply_norm(cfg.norm, p["norm1"], x)
     if bk == "mla":
         y, c = L.mla_apply(
-            p["attn"], h, cfg, positions=positions,
+            eff("attn", "attn"), h, cfg, positions=positions,
             cache=cache.get("attn") if cache else None,
             delta=deltas.get("attn"), head_idx=chan_idx.get("attn"),
             valid=valid,
@@ -258,7 +274,7 @@ def _apply_block(
             new_cache["attn"] = c
     elif bk == "attn":
         y, c = L.attention_apply(
-            p["attn"], h, cfg, positions=positions,
+            eff("attn", "attn"), h, cfg, positions=positions,
             cache=cache.get("attn") if cache else None,
             delta=deltas.get("attn"), head_idx=chan_idx.get("attn"),
             valid=valid,
@@ -267,7 +283,7 @@ def _apply_block(
             new_cache["attn"] = c
     else:
         y, c = S.ssd_apply(
-            p["ssm"], h, cfg,
+            eff("ssm", "ssm"), h, cfg,
             cache=cache.get("ssm") if cache else None,
             delta=deltas.get("ssm"), head_idx=chan_idx.get("ssm"),
             valid=valid,
@@ -285,7 +301,7 @@ def _apply_block(
         h = L.apply_norm(cfg.norm, p["norm2"], x)
         if fk == "moe":
             y, aux = L.moe_apply(
-                p["moe"], h, cfg,
+                eff("moe", "moe"), h, cfg,
                 delta=deltas.get("moe"), expert_idx=chan_idx.get("moe"),
                 tap=taps.get("ffn"), drop_free=drop_free,
             )
@@ -295,7 +311,7 @@ def _apply_block(
                 y = _mlp_tapped(p["mlp"], h, cfg.act, taps["ffn"])
             else:
                 y = L.mlp_apply(
-                    p["mlp"], h, cfg.act,
+                    eff("mlp", "mlp"), h, cfg.act,
                     delta=deltas.get("mlp"), idx=chan_idx.get("mlp"),
                 )
         x = x + y
@@ -313,7 +329,8 @@ def _apply_block(
             )
         h = L.apply_norm(cfg.norm, p["norm_x"], x)
         y, _ = L.attention_apply(
-            p["xattn"], h, cfg, positions=positions, cross_hidden=enc_out,
+            eff("xattn", "xattn"), h, cfg, positions=positions,
+            cross_hidden=enc_out,
             delta=deltas.get("xattn"), head_idx=chan_idx.get("xattn"),
         )
         if "xattn" in taps:
@@ -427,6 +444,7 @@ def forward_hidden(
     chan_idx: Optional[Dict[int, Dict[str, jax.Array]]] = None,
     seq_valid: Optional[jax.Array] = None,
     drop_free: bool = False,
+    overlay: Optional[Dict[int, Dict[str, Tuple[Any, Any]]]] = None,
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
     """Run the decoder stacks.  Exactly one of (deltas+plan, taps, caches)
     modes may be active; all may be None for plain inference.
@@ -440,7 +458,12 @@ def forward_hidden(
     mixer writes its slot's left-aligned valid tokens at that slot's own
     cache cursor (ragged tails masked) instead of assuming batch-aligned
     sequence positions.  ``drop_free`` switches MoE layers to
-    never-drop expert capacity (the serving contract)."""
+    never-drop expert capacity (the serving contract).
+
+    ``overlay`` ({layer: {kind: (delta_pack, channel_idx)}}, slot-stacked
+    leaves) applies per-slot effective weights on the plan's selected
+    layers — the serving engine's personalisation path.  Requires ``plan``
+    so those layers get their own (non-scanned) segments."""
     groups = stack_groups(cfg)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
@@ -494,6 +517,7 @@ def forward_hidden(
                         cache=cache_in, enc_out=enc_out, deltas=d_,
                         chan_idx=ci_, taps=tap, valid=seq_valid,
                         drop_free=drop_free,
+                        overlay=(overlay or {}).get(lid),
                     )
 
                 if remat:
@@ -693,9 +717,10 @@ def pooled_features(
 ) -> jax.Array:
     """Mean-pooled final hidden state — the backbone feature map f(x) used by
     ProtoNet (Sec. 2.1) for few-shot episodic adaptation of LM backbones."""
-    x, positions, _ = build_inputs(cfg, params, batch)
+    x, positions, enc_out = build_inputs(cfg, params, batch)
     h, _, _ = forward_hidden(cfg, params, x, positions, deltas=deltas,
-                             plan=plan, taps=taps, chan_idx=chan_idx)
+                             plan=plan, taps=taps, enc_out=enc_out,
+                             chan_idx=chan_idx)
     mask = (batch["tokens"] >= 0).astype(h.dtype)
     if cfg.family == "vlm":
         pad = jnp.ones((h.shape[0], h.shape[1] - mask.shape[1]), h.dtype)
@@ -841,6 +866,8 @@ def decode_step(
     *,
     embed_prefix: Optional[jax.Array] = None,
     drop_free: bool = False,
+    overlay: Optional[Dict[int, Dict[str, Tuple[Any, Any]]]] = None,
+    plan=None,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decode step: new token -> logits over vocab, updated caches.
 
@@ -852,6 +879,9 @@ def decode_step(
     positions ``< P`` (the VLM image prefix): the engine feeds placeholder
     tokens there and this swap reproduces ``build_inputs``'s concat — image
     rows enter *without* the gemma sqrt(d) token-embedding scale.
+
+    ``overlay`` + ``plan`` decode each slot against its own per-user delta
+    set (see :func:`forward_hidden`).
     """
     x = embed_tokens(cfg, params, tokens)
     pos = jnp.asarray(pos)
@@ -862,7 +892,7 @@ def decode_step(
     x = _swap_prefix(x, positions, embed_prefix)
     h, new_caches, _ = forward_hidden(
         cfg, params, x, positions, caches=caches, enc_out=enc_out,
-        drop_free=drop_free,
+        drop_free=drop_free, overlay=overlay, plan=plan,
     )
     logits = unembed(cfg, params, h)
     return logits, new_caches
@@ -879,6 +909,8 @@ def prefill_block(
     *,
     embed_prefix: Optional[jax.Array] = None,
     drop_free: bool = True,
+    overlay: Optional[Dict[int, Dict[str, Tuple[Any, Any]]]] = None,
+    plan=None,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Sequence-mode prompt ingestion: a whole (B, S) block per dispatch.
 
@@ -903,7 +935,7 @@ def prefill_block(
         valid = jnp.ones(tokens.shape, bool)
     h, new_caches, _ = forward_hidden(
         cfg, params, x, positions, caches=caches, enc_out=enc_out,
-        seq_valid=valid, drop_free=drop_free,
+        seq_valid=valid, drop_free=drop_free, overlay=overlay, plan=plan,
     )
     logits = unembed(cfg, params, h)
     return logits, new_caches

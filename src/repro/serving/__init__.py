@@ -1,8 +1,9 @@
 from .engine import (  # noqa: F401
-    OUTCOME_NAMES, PendingBuffer, Request, ServeEngine, SlotState,
+    OUTCOME_NAMES, DeltaSet, PendingBuffer, Request, ServeEngine, SlotState,
     SubmitResult, fold_deltas,
 )
 from .faults import FaultConfig, parse_inject  # noqa: F401
+from .personalise import Personaliser  # noqa: F401
 from .paging import (  # noqa: F401
     PagePool, PagingSpec, extend, free_page_count, make_pool, pages_in_use,
     release, reserve,

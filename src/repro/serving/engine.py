@@ -86,6 +86,22 @@ rather than silently skipping it.
 TinyTrain integration: ``fold_deltas`` folds channel deltas into a serving
 parameter copy (W ⊕ scatter(ΔW)), so adapted models serve at exactly base
 cost.
+
+**Online personalisation** (``personalise=SparseUpdatePolicy``): instead of
+one folded parameter copy per user, the engine keeps a **per-slot delta
+arena** — fixed-shape device arrays holding, for every resident slot, the
+slot's user's delta pack and channel indices for each policy unit.  A
+request carries its user's :class:`DeltaSet` (attached automatically from
+the per-user registry at first staging, re-attached verbatim on
+preempt/requeue like ``enc_feats``); admission writes the staged rows into
+the arena in-graph, and every tick the forward overlays per-slot effective
+weights ``W_eff[b] = W ⊕ scatter(ΔW_b, idx_b)`` on the policy's selected
+layers (:func:`models.overlay.slot_params`) — N resident streams decode
+with N different users' deltas from **one** shared base-params copy, token
+streams bit-identical to a per-user ``fold_deltas`` oracle, at the
+unchanged one host sync per chunk.  :meth:`ServeEngine.swap_deltas`
+hot-swaps a user's refreshed deltas into their resident arena rows between
+chunks without draining — only that user's subsequent tokens change.
 """
 from __future__ import annotations
 
@@ -99,6 +115,7 @@ import numpy as np
 from jax import lax
 
 from ..core import adapt as _telemetry
+from ..models import overlay as OV
 from ..models import transformer as T
 from ..models.api import ArchConfig
 from . import paging as PG
@@ -124,6 +141,39 @@ OUTCOME_NAMES = {
 # ttl sentinel for requests without a deadline: never reaches zero
 # within any realistic run (2^30 resident ticks)
 _NO_DEADLINE = 1 << 30
+
+
+@dataclasses.dataclass
+class DeltaSet:
+    """One user's adapted deltas in serving form.
+
+    ``deltas`` is the adaptation-side delta tree (``{"L{layer}": {kind:
+    pack}}``, exactly what ``TinyTrainSession.adapt`` returns) and
+    ``channels`` the per-unit selected channel indices in the same
+    nesting.  :meth:`from_policy` builds the ``channels`` map from the
+    policy that produced the deltas.  Leaves are normalised to host
+    numpy at construction so staging never blocks on the device.
+    """
+
+    deltas: Dict[str, Dict[str, Any]]
+    channels: Dict[str, Dict[str, np.ndarray]]
+
+    def __post_init__(self):
+        self.deltas = {
+            lk: {k: {n: np.asarray(v) for n, v in pack.items()}
+                 for k, pack in kinds.items()}
+            for lk, kinds in self.deltas.items()}
+        self.channels = {
+            lk: {k: np.asarray(v, np.int32) for k, v in kinds.items()}
+            for lk, kinds in self.channels.items()}
+
+    @classmethod
+    def from_policy(cls, policy, deltas) -> "DeltaSet":
+        ch: Dict[str, Dict[str, np.ndarray]] = {}
+        for u in policy.units:
+            ch.setdefault(f"L{u.layer}", {})[u.kind] = np.asarray(
+                u.channels, np.int32)
+        return cls(deltas=deltas, channels=ch)
 
 
 @dataclasses.dataclass
@@ -158,6 +208,12 @@ class Request:
     # for the stream's whole residency (re-attached, not re-encoded, on
     # preempt/requeue)
     enc_feats: Optional[np.ndarray] = None
+    # this user's deltas for the per-slot overlay (engines built with
+    # ``personalise=``); None = attached from the per-user registry at
+    # first staging (zeros — the base model — for unknown users), then
+    # frozen so preempt/requeue re-attaches the same set verbatim.
+    # Rejected on engines without personalisation
+    delta_set: Optional[DeltaSet] = None
 
     @property
     def terminal(self) -> bool:
@@ -169,6 +225,7 @@ class SubmitResult(NamedTuple):
 
     accepted: bool
     # "ok" | "queue_full" | "missing_enc_feats" | "unexpected_enc_feats"
+    # | "unexpected_delta_set"
     reason: str
 
 
@@ -215,6 +272,9 @@ class PendingBuffer(NamedTuple):
     tok_base: jax.Array  # (P,) int32 emitted tokens before (re)admission
     preempt_left: jax.Array  # (P,) int32 requeues left
     enc: jax.Array      # (P, enc_tokens, d_model) encoded rows ((P,1,1) off)
+    # staged per-user deltas, {layer: {kind: (pack, idx)}} with P-leading
+    # leaves ({} when the engine has no personalise policy)
+    delta: Any
     head: jax.Array     # () int32 next entry to admit
     count: jax.Array    # () int32 valid entries
 
@@ -257,6 +317,7 @@ class ServeEngine:
         preempt_budget: int = 4,
         queue_limit: Optional[int] = None,
         faults: Optional[FaultConfig] = None,
+        personalise: Optional[Any] = None,  # core.policy.SparseUpdatePolicy
     ):
         self.cfg = cfg
         self.params = params
@@ -350,6 +411,49 @@ class ServeEngine:
                 table=jnp.full((slots, 1), -1, jnp.int32),
                 store={"pages": jnp.zeros((1, 1, 1), dtype)})
             self._enc_host = {}
+        # online personalisation: the per-slot delta arena.  One zero
+        # (pack, idx) template per policy unit defines the fixed shapes;
+        # the arena stacks it along a leading slot axis and lives in the
+        # fused carry so admission writes rows in-graph.  A zero row is
+        # the base model, so unknown users serve unpersonalised.
+        self.personalise = personalise
+        if personalise is not None:
+            tmpl: Dict[int, Dict[str, Tuple[Any, Any]]] = {}
+            for u in personalise.units:
+                spec = OV.get_overlay(OV.resolve_kind(cfg, u.kind))
+                if not isinstance(spec, OV.UnitOverlay):
+                    raise ValueError(
+                        f"kind {u.kind!r} has no per-slot overlay "
+                        "(registered via the legacy register_unit_folder); "
+                        "it can fold offline but not personalise per slot")
+                pack = jax.tree_util.tree_map(
+                    np.asarray,
+                    OV.delta_init(cfg, u.layer, u.kind, u.n_channels, dtype))
+                tmpl.setdefault(u.layer, {})[u.kind] = (
+                    pack, np.zeros((u.n_channels,), np.int32))
+            self._delta_tmpl = tmpl
+            self._arena = jax.tree_util.tree_map(
+                lambda z: jnp.zeros((slots,) + z.shape, z.dtype), tmpl)
+
+            def swap(arena, row, mask):
+                # broadcast one user's (pack, idx) row into every masked
+                # slot — admission (one-hot), hot-swap (uid mask)
+                def one(a, v):
+                    m = mask.reshape((slots,) + (1,) * v.ndim)
+                    return jnp.where(m, v[None].astype(a.dtype), a)
+
+                return jax.tree_util.tree_map(one, arena, row)
+
+            self._swap = jax.jit(swap)
+        else:
+            self._delta_tmpl = None
+            self._arena: Any = {}
+            self._swap = None
+        # per-user registry feeding Request.delta_set auto-attach, and the
+        # per-slot rid snapshot from the last executed tick (taken from
+        # the already-fetched chunk events — swap_deltas costs no sync)
+        self._user_deltas: Dict[int, DeltaSet] = {}
+        self._slot_rids = np.full((slots,), -1, np.int32)
         # robustness knobs: engine-wide defaults that per-request fields
         # override; faults is the trace-time chaos plan (None = no fault
         # code in the compiled programs at all)
@@ -430,18 +534,18 @@ class ServeEngine:
             finite = jnp.all(jnp.isfinite(logits), axis=-1)
             return self._pick(logits, rids, tok_idx), finite
 
-        def decode(p, t, c, pos, rids, tok_idx, enc):
+        def decode(p, t, c, pos, rids, tok_idx, enc, arena):
             logits, c = T.decode_step(cfg, p, t, c, pos, drop_free=True,
-                                      **self._enc_fwd_kwargs(enc))
+                                      **self._fwd_kwargs(enc, arena))
             tok, finite = postproc(logits[:, 0], rids, tok_idx)
             return tok, finite, c
 
         # stall-tick forward: generating slots pause (valid=False rows
         # advance nothing on the block path), prefilling slots keep
         # feeding — the eager mirror of the fused path's block_tick
-        def decode_masked(p, t, c, pos, valid, rids, tok_idx, enc):
+        def decode_masked(p, t, c, pos, valid, rids, tok_idx, enc, arena):
             logits, c = T.prefill_block(cfg, p, t, c, pos, valid[:, None],
-                                        **self._enc_fwd_kwargs(enc))
+                                        **self._fwd_kwargs(enc, arena))
             tok, finite = postproc(logits[:, 0], rids, tok_idx)
             return tok, finite, c
 
@@ -461,6 +565,19 @@ class ServeEngine:
         if self.cfg.is_encoder_decoder:
             return {"enc_out": rows}
         return {"embed_prefix": rows}
+
+    def _fwd_kwargs(self, enc: EncRun, arena: Any) -> Dict[str, Any]:
+        """Forward kwargs shared by both tick paths: the pinned encoder
+        rows plus, under personalisation, the per-slot delta overlay
+        (the arena *is* the ``{layer: {kind: (pack, idx)}}`` overlay
+        dict, slot-stacked) and the policy whose selected layers get
+        their own forward segments.  Without a policy this compiles the
+        exact pre-personalisation programs."""
+        kw = self._enc_fwd_kwargs(enc)
+        if self.personalise is not None:
+            kw["overlay"] = arena
+            kw["plan"] = self.personalise
+        return kw
 
     def _pick(self, logits: jax.Array, rids: jax.Array,
               tok_idx: jax.Array) -> jax.Array:
@@ -525,6 +642,8 @@ class ServeEngine:
                 raise ValueError(
                     f"enc_feats shape {tuple(feats.shape)} does not match "
                     f"the config's encoder geometry {want}")
+        if req.delta_set is not None and self.personalise is not None:
+            self._delta_rows(req.delta_set)  # shape/structure check
         if self.spec is not None:
             need = self.spec.pages_for(budget) + self._enc_pages
             if need > self.spec.n_pages:
@@ -546,6 +665,10 @@ class ServeEngine:
             return "missing_enc_feats"
         if not self._enc_tokens and req.enc_feats is not None:
             return "unexpected_enc_feats"
+        if self.personalise is None and req.delta_set is not None:
+            # the engine has no arena to park it in; serving it would
+            # silently drop the user's personalisation
+            return "unexpected_delta_set"
         return None
 
     def submit(self, req: Request) -> SubmitResult:
@@ -608,6 +731,52 @@ class ServeEngine:
             self._enc_host[rid] = hit
         return hit
 
+    def _attach_delta(self, req: Request) -> None:
+        """First-staging delta attach: a request without an explicit set
+        takes its user's registered one (None for unknown users — the
+        zero row, i.e. the base model) and keeps it for its lifetime, so
+        preempt/requeue re-attaches the same deltas verbatim."""
+        if self.personalise is not None and req.delta_set is None:
+            req.delta_set = self._user_deltas.get(req.uid)
+
+    def _delta_rows(self, ds: Optional[DeltaSet]):
+        """One request's arena row: ``{layer: {kind: (pack, idx)}}`` host
+        leaves in the template's exact shapes (zeros when ``ds`` is
+        None).  Raises ``ValueError`` on a set that does not match the
+        personalise policy's structure — a caller bug, not load."""
+        if ds is None:
+            return self._delta_tmpl
+        out: Dict[int, Dict[str, Tuple[Any, Any]]] = {}
+        for lid, kinds in self._delta_tmpl.items():
+            out[lid] = {}
+            for kind, (pack0, idx0) in kinds.items():
+                try:
+                    pack = ds.deltas[f"L{lid}"][kind]
+                    idx = ds.channels[f"L{lid}"][kind]
+                except KeyError:
+                    raise ValueError(
+                        f"delta_set missing unit L{lid}.{kind} required "
+                        "by the engine's personalise policy") from None
+                if idx.shape != idx0.shape:
+                    raise ValueError(
+                        f"delta_set L{lid}.{kind} selects {idx.shape[0]} "
+                        f"channels; the policy expects {idx0.shape[0]}")
+                row = {}
+                for name, z in pack0.items():
+                    try:
+                        v = np.asarray(pack[name])
+                    except KeyError:
+                        raise ValueError(
+                            f"delta_set L{lid}.{kind} missing delta "
+                            f"{name!r}") from None
+                    if v.shape != z.shape:
+                        raise ValueError(
+                            f"delta_set L{lid}.{kind}.{name} has shape "
+                            f"{v.shape}; the policy expects {z.shape}")
+                    row[name] = v
+                out[lid][kind] = (row, idx)
+        return out
+
     def _admit_pages(self, feed_len: int, budget: int) -> int:
         """Pages reserved at admission: the prompt's own demand under
         reserve-as-you-go (growth covers generation), the full KV budget
@@ -660,6 +829,7 @@ class ServeEngine:
                 # so sampling keys (keyed on rid) agree between the paths
                 rid = self._next_rid
                 self._next_rid += 1
+                self._attach_delta(req)
             sl.req = req
             sl.cursor = 0
             sl.rid = rid
@@ -675,6 +845,16 @@ class ServeEngine:
                     self.pool, jnp.asarray(need), jnp.asarray(mask))
                 self.caches = PG.set_page_table(self.caches, self.pool.table)
             self.caches = T.reset_slot_state(self.caches, mask)
+            if self.personalise is not None:
+                # park each admitted request's deltas in its arena row
+                # (host-staged here; the fused path does this in-graph)
+                for i in np.nonzero(mask)[0]:
+                    onehot = np.zeros(self.n_slots, bool)
+                    onehot[i] = True
+                    self._arena = self._swap(
+                        self._arena,
+                        self._delta_rows(self.slots[i].req.delta_set),
+                        jnp.asarray(onehot))
             if self._enc_tokens:
                 # park the (cached) encoder output as this slot's pinned
                 # run — the same rows on every readmission, never
@@ -827,12 +1007,14 @@ class ServeEngine:
             next_tok, finite, self.caches = self._decode_masked(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(self.pos, jnp.int32), jnp.asarray(valid),
-                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc)
+                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc,
+                self._arena)
         else:
             next_tok, finite, self.caches = self._decode(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(self.pos, jnp.int32),
-                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc)
+                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc,
+                self._arena)
         next_tok, finite = _telemetry._fetch((next_tok, finite))
         # -- advance lifecycle: emit, numerics, done/trunc, deadline
         for i in live:
@@ -951,9 +1133,12 @@ class ServeEngine:
             exhaust_on = (rayg and faults is not None
                           and faults.exhaust_ticks is not None)
             preempt_on = rayg or force_pre_on
+            # trace-time personalisation gating: without a policy the
+            # compiled programs are byte-for-byte the pre-arena ones
+            pers_on = self.personalise is not None
 
             def body(params, carry, gt):
-                state, caches, pend, pool, enc = carry
+                state, caches, pend, pool, enc, arena = carry
 
                 # -- admit: free slots claim pending entries in FIFO order
                 free = ~state.active
@@ -1018,6 +1203,18 @@ class ServeEngine:
                     # forward writes through them
                     caches = PG.set_page_table(caches, pool.table)
                 caches = T.reset_slot_state(caches, take)
+                if pers_on:
+                    # park each admitted request's staged deltas in its
+                    # slot's arena row — the arena *is* the slot-stacked
+                    # overlay the forward consumes, so this gather+select
+                    # is the whole per-tick personalisation cost
+                    def admit_row(a, q):
+                        g = q[src]
+                        m = take.reshape((slots,) + (1,) * (g.ndim - 1))
+                        return jnp.where(m, g, a)
+
+                    arena = jax.tree_util.tree_map(
+                        admit_row, arena, pend.delta)
 
                 # event-row snapshots: a slot preempted or evicted this
                 # tick still reports under its rid (the host counts these
@@ -1096,8 +1293,13 @@ class ServeEngine:
                 # all-False valid rows pause the page-starved slots without
                 # advancing their cache state.
                 # gather the pinned encoder rows once per tick (empty dict
-                # on decoder-only configs — zero compiled code)
+                # on decoder-only configs — zero compiled code); under
+                # personalisation both tick paths also take the arena as
+                # the per-slot overlay plus the policy for segmentation
                 enc_kw = self._enc_fwd_kwargs(enc)
+                if pers_on:
+                    enc_kw = dict(enc_kw, overlay=arena,
+                                  plan=self.personalise)
 
                 def decode_tick(caches):
                     ptok = jnp.take_along_axis(
@@ -1202,10 +1404,10 @@ class ServeEngine:
                             pool, enc.table, term)
                         enc = EncRun(enc_table, enc.store)
                     caches = PG.set_page_table(caches, pool.table)
-                return (state, caches, pend, pool, enc), ys
+                return (state, caches, pend, pool, enc, arena), ys
 
-            def run(params, state, caches, pend, pool, enc, budget, backlog,
-                    tick0):
+            def run(params, state, caches, pend, pool, enc, arena, budget,
+                    backlog, tick0):
                 ys0 = (
                     jnp.full((chunk, slots), -1, jnp.int32),   # rid
                     jnp.full((chunk, slots), -1, jnp.int32),   # token
@@ -1215,7 +1417,7 @@ class ServeEngine:
                 )
 
                 def cond_fn(c):
-                    t, state, caches, pend, pool, enc, ys = c
+                    t, state, caches, pend, pool, enc, arena, ys = c
                     drained = pend.head >= pend.count
                     free = jnp.any(~state.active)
                     idle = ~jnp.any(state.active)
@@ -1223,20 +1425,25 @@ class ServeEngine:
                     return (t < budget) & ~stop
 
                 def body_fn(c):
-                    t, state, caches, pend, pool, enc, ys = c
-                    (state, caches, pend, pool, enc), row = body(
-                        params, (state, caches, pend, pool, enc), tick0 + t)
+                    t, state, caches, pend, pool, enc, arena, ys = c
+                    (state, caches, pend, pool, enc, arena), row = body(
+                        params, (state, caches, pend, pool, enc, arena),
+                        tick0 + t)
                     ys = jax.tree_util.tree_map(
                         lambda buf, r: lax.dynamic_update_index_in_dim(
                             buf, r.astype(buf.dtype), t, 0), ys, row)
-                    return (t + 1, state, caches, pend, pool, enc, ys)
+                    return (t + 1, state, caches, pend, pool, enc, arena, ys)
 
-                t, state, caches, pend, pool, enc, ys = lax.while_loop(
+                t, state, caches, pend, pool, enc, arena, ys = lax.while_loop(
                     cond_fn, body_fn,
-                    (jnp.int32(0), state, caches, pend, pool, enc, ys0))
-                return state, caches, pend, pool, enc, ys, t
+                    (jnp.int32(0), state, caches, pend, pool, enc, arena,
+                     ys0))
+                return state, caches, pend, pool, enc, arena, ys, t
 
-            self._scan_cache[chunk] = jax.jit(run, donate_argnums=(1, 2))
+            # the arena is donated along with the lifecycle carries: its
+            # buffers are rewritten every chunk and the host never reads
+            # them back (swap_deltas builds fresh arrays)
+            self._scan_cache[chunk] = jax.jit(run, donate_argnums=(1, 2, 6))
         return self._scan_cache[chunk]
 
     def _make_pending(self) -> PendingBuffer:
@@ -1258,6 +1465,11 @@ class ServeEngine:
         enc = np.zeros((P, self._enc_tokens or 1,
                         self.cfg.d_model if self._enc_tokens else 1),
                        np.float32)
+        delta: Any = {}
+        if self.personalise is not None:
+            delta = jax.tree_util.tree_map(
+                lambda z: np.zeros((P,) + z.shape, z.dtype),
+                self._delta_tmpl)
         for j, (r, req) in enumerate(self._staged):
             # a restaged (preempted) entry re-prefills its full history —
             # prompt plus generated prefix — and owes only the remaining
@@ -1279,11 +1491,19 @@ class ServeEngine:
             if self._enc_tokens:
                 # encoded once at first staging, then re-attached verbatim
                 enc[j] = self._encode_cached(r, req)
+            if self.personalise is not None:
+                # attached at first staging, re-attached verbatim on every
+                # restage — the delta mirror of the encoder-run contract
+                row = self._delta_rows(req.delta_set)
+                jax.tree_util.tree_map(
+                    lambda buf, v, j=j: buf.__setitem__(
+                        j, np.asarray(v, buf.dtype)), delta, row)
         self._pending_cache = PendingBuffer(
             jnp.asarray(prompt), jnp.asarray(length), jnp.asarray(max_new),
             jnp.asarray(budget), jnp.asarray(n_pages),
             jnp.asarray(rid), jnp.asarray(ttl), jnp.asarray(tok_base),
             jnp.asarray(preempt_left), jnp.asarray(enc),
+            jax.tree_util.tree_map(jnp.asarray, delta),
             jnp.zeros((), jnp.int32),
             jnp.asarray(np.int32(len(self._staged))))
         self._pending_dirty = False
@@ -1314,6 +1534,7 @@ class ServeEngine:
                 req = self.queue.popleft()
                 rid = self._next_rid
                 self._next_rid += 1
+                self._attach_delta(req)
                 self._by_rid[rid] = req
                 self._staged.append((rid, req))
                 self._pending_dirty = True
@@ -1325,13 +1546,19 @@ class ServeEngine:
             backlog = bool(self.queue or self._requeue)
             budget = min(chunk, max_ticks - used)
             run = self.scan_ticks(chunk)
-            (self._state, self.caches, _, self.pool, self._enc, ys,
-             t_exec) = run(
+            (self._state, self.caches, _, self.pool, self._enc, self._arena,
+             ys, t_exec) = run(
                 self.params, self._state, self.caches, self._make_pending(),
-                self.pool, self._enc, budget, backlog, np.int32(self.ticks))
+                self.pool, self._enc, self._arena, budget, backlog,
+                np.int32(self.ticks))
             # the single blocking transfer of the chunk: per-tick events
             (rids, toks, outs, act, n_admit), t_exec = (
                 _telemetry._fetch((ys, t_exec)))
+            if int(t_exec) > 0:
+                # per-slot rid occupancy at the last executed tick — the
+                # (sync-free) resident map swap_deltas targets between
+                # chunks; terminal rids resolve to nothing via _by_rid
+                self._slot_rids = rids[int(t_exec) - 1].copy()
             consumed = int(n_admit.sum())
             for _ in range(consumed):
                 rid, _req = self._staged.popleft()
@@ -1400,6 +1627,60 @@ class ServeEngine:
         }
 
     # ------------------------------------------------------------------
+    # Online personalisation: per-user registry + hot-swap
+    # ------------------------------------------------------------------
+
+    def swap_deltas(self, uid: int, delta_set: Optional[DeltaSet]) -> int:
+        """Atomically swap user ``uid``'s deltas — register and hot-swap.
+
+        Updates the per-user registry (future requests of ``uid`` attach
+        the new set), refreshes the ``delta_set`` of every in-flight
+        request of that user (queued, staged, requeued and resident), and
+        rewrites the user's **resident arena rows** in place with one
+        jitted masked select — no drain, no recompile, no host sync.
+        Call between chunks (``run()`` calls); resident streams pick the
+        new deltas up on their next tick, so only this user's subsequent
+        tokens change.  ``delta_set=None`` reverts the user to the base
+        model.  Returns the number of resident slots swapped.
+        """
+        if self.personalise is None:
+            raise RuntimeError(
+                "engine was built without personalise=: there is no delta "
+                "arena to swap into")
+        rows = self._delta_rows(delta_set)  # validates shape/structure
+        if delta_set is None:
+            self._user_deltas.pop(uid, None)
+        else:
+            self._user_deltas[uid] = delta_set
+        for _r, req in self._staged:
+            if req.uid == uid:
+                req.delta_set = delta_set
+                self._pending_dirty = True
+        for _r, req in self._requeue:
+            if req.uid == uid:
+                req.delta_set = delta_set
+        for req in self.queue:
+            if req.uid == uid:
+                req.delta_set = delta_set
+        for req in self._by_rid.values():
+            if req.uid == uid:
+                req.delta_set = delta_set
+        # resident rows: fused residency from the last chunk's event
+        # snapshot, eager residency from the live slots — both host-side
+        mask = np.zeros(self.n_slots, bool)
+        for i, r in enumerate(self._slot_rids):
+            req = self._by_rid.get(int(r))
+            if req is not None and req.uid == uid and int(r) in self._live:
+                mask[i] = True
+        for i, sl in enumerate(self.slots):
+            if sl.req is not None and sl.req.uid == uid:
+                mask[i] = True
+        n = int(mask.sum())
+        if n:
+            self._arena = self._swap(self._arena, rows, jnp.asarray(mask))
+        return n
+
+    # ------------------------------------------------------------------
     # Observability
     # ------------------------------------------------------------------
 
@@ -1426,6 +1707,17 @@ class ServeEngine:
             "kv_cache_bytes": int(total),
             "resident_streams": resident,
         }
+        if self.personalise is not None:
+            # per-user personalisation cost: the arena rows are the ONLY
+            # per-user parameter state (base params are shared), vs a
+            # folded-copy-per-user deployment paying full params each
+            arena_b = sum(int(x.size) * x.dtype.itemsize
+                          for x in jax.tree_util.tree_leaves(self._arena))
+            params_b = sum(int(x.size) * x.dtype.itemsize
+                           for x in jax.tree_util.tree_leaves(self.params))
+            rep["delta_arena_bytes"] = arena_b
+            rep["delta_bytes_per_stream"] = arena_b // self.n_slots
+            rep["params_bytes_folded_copy"] = params_b
         if self._enc_tokens:
             # pinned encoder runs: exact under both disciplines — every
             # resident stream holds exactly its constant run size, no
@@ -1528,123 +1820,14 @@ class ServeEngine:
 
 
 # ---------------------------------------------------------------------------
-# Delta folding: per-unit-kind folders behind a registry, so new unit kinds
-# (or external model families) plug in with one register_unit_folder call
-# instead of another branch in a monolithic function.
+# Delta folding moved to the unified unit-kind overlay registry
+# (models/overlay.py): one declarative spec per kind now derives the
+# offline fold, the per-slot runtime overlay *and* the adaptation-side
+# column math.  Re-exported here for compatibility — external folders
+# still plug in via register_unit_folder.
 # ---------------------------------------------------------------------------
 
-_UNIT_FOLDERS: Dict[str, Any] = {}
-
-
-def register_unit_folder(kind: str):
-    """Register ``fn(cfg, stack, j, d, idx)`` as the folder for a unit kind.
-
-    ``stack`` is the (mutable) per-group parameter dict, ``j`` the layer's
-    index within its stack, ``d`` the unit's delta pack and ``idx`` the
-    selected channel indices.  Folders fold W ⊕ scatter(ΔW, idx) in place.
-    """
-
-    def deco(fn):
-        _UNIT_FOLDERS[kind] = fn
-        return fn
-
-    return deco
-
-
-def fold_kind(cfg: ArchConfig, kind: str) -> str:
-    """Resolve a policy unit kind to its folder key (attn splits on MLA)."""
-    if kind == "attn" and cfg.mla:
-        return "mla"
-    return kind
-
-
-@register_unit_folder("mlp")
-def _fold_mlp(cfg, stack, j, d, idx):
-    mlp = stack["mlp"]
-    if "w_gate" in d:
-        mlp["w_gate"] = mlp["w_gate"].at[j, :, idx].add(
-            d["w_gate"].T.astype(mlp["w_gate"].dtype))
-    mlp["w_up"] = mlp["w_up"].at[j, :, idx].add(
-        d["w_up"].T.astype(mlp["w_up"].dtype))
-    mlp["w_down"] = mlp["w_down"].at[j, idx, :].add(
-        d["w_down"].astype(mlp["w_down"].dtype))
-
-
-@register_unit_folder("attn")
-def _fold_attn(cfg, stack, j, d, idx):
-    attn = stack["attn"]
-    cols = (idx[:, None] * cfg.head_dim
-            + np.arange(cfg.head_dim)[None, :]).reshape(-1)
-    attn["wq"] = attn["wq"].at[j, :, cols].add(
-        d["wq"].T.astype(attn["wq"].dtype))
-    attn["wo"] = attn["wo"].at[j, cols, :].add(
-        d["wo"].astype(attn["wo"].dtype))
-
-
-@register_unit_folder("xattn")
-def _fold_xattn(cfg, stack, j, d, idx):
-    xattn = stack["xattn"]
-    cols = (idx[:, None] * cfg.head_dim
-            + np.arange(cfg.head_dim)[None, :]).reshape(-1)
-    xattn["wq"] = xattn["wq"].at[j, :, cols].add(
-        d["wq"].T.astype(xattn["wq"].dtype))
-    xattn["wo"] = xattn["wo"].at[j, cols, :].add(
-        d["wo"].astype(xattn["wo"].dtype))
-
-
-@register_unit_folder("mla")
-def _fold_mla(cfg, stack, j, d, idx):
-    attn = stack["attn"]
-    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
-    cols = (idx[:, None] * qk + np.arange(qk)[None, :]).reshape(-1)
-    attn["w_uq"] = attn["w_uq"].at[j, :, cols].add(
-        d["w_uq"].T.astype(attn["w_uq"].dtype))
-    vcols = (idx[:, None] * cfg.v_head_dim
-             + np.arange(cfg.v_head_dim)[None, :]).reshape(-1)
-    attn["wo"] = attn["wo"].at[j, vcols, :].add(
-        d["wo"].astype(attn["wo"].dtype))
-
-
-@register_unit_folder("ssm")
-def _fold_ssm(cfg, stack, j, d, idx):
-    ssm = stack["ssm"]
-    cols = (idx[:, None] * cfg.ssm_head_dim
-            + np.arange(cfg.ssm_head_dim)[None, :]).reshape(-1)
-    ssm["w_z"] = ssm["w_z"].at[j, :, cols].add(
-        d["w_z"].T.astype(ssm["w_z"].dtype))
-    ssm["w_x"] = ssm["w_x"].at[j, :, cols].add(
-        d["w_x"].T.astype(ssm["w_x"].dtype))
-    ssm["w_out"] = ssm["w_out"].at[j, cols, :].add(
-        d["w_out"].astype(ssm["w_out"].dtype))
-
-
-@register_unit_folder("moe")
-def _fold_moe(cfg, stack, j, d, idx):
-    moe = stack["moe"]
-    for nm in ("w_gate", "w_up", "w_down"):
-        moe[nm] = moe[nm].at[j, idx].add(d[nm].astype(moe[nm].dtype))
-
-
-def fold_deltas(cfg: ArchConfig, params: Any, deltas: Any, policy) -> Any:
-    """Fold TinyTrain deltas into a serving copy: W += scatter(ΔW, idx)."""
-    groups = T.stack_groups(cfg)
-    lid_to_group = {}
-    for gi, (_, ids) in enumerate(groups):
-        for j, lid in enumerate(ids):
-            lid_to_group[lid] = (gi, j)
-    new_params = jax.tree_util.tree_map(lambda x: x, params)
-
-    for u in policy.units:
-        gi, j = lid_to_group[u.layer]
-        stack = new_params["stacks"][f"g{gi}"]
-        d = deltas[f"L{u.layer}"][u.kind]
-        idx = np.asarray(u.channels, np.int32)
-        kind = fold_kind(cfg, u.kind)
-        try:
-            folder = _UNIT_FOLDERS[kind]
-        except KeyError:
-            raise ValueError(
-                f"no unit folder registered for kind {kind!r} "
-                f"(known: {sorted(_UNIT_FOLDERS)})") from None
-        folder(cfg, stack, j, d, idx)
-    return new_params
+register_unit_folder = OV.register_unit_folder
+register_unit_overlay = OV.register_unit_overlay
+fold_kind = OV.resolve_kind
+fold_deltas = OV.fold_deltas

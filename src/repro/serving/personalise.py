@@ -1,0 +1,257 @@
+"""Online personalisation: closing the adapt -> serve loop.
+
+The delta representation is now shared end to end — adaptation emits sparse
+per-unit delta packs, the engine consumes the same packs per resident slot
+(`ServeEngine(personalise=policy)`) — so refreshing a user's personalisation
+while their streams are live is just three steps between serving chunks:
+
+1. **observe** — finished streams accumulate per user (prompt + emitted
+   tokens), forming that user's on-device corpus.
+2. **refresh** — each user with enough finished streams gets an episodic
+   task built from their own streams (each recent stream is one class; the
+   TinyTrain augmentation pipeline re-rolls token spans to synthesise
+   support diversity) and the whole user cohort is adapted in one
+   ``TinyTrainSession.adapt_many`` fleet pass under the serving policy
+   (``policy_override`` keeps the delta structure identical to the arena
+   template).
+3. **hot-swap** — the fresh delta set rides the int8 error-feedback
+   compressor (``optim/compress.py``, 4x payload vs f32; the quantisation
+   residual is carried per user and re-added at the next refresh, so the
+   exchange stays unbiased over rounds) and is atomically installed into
+   the user's resident arena rows via ``ServeEngine.swap_deltas`` —
+   mid-stream, without draining, and without an extra host sync.
+
+``Personaliser.run_online`` packages the loop: serve one chunk, observe,
+refresh, repeat — ``last_report`` records payload bytes (int8 + scales vs
+f32), swap latency and resident rows swapped per round.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core.policy import SparseUpdatePolicy
+from ..optim import compress as C
+from .engine import DeltaSet, Request, ServeEngine
+
+__all__ = ["Personaliser"]
+
+
+def _payload_bytes(tree: Any) -> int:
+    return int(sum(x.size * np.dtype(x.dtype).itemsize
+                   for x in jax.tree_util.tree_leaves(tree)))
+
+
+class Personaliser:
+    """Background per-user delta refresh for a personalised ServeEngine.
+
+    Parameters
+    ----------
+    session:
+        A :class:`repro.core.session.TinyTrainSession` over the *same*
+        backbone config the engine serves (same frozen base params).
+    engine:
+        A :class:`ServeEngine` constructed with ``personalise=policy``.
+    policy:
+        The serving :class:`SparseUpdatePolicy`; passed to ``adapt_many``
+        as ``policy_override`` so every refresh emits deltas with exactly
+        the arena-template structure.
+    profile:
+        Device profile (name or object) for the adaptation budget.
+    min_streams:
+        A user becomes refresh-eligible once this many of their streams
+        have finished since the last refresh (ProtoNet episodes need at
+        least two classes).
+    seq:
+        Fixed token length episodes are built at; streams are wrapped
+        (``np.resize``) to this length so every user's episode buckets
+        together in one fleet dispatch.
+    compress:
+        When True (default) the delta exchange goes through
+        ``int8_compress``/``int8_decompress`` with a persistent per-user
+        error-feedback residual; when False deltas are swapped in at full
+        precision (payload accounting then shows ratio 1.0).
+    """
+
+    def __init__(
+        self,
+        session: Any,
+        engine: ServeEngine,
+        policy: SparseUpdatePolicy,
+        *,
+        profile: Any = "jetson-nano",
+        criterion: str = "tinytrain",
+        iters: int = 8,
+        min_streams: int = 2,
+        max_way: int = 4,
+        shots: int = 4,
+        seq: int = 32,
+        compress: bool = True,
+        seed: int = 0,
+    ):
+        if engine.personalise is None:
+            raise ValueError(
+                "engine must be constructed with personalise=<policy>; "
+                "a non-personalised engine has no delta arena to swap into")
+        self.session = session
+        self.engine = engine
+        self.policy = policy
+        self.profile = profile
+        self.criterion = criterion
+        self.iters = int(iters)
+        self.min_streams = max(2, int(min_streams))
+        self.max_way = int(max_way)
+        self.shots = max(1, int(shots))
+        self.seq = int(seq)
+        self.compress = bool(compress)
+        self._rng = np.random.default_rng(seed)
+        # per-user state: finished-stream corpus, persistent EF residual
+        self._streams: Dict[int, List[np.ndarray]] = {}
+        self._ef: Dict[int, Any] = {}
+        self._seen: set = set()
+        self.refreshes = 0
+        self.last_report: Dict[str, Any] = {}
+
+    # -- observe ----------------------------------------------------------
+
+    def observe(self, requests: List[Request]) -> int:
+        """Bank finished streams (prompt + emitted tokens) per user.
+
+        Idempotent per request object — safe to call with the same list
+        every chunk.  Returns how many new streams were banked."""
+        n = 0
+        for r in requests:
+            if not r.done or id(r) in self._seen:
+                continue
+            self._seen.add(id(r))
+            if not r.out:  # rejected/shed streams carry no signal
+                continue
+            toks = np.concatenate([
+                np.asarray(r.prompt, np.int32).reshape(-1),
+                np.asarray(r.out, np.int32),
+            ])
+            self._streams.setdefault(r.uid, []).append(toks)
+            n += 1
+        return n
+
+    # -- refresh ----------------------------------------------------------
+
+    def _episode(self, uid: int):
+        """Episodic task from the user's own streams: each recent stream
+        is one class, support rows are copies the augmentation pipeline
+        re-rolls into pseudo-queries."""
+        from ..data import Episode
+
+        streams = self._streams[uid][-self.max_way:]
+        way = len(streams)
+        rows = np.stack([np.resize(t, self.seq) for t in streams])
+        sup_t = np.repeat(rows, self.shots, axis=0)
+        sup_l = np.repeat(np.arange(way, dtype=np.int32), self.shots)
+        return Episode(
+            support={"tokens": sup_t.astype(np.int32),
+                     "episode_labels": sup_l},
+            query={"tokens": rows.astype(np.int32),
+                   "episode_labels": np.arange(way, dtype=np.int32)},
+            n_way=way,
+            domain=f"user{uid}",
+        )
+
+    def refresh(self) -> Dict[str, Any]:
+        """Adapt every refresh-eligible user and hot-swap their arena rows.
+
+        One ``adapt_many`` fleet pass covers the whole cohort; each
+        result's deltas make the exchange round-trip (int8 + per-tensor
+        scales, persistent error feedback) before ``swap_deltas``
+        installs them.  Returns (and stores in ``last_report``) the
+        per-round accounting; an empty dict means no user was eligible."""
+        from ..core.session import Task
+
+        uids = sorted(u for u, s in self._streams.items()
+                      if len(s) >= self.min_streams)
+        if not uids:
+            return {}
+        tasks = [Task.from_episode(self._episode(u), self._rng,
+                                   getattr(self.session, "max_way", 16),
+                                   name=f"user{u}")
+                 for u in uids]
+        t0 = time.perf_counter()
+        results = self.session.adapt_many(
+            tasks, self.profile, criterion=self.criterion,
+            iters=self.iters, policy_override=self.policy)
+        adapt_s = time.perf_counter() - t0
+
+        users, raw_b, wire_b, swapped, swap_s = [], 0, 0, 0, 0.0
+        for uid, ad in zip(uids, results):
+            deltas = ad.deltas
+            raw = _payload_bytes(jax.tree_util.tree_map(
+                lambda x: np.empty(x.shape, np.float32), deltas))
+            if self.compress:
+                ef = self._ef.get(uid)
+                if ef is None:
+                    ef = C.ef_state_init(deltas)
+                q, scales, ef = C.int8_compress(deltas, ef)
+                self._ef[uid] = ef  # residual survives to the next round
+                wire = (_payload_bytes(q)
+                        + 4 * len(jax.tree_util.tree_leaves(scales)))
+                deltas = C.int8_decompress(q, scales)
+            else:
+                wire = raw
+            ds = DeltaSet.from_policy(self.policy, deltas)
+            t1 = time.perf_counter()
+            swapped += self.engine.swap_deltas(uid, ds)
+            swap_s += time.perf_counter() - t1
+            raw_b += raw
+            wire_b += wire
+            users.append(uid)
+            self._streams[uid] = []  # corpus consumed by this refresh
+
+        self.refreshes += 1
+        self.last_report = {
+            "round": self.refreshes,
+            "users": users,
+            "adapt_seconds": adapt_s,
+            "swap_seconds": swap_s,
+            "resident_rows_swapped": swapped,
+            "payload_bytes_f32": raw_b,
+            "payload_bytes_wire": wire_b,
+            "payload_ratio": raw_b / max(1, wire_b),
+        }
+        return self.last_report
+
+    # -- driver -----------------------------------------------------------
+
+    def run_online(self, requests: List[Request], *,
+                   ticks_per_round: Optional[int] = None,
+                   max_rounds: int = 10_000) -> Dict[str, Any]:
+        """Serve ``requests`` to completion, refreshing between chunks.
+
+        Each round runs one engine chunk, banks newly finished streams
+        and hot-swaps any eligible user's deltas — the adaptation pass
+        happens strictly *between* serving chunks, so the engine's one
+        host sync per chunk is untouched.  Returns a summary report."""
+        chunk = int(ticks_per_round or self.engine.chunk)
+        pending: List[Request] = list(requests)
+        rounds, ticks, syncs, history = 0, 0, 0, []
+        while rounds < max_rounds:
+            self.engine.run(pending, max_ticks=chunk, chunk=chunk)
+            pending = []
+            rep = self.engine.last_run_report
+            ticks += rep.get("ticks", 0)
+            syncs += rep.get("host_syncs", 0)
+            self.observe(requests)
+            r = self.refresh()
+            if r:
+                history.append(r)
+            rounds += 1
+            if all(q.done for q in requests):
+                break
+        return {
+            "rounds": rounds,
+            "ticks": ticks,
+            "host_syncs": syncs,
+            "refreshes": history,
+            "all_done": all(q.done for q in requests),
+        }

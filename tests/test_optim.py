@@ -77,3 +77,44 @@ class TestCompression:
         deq = int8_decompress(q, s)
         np.testing.assert_allclose(
             np.array(deq["w"] + ne["w"]), np.array(g["w"]), atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), k=st.integers(2, 8),
+           scale=st.floats(1e-3, 10.0))
+    def test_ef_sum_within_one_quantum(self, seed, k, scale):
+        # the error-feedback guarantee: over K compressed steps the sum of
+        # what the receiver reconstructs equals the sum of the raw
+        # gradients up to the *final* residual, which is bounded by one
+        # quantisation step — quantisation error does not accumulate
+        rng = np.random.default_rng(seed)
+        gs = [{"w": jnp.asarray(rng.normal(size=48) * scale, jnp.float32)}
+              for _ in range(k)]
+        ef = ef_state_init(gs[0])
+        recv = np.zeros(48, np.float64)
+        last_scale = 0.0
+        for g in gs:
+            q, s, ef = int8_compress(g, ef)
+            recv += np.array(int8_decompress(q, s)["w"], np.float64)
+            last_scale = float(s["w"])
+        raw = np.sum([np.array(g["w"], np.float64) for g in gs], axis=0)
+        # telescoping: raw - recv == final residual, |residual| <= scale
+        np.testing.assert_allclose(raw - recv, np.array(ef["w"]), atol=1e-4)
+        assert float(np.max(np.abs(raw - recv))) <= last_scale * 1.001
+
+    def test_pallas_grad_quant_matches_compress_oracle(self):
+        # the kernel and the XLA path (optim.compress) must implement the
+        # same pack math — the delta-exchange payload is interchangeable
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(3)
+        g = jnp.asarray(rng.normal(size=512) * 0.3, jnp.float32)
+        e = jnp.asarray(rng.normal(size=512) * 0.01, jnp.float32)
+        qk, sk, nek = ops.grad_quant(g, e, block=128)
+        qo, so, neo = int8_compress({"w": g}, {"w": e})
+        np.testing.assert_allclose(np.asarray(sk).reshape(()),
+                                   np.asarray(so["w"]).reshape(()),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(qk).ravel(),
+                                      np.asarray(qo["w"]).ravel())
+        np.testing.assert_allclose(np.asarray(nek).ravel(),
+                                   np.asarray(neo["w"]).ravel(), atol=1e-6)
