@@ -39,7 +39,7 @@ from repro import configs
 from repro.core import adapt as adapt_mod
 from repro.models import transformer as T
 from repro.models.api import ArchConfig
-from repro.serving import Request, ServeEngine
+from repro.serving import FleetRouter, Request, ServeEngine
 
 DEFAULT_OUT = "BENCH_serving.json"
 
@@ -666,6 +666,161 @@ def run_personalise(
     }
 
 
+def run_fleet(
+    *,
+    arch: str = "micro",
+    replicas: int = 4,
+    n_requests: int = 32,
+    slots: int = 2,
+    max_new: int = 16,
+    max_len: int = 64,
+    chunk: int = 16,
+    page_size: int = 8,
+    reps: int = 2,
+    seed: int = 0,
+) -> Dict[str, object]:
+    """Data-parallel fleet scale-out: R ServeEngine replicas behind one
+    FleetRouter vs a single engine on the same submission sequence.
+
+    Two throughput views are reported, because they answer different
+    questions:
+
+    - ``tokens_per_sec`` (wall): end-to-end rate of the whole fleet run.
+      On a single-core host the replicas time-slice one CPU, so wall
+      throughput does NOT scale with R — it measures router overhead.
+    - ``capacity_tokens_per_sec`` (aggregate): sum over replicas of
+      new_tokens / busy_seconds, where busy_seconds is the host time each
+      replica spent inside its own dispatch/drain calls.  This is the
+      fleet's throughput when each replica owns a core/device, i.e. the
+      quantity that scales.  ``host_cores`` records how honest the wall
+      number is.
+
+    Stream parity vs the single engine is asserted per request (the
+    router stamps submission order as ``sample_id``), and every replica
+    must keep host_syncs == chunks.
+    """
+    import os
+
+    cfg = _config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompts = [r.prompt for r in _requests(rng, cfg.vocab, n_requests, max_new)]
+
+    def mk():
+        return [Request(uid=i % 8, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+
+    kw = dict(slots=slots, max_len=max_len, fused=True, chunk=chunk,
+              prefill_block=8, kv_paging=True, kv_page_size=page_size)
+
+    # single-engine reference: the parity baseline and the router-overhead
+    # denominator (FleetRouter at R=1 runs the same engine behind the
+    # routing layer)
+    ref_eng = ServeEngine(cfg, params, **kw)
+    ref_eng.run(mk())  # warm-up
+    best_plain, ref_reqs = float("inf"), None
+    for _ in range(reps):
+        ref_reqs = mk()
+        t0 = time.perf_counter()
+        ref_eng.run(ref_reqs)
+        best_plain = min(best_plain, time.perf_counter() - t0)
+    assert all(r.done for r in ref_reqs)
+    ref_streams = [r.out for r in ref_reqs]
+
+    paths: Dict[str, object] = {
+        "single_engine": {
+            "replicas": 0,
+            "new_tokens": sum(len(o) for o in ref_streams),
+            "seconds_total": best_plain,
+            "tokens_per_sec": sum(len(o) for o in ref_streams) / best_plain,
+        },
+    }
+    caps: Dict[int, float] = {}
+    for R in (1, replicas):
+        router = FleetRouter(cfg, params, replicas=R, **kw)
+        router.run(mk())  # warm-up: compile every replica's programs
+        best, reqs = float("inf"), None
+        for _ in range(reps):
+            reqs = mk()
+            t0 = time.perf_counter()
+            router.run(reqs)
+            best = min(best, time.perf_counter() - t0)
+        assert all(r.done for r in reqs)
+        assert [r.out for r in reqs] == ref_streams, (
+            f"fleet R={R} streams diverged from the single engine")
+        per = router.last_run_report["replicas"]
+        capacity = streams_cap = 0.0
+        for rep in per:
+            assert rep.get("host_syncs", 0) == rep.get("chunks", 0), (
+                f"replica {rep['replica']} broke one-host-sync-per-chunk")
+            busy = rep.get("busy_seconds", 0.0)
+            if busy > 0:
+                capacity += rep.get("new_tokens", 0) / busy
+                streams_cap += (
+                    sum(rep.get("outcomes", {}).values()) / busy)
+        caps[R] = capacity
+        toks = sum(len(r.out) for r in reqs)
+        paths[f"fleet_r{R}"] = {
+            "replicas": R,
+            "new_tokens": toks,
+            "seconds_total": best,
+            "tokens_per_sec": toks / best,
+            "streams_per_sec": len(reqs) / best,
+            "capacity_tokens_per_sec": capacity,
+            "capacity_streams_per_sec": streams_cap,
+            "replicas_with_work":
+                sum(1 for rep in per if rep.get("chunks", 0)),
+        }
+
+    r1, rR = paths["fleet_r1"], paths[f"fleet_r{replicas}"]
+    return {
+        "bench": "serving_fleet",
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "host_cores": os.cpu_count(),
+        "host_devices": jax.device_count(),
+        "config": {"arch": arch, "replicas": replicas,
+                   "n_requests": n_requests, "slots": slots,
+                   "max_new": max_new, "max_len": max_len, "chunk": chunk,
+                   "kv_page_size": page_size},
+        "paths": paths,
+        "fleet": {
+            "capacity_gain_vs_r1": caps[replicas] / caps[1],
+            "scaling_efficiency": caps[replicas] / (replicas * caps[1]),
+            "router_overhead":
+                r1["seconds_total"] / best_plain - 1.0,
+            "stream_parity": "per-request vs single engine (asserted)",
+        },
+    }
+
+
+def main_fleet(quick: bool = True, out_path: str = DEFAULT_OUT,
+               replicas: int = 4) -> List[str]:
+    kw = (dict(arch="micro", n_requests=32, slots=2, max_new=16,
+               max_len=64, chunk=16)
+          if quick else
+          dict(arch="qwen2-1.5b", n_requests=64, slots=4, max_new=32,
+               max_len=128, chunk=32))
+    record = run_fleet(replicas=replicas, **kw)
+    write_record(record, out_path)
+    out = ["path,replicas,new_tokens,wall_tok_per_sec,capacity_tok_per_sec,"
+           "streams_per_sec"]
+    for name, p in record["paths"].items():
+        out.append(
+            f"{name},{p['replicas']},{p['new_tokens']},"
+            f"{p['tokens_per_sec']:.1f},"
+            f"{p.get('capacity_tokens_per_sec', 0.0):.1f},"
+            f"{p.get('streams_per_sec', 0.0):.2f}")
+    g = record["fleet"]
+    out.append(
+        f"fleet,capacity_gain_vs_r1={g['capacity_gain_vs_r1']:.2f}x,"
+        f"scaling_efficiency={g['scaling_efficiency']:.2f},"
+        f"router_overhead={g['router_overhead']:.3f},"
+        f"host_cores={record['host_cores']},"
+        f"devices={record['host_devices']} -> {out_path}")
+    return out
+
+
 def main_personalise(quick: bool = True, out_path: str = DEFAULT_OUT
                      ) -> List[str]:
     kw = (dict(arch="micro", n_users=4, n_requests=16, slots=4, max_new=16,
@@ -791,11 +946,20 @@ if __name__ == "__main__":
                     help="run the per-slot delta-overlay benchmark "
                          "(N users' deltas on one base copy vs a folded "
                          "params copy per user, plus hot-swap latency)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="R",
+                    help="run the data-parallel fleet benchmark with R "
+                         "replicas behind one FleetRouter (wall + aggregate "
+                         "capacity vs a single engine, stream parity "
+                         "asserted)")
     ap.add_argument("--out", type=str, default=DEFAULT_OUT)
     args = ap.parse_args()
-    entry = (main_personalise if args.personalise
-             else main_encdec if args.encdec
-             else main_pressure if args.pressure
-             else main_paging if args.paging else main)
+    if args.fleet:
+        entry = lambda quick, out_path: main_fleet(
+            quick=quick, out_path=out_path, replicas=args.fleet)
+    else:
+        entry = (main_personalise if args.personalise
+                 else main_encdec if args.encdec
+                 else main_pressure if args.pressure
+                 else main_paging if args.paging else main)
     for line in entry(quick=args.quick, out_path=args.out):
         print(line)

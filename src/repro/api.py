@@ -46,7 +46,8 @@ from .core.session import (  # noqa: F401  (façade re-exports)
 from .models import edge_cnn as _edge_cnn
 from .models.api import ArchConfig
 from .serving import (  # noqa: F401  (deploy surface)
-    FaultConfig, Personaliser, Request, ServeEngine, SubmitResult,
+    FaultConfig, FleetRouter, Personaliser, Request, ServeEngine,
+    SubmitResult,
 )
 
 __all__ = [
@@ -64,6 +65,7 @@ __all__ = [
     "plan_sparse_update",
     # deploy
     "Request", "ServeEngine", "SubmitResult", "FaultConfig", "Personaliser",
+    "FleetRouter",
     # low-level escape hatch
     "Budget",
 ]

@@ -58,6 +58,33 @@ def _fetch_scalar(x: Any) -> float:
     return float(x)
 
 
+def _fetch_local(tree: Any) -> Any:
+    """Collective-free fetch: materialise only the *addressable* shards.
+
+    On a multi-host mesh, ``np.asarray`` of a task-sharded global array is
+    a cross-host gather.  This fetch instead reads each leaf's addressable
+    shards — every host pulls only its own rows of the task axis — and
+    reassembles them in task order; replicated leaves (probe taps, loss
+    scalars broadcast over hosts) dedupe to a single shard read.  Counts
+    as one blocking transfer event, same contract as :func:`_fetch`.
+    """
+    _HOST_SYNCS[0] += 1
+
+    def pull(x):
+        shards = getattr(x, "addressable_shards", None)
+        if shards is None:
+            return np.asarray(x)
+        by_slice = {}
+        for sh in shards:
+            key = tuple((s.start or 0, s.stop) for s in sh.index)
+            if key not in by_slice:
+                by_slice[key] = np.asarray(sh.data)
+        rows = [by_slice[k] for k in sorted(by_slice)]
+        return rows[0] if len(rows) == 1 else np.concatenate(rows, axis=0)
+
+    return jax.tree_util.tree_map(pull, tree)
+
+
 @dataclasses.dataclass
 class AdaptResult:
     deltas: Any

@@ -27,7 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..optim import Optimizer, adam
-from .adapt import AdaptResult, adapt_task, _fetch, _fetch_scalar
+from .adapt import (
+    AdaptResult, adapt_task, _fetch, _fetch_local, _fetch_scalar,
+)
 from .backbones import Backbone
 from .criterion import Budget
 from .fisher import potentials_from_chans
@@ -534,6 +536,7 @@ class TinyTrainSession:
         policy_override: Optional[SparseUpdatePolicy] = None,
         bucket: bool = True,
         mesh: Optional[Any] = None,
+        hosts: Optional[int] = None,
     ) -> List[Adaptation]:
         """Fleet adaptation: N user tasks in O(#buckets x #structures) calls.
 
@@ -561,6 +564,21 @@ class TinyTrainSession:
         repeating the last task; the copies are sliced off before the
         fetch.  Without a mesh the single-device paths are unchanged.
 
+        ``hosts``: multi-process-shaped ingestion (defaults to the
+        ``fleet_hosts`` sharding-context key).  With ``hosts=H > 1`` each
+        of H "processes" builds, pads and places only its own contiguous
+        block of the task axis (global row ``p`` holds the episode of
+        task ``min(p, n_real - 1)``, which reproduces the global
+        repeat-last padding bit-for-bit), the global arrays are assembled
+        shard-by-shard via ``FleetShardingRules.assemble_tasks`` without
+        any host materialising the full stack, and results come back
+        through a collective-free fetch that reads only addressable
+        shards.  ``H`` must divide the mesh's data size; requires
+        ``mesh``.  Exercised in one process over device groups in CI
+        (``--xla_force_host_platform_device_count=8``, 2 hosts x 4
+        devices) — on a real multi-process mesh each process runs the
+        same code over its own episode shard.
+
         A summary of the grouping (buckets, policy structures, compiled
         scans) is recorded in ``self.last_fleet_report``.
         """
@@ -583,6 +601,23 @@ class TinyTrainSession:
 
             rules = FleetShardingRules(mesh)
             params_run = rules.place_replicated(self.params)
+
+        if hosts is None:
+            hosts = dist_context.get("fleet_hosts")
+        hosts = 1 if hosts is None else int(hosts)
+        if hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {hosts}")
+        hosted = hosts > 1
+        if hosted:
+            if rules is None:
+                raise ValueError(
+                    "hosts > 1 requires mesh=; per-host ingestion shards "
+                    "the task axis over the mesh's data axes")
+            if rules.dp_size % hosts:
+                raise ValueError(
+                    f"hosts ({hosts}) must divide the mesh data size "
+                    f"({rules.dp_size}) so device shards never straddle "
+                    "host blocks")
 
         # bucket (or pass through) every episode once; keys come from the
         # padded trees so one bucket serves any way/shot mix inside it
@@ -614,6 +649,27 @@ class TinyTrainSession:
                 trees = tuple(_pad_task_axis(t, reps) for t in trees)
             return tuple(rules.place_tasks(t) for t in trees)
 
+        def host_ingest(idxs, extra_row):
+            """Per-host episode ingestion for one group.
+
+            Each of the H hosts builds (and locally pads) only its own
+            contiguous block of the task axis — global row ``p`` carries
+            task ``idxs[min(p, n_real - 1)]``, the same values the global
+            repeat-last padding produces — then the global arrays are
+            assembled shard-by-shard, no host holding the full stack.
+            Returns placed (sup, pq, extra) global arrays."""
+            n_real = len(idxs)
+            n_pad = rules.padded_count(n_real)
+            sup_b, pq_b, ex_b = [], [], []
+            for lo, hi in rules.host_blocks(n_pad, hosts):
+                rows = [idxs[min(p, n_real - 1)] for p in range(lo, hi)]
+                sup_b.append(_stack_trees([eps[i][0] for i in rows]))
+                pq_b.append(_stack_trees([eps[i][1] for i in rows]))
+                ex_b.append(_stack_trees([extra_row(i) for i in rows]))
+            return (rules.assemble_tasks(sup_b),
+                    rules.assemble_tasks(pq_b),
+                    rules.assemble_tasks(ex_b))
+
         if policy_override is not None:
             policies = [policy_override] * len(tasks)
             method = (f"override:"
@@ -642,17 +698,24 @@ class TinyTrainSession:
             else:
                 shape_groups = _group_indices(keys)
                 for idxs in shape_groups.values():
-                    sup, pq = stacked(idxs)
-                    ns = jnp.asarray([tasks[i].n_support for i in idxs],
-                                     jnp.float32)
-                    batch_pad = next(v.shape[1] for v in
-                                     jax.tree_util.tree_leaves(sup))
+                    if hosted:
+                        sup, pq, ns = host_ingest(
+                            idxs,
+                            lambda i: np.float32(tasks[i].n_support))
+                    else:
+                        sup, pq = stacked(idxs)
+                        ns = jnp.asarray([tasks[i].n_support for i in idxs],
+                                         jnp.float32)
+                    batch_pad = next(v.shape[0] for v in
+                                     jax.tree_util.tree_leaves(eps[idxs[0]][0]))
                     taps = self.backbone.make_taps(batch_pad)
-                    sup, pq, ns = mesh_pad(len(idxs), sup, pq, ns)
+                    if not hosted:
+                        sup, pq, ns = mesh_pad(len(idxs), sup, pq, ns)
                     if rules is not None:
                         taps = rules.place_replicated(taps)
                     t0 = time.perf_counter()
-                    chans_all = _fetch(self.step_cache.probe_fisher_batch()(
+                    fetch = _fetch_local if hosted else _fetch
+                    chans_all = fetch(self.step_cache.probe_fisher_batch()(
                         params_run, sup, pq, taps, ns))
                     dt = (time.perf_counter() - t0) / len(idxs)
                     for j, i in enumerate(idxs):
@@ -673,11 +736,17 @@ class TinyTrainSession:
         compiles_before = self.step_cache.fleet_scan_compiles()
         for idxs in run_groups.values():
             pol0 = policies[idxs[0]]
-            sup, pq = stacked(idxs)
-            ci = _stack_trees(
-                [self.step_cache.chan_idx_arrays(policies[i]) for i in idxs])
             n_real = len(idxs)
-            sup, pq, ci = mesh_pad(n_real, sup, pq, ci)
+            if hosted:
+                sup, pq, ci = host_ingest(
+                    idxs,
+                    lambda i: self.step_cache.chan_idx_arrays(policies[i]))
+            else:
+                sup, pq = stacked(idxs)
+                ci = _stack_trees(
+                    [self.step_cache.chan_idx_arrays(policies[i])
+                     for i in idxs])
+                sup, pq, ci = mesh_pad(n_real, sup, pq, ci)
             # publish the fleet mesh so vmap_scan_steps picks the
             # shard_map path (task axis split across the mesh's data axes)
             with dist_context.sharding_context(fleet_mesh=mesh):
@@ -685,13 +754,26 @@ class TinyTrainSession:
                 t0 = time.perf_counter()
                 d_stack, _, loss_stack, skip_stack = run(
                     params_run, sup, pq, ci)
-            if rules is not None and rules.padded_count(n_real) != n_real:
-                d_stack = jax.tree_util.tree_map(
-                    lambda x: x[:n_real], d_stack)
-                loss_stack = loss_stack[:n_real]
-                skip_stack = skip_stack[:n_real]
-            # one barrier fetch per group; per-task views are numpy slices
-            d_host, losses, skips = _fetch((d_stack, loss_stack, skip_stack))
+            if hosted:
+                # collective-free: each host fetches only its addressable
+                # shards, then drops the padding rows host-side
+                d_host, losses, skips = _fetch_local(
+                    (d_stack, loss_stack, skip_stack))
+                if rules.padded_count(n_real) != n_real:
+                    d_host = jax.tree_util.tree_map(
+                        lambda x: x[:n_real], d_host)
+                    losses = losses[:n_real]
+                    skips = skips[:n_real]
+            else:
+                if rules is not None and rules.padded_count(n_real) != n_real:
+                    d_stack = jax.tree_util.tree_map(
+                        lambda x: x[:n_real], d_stack)
+                    loss_stack = loss_stack[:n_real]
+                    skip_stack = skip_stack[:n_real]
+                # one barrier fetch per group; per-task views are numpy
+                # slices
+                d_host, losses, skips = _fetch(
+                    (d_stack, loss_stack, skip_stack))
             dt = (time.perf_counter() - t0) / len(idxs)
             for j, i in enumerate(idxs):
                 res = AdaptResult(
@@ -714,6 +796,9 @@ class TinyTrainSession:
             "scan_compiles": (self.step_cache.fleet_scan_compiles()
                               - compiles_before),
             "mesh_axes": dict(mesh.shape) if mesh is not None else None,
+            "hosts": hosts,
+            "ingestion": ("per-host" if hosted
+                          else "global" if mesh is not None else "local"),
         }
         return out
 

@@ -13,6 +13,13 @@ Keys in use:
   - ``moe_row_dispatch``: bool — per-batch-row MoE queues (shard-local).
   - ``moe_dispatch_spec``: PartitionSpec | None — placement hint for MoE
     dispatch buffers (applied via :func:`constrain`).
+  - ``fleet_mesh``: Mesh | None — the fleet-adaptation mesh, published by
+    ``adapt_many`` around its scanned dispatch so layer code can constrain
+    task-stacked intermediates.
+  - ``fleet_hosts``: int | None — process count for per-host episode
+    ingestion; ``adapt_many`` reads this as the default for its ``hosts``
+    argument, so launchers can opt a whole run into multi-process-shaped
+    ingestion without touching call sites.
 
 Everything defaults to falsy/None, so single-host code paths never need to
 touch this module.

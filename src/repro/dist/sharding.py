@@ -79,6 +79,22 @@ class FleetShardingRules:
             return n_tasks
         return -(-n_tasks // self.dp_size) * self.dp_size
 
+    def host_blocks(self, n_padded: int, n_hosts: int):
+        """Contiguous ``[lo, hi)`` per-host blocks of the padded task axis.
+
+        The multi-process ingestion contract: host ``h`` builds (and pads)
+        only rows ``lo..hi`` of the global task axis, and those rows land
+        exactly on host ``h``'s devices when the axis shards in mesh
+        order.  ``n_padded`` must split evenly over the hosts."""
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        if n_padded % n_hosts:
+            raise ValueError(
+                f"padded task count {n_padded} does not split over "
+                f"{n_hosts} hosts")
+        blk = n_padded // n_hosts
+        return [(h * blk, (h + 1) * blk) for h in range(n_hosts)]
+
     # -- tree placement (requires a real mesh) -----------------------------
 
     def _named(self, spec: Spec):
@@ -114,6 +130,52 @@ class FleetShardingRules:
         import jax
 
         return jax.device_put(tree, self.replicated(tree))
+
+    def assemble_tasks(self, blocks: Sequence[Any]) -> Any:
+        """Global task-stacked arrays from per-host blocks, gather-free.
+
+        ``blocks`` holds one pytree per host, each leaf carrying that
+        host's contiguous rows of the padded task axis (see
+        :meth:`host_blocks`).  Every leaf is assembled with
+        ``jax.make_array_from_single_device_arrays``: each device gets
+        exactly its shard, sliced out of the owning host's block and
+        ``device_put`` directly — no host ever materialises the global
+        array, which is the multi-process ingestion contract (exercised
+        here in one process over device groups).  A leaf whose spec comes
+        out replicated (degenerate 1-device mesh) falls back to a plain
+        concat + ``device_put``.
+        """
+        import jax
+
+        n_hosts = len(blocks)
+
+        def one(*leaves):
+            blk = int(leaves[0].shape[0])
+            n_padded = blk * n_hosts
+            shape = (n_padded,) + tuple(leaves[0].shape[1:])
+            spec = self.task_spec(len(shape), n_padded)
+            sh = self._named(spec)
+            full = [None]  # lazy concat for replicated / straddling shards
+
+            def rows(lo: int, hi: int):
+                h, off = divmod(lo, blk)
+                if hi <= (h + 1) * blk:
+                    return leaves[h][off:off + (hi - lo)]
+                if full[0] is None:
+                    full[0] = np.concatenate(
+                        [np.asarray(b) for b in leaves], axis=0)
+                return full[0][lo:hi]
+
+            arrs, devs = [], []
+            for dev, idx in sh.addressable_devices_indices_map(shape).items():
+                s0 = idx[0] if idx else slice(None)
+                lo = 0 if s0.start is None else int(s0.start)
+                hi = n_padded if s0.stop is None else int(s0.stop)
+                arrs.append(jax.device_put(rows(lo, hi), dev))
+                devs.append(dev)
+            return jax.make_array_from_single_device_arrays(shape, sh, arrs)
+
+        return jax.tree_util.tree_map(one, *blocks)
 
 
 class ShardingRules:

@@ -80,7 +80,22 @@ def main() -> None:
     ap.add_argument("--users", type=int, default=4,
                     help="distinct users sharing the engine with "
                          "--personalise (uid = request index mod users)")
+    ap.add_argument("--fleet", type=int, default=None, metavar="R",
+                    help="serve through R data-parallel engine replicas "
+                         "behind one FleetRouter (least-loaded routing, "
+                         "sticky uid placement, typed shedding only when "
+                         "every replica is saturated); replicas pin "
+                         "round-robin over the visible devices")
+    ap.add_argument("--refresh-cap", type=int, default=None,
+                    help="with --personalise: max users refreshed per "
+                         "between-chunks window, ranked by stale-delta age "
+                         "x banked streams (default: every eligible user)")
     args = ap.parse_args()
+    if args.fleet is not None and args.fleet < 1:
+        raise SystemExit("[serve] --fleet must be >= 1")
+    if args.fleet and args.eager:
+        raise SystemExit("[serve] --fleet requires the fused engine "
+                         "(drop --eager)")
 
     cfg = configs.preset_config(args.arch, args.preset)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -117,19 +132,25 @@ def main() -> None:
             policy = probe.policy
             print(f"[serve] personalising {args.users} users under "
                   f"{args.device}: {policy.describe()}")
-    eng = api.ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                          fused=not args.eager, chunk=args.chunk,
-                          prefill_block=args.prefill_block,
-                          temperature=args.temperature, top_k=args.top_k,
-                          kv_paging=paging or None,
-                          kv_page_size=args.page_size,
-                          kv_int8=args.kv_int8 or None,
-                          page_budget=page_budget,
-                          reserve=args.reserve,
-                          deadline_ticks=args.deadline_ticks,
-                          queue_limit=args.queue_limit,
-                          faults=faults,
-                          personalise=policy)
+    engine_kw = dict(slots=args.slots, max_len=args.max_len,
+                     fused=not args.eager, chunk=args.chunk,
+                     prefill_block=args.prefill_block,
+                     temperature=args.temperature, top_k=args.top_k,
+                     kv_paging=paging or None,
+                     kv_page_size=args.page_size,
+                     kv_int8=args.kv_int8 or None,
+                     page_budget=page_budget,
+                     reserve=args.reserve,
+                     deadline_ticks=args.deadline_ticks,
+                     queue_limit=args.queue_limit,
+                     faults=faults,
+                     personalise=policy)
+    if args.fleet:
+        eng = api.FleetRouter(cfg, params, replicas=args.fleet, **engine_kw)
+        print(f"[serve] fleet: {args.fleet} replicas over "
+              f"{len(set(map(str, eng.devices)))} device(s)")
+    else:
+        eng = api.ServeEngine(cfg, params, **engine_kw)
 
     if args.adapt:
         bb = api.backbone(args.arch, preset=args.preset, batch_size=48, seq=64)
@@ -142,7 +163,14 @@ def main() -> None:
                   "units (probe batch too large for the envelope); "
                   "serving base weights unchanged")
         else:
-            adaptation.fold_into(eng)
+            if args.fleet:
+                # fold into every replica, re-pinning each folded copy
+                for e in eng.engines:
+                    adaptation.fold_into(e)
+                    if e.device is not None:
+                        e.params = jax.device_put(e.params, e.device)
+            else:
+                adaptation.fold_into(eng)
             print(f"[serve] adapted on {args.device}: "
                   f"{adaptation.policy.describe()}")
 
@@ -169,13 +197,18 @@ def main() -> None:
     if policy is not None:
         pers = api.Personaliser(session, eng, policy,
                                 profile=args.device,
-                                iters=args.adapt_iters)
+                                iters=args.adapt_iters,
+                                refresh_cap=args.refresh_cap)
         online = pers.run_online(reqs)
         dt = time.perf_counter() - t0
         for ref in online["refreshes"]:
-            print(f"[serve] refresh {ref['round']}: users {ref['users']}, "
+            deferred = (f", {len(ref['deferred_users'])} deferred"
+                        if ref.get("deferred_users") else "")
+            wire = " (serialized)" if ref.get("wire_serialized") else ""
+            print(f"[serve] refresh {ref['round']}: users {ref['users']}"
+                  f"{deferred}, "
                   f"{ref['resident_rows_swapped']} resident rows swapped, "
-                  f"wire {ref['payload_bytes_wire']} B vs f32 "
+                  f"wire{wire} {ref['payload_bytes_wire']} B vs f32 "
                   f"{ref['payload_bytes_f32']} B "
                   f"({ref['payload_ratio']:.1f}x), adapt "
                   f"{ref['adapt_seconds']:.2f}s, swap "
@@ -209,6 +242,14 @@ def main() -> None:
             "outcome")
     mem = eng.last_run_report.get("memory", eng.memory_report())
     peak = eng.last_run_report.get("peak_resident", 0)
+    if args.fleet:
+        print(f"[serve] fleet: {mem['alive']}/{mem['replicas']} replicas, "
+              f"aggregate KV {mem['kv_cache_bytes']/2**20:.2f} MiB; "
+              + ", ".join(
+                  f"r{r['replica']}: {r.get('ticks', 0)} ticks/"
+                  f"{r.get('host_syncs', 0)} syncs"
+                  for r in eng.last_run_report.get("replicas", [])))
+        mem = mem["per_replica"][0]  # per-replica layout details below
     if mem["kv_paging"]:
         print(f"[serve] paged KV: {mem['kv_cache_bytes']/2**20:.2f} MiB "
               f"({'int8' if mem['kv_int8'] else cfg.dtype} pages, "

@@ -3,6 +3,9 @@ from .engine import (  # noqa: F401
     SubmitResult, fold_deltas,
 )
 from .faults import FaultConfig, parse_inject  # noqa: F401
+from .fleet import (  # noqa: F401
+    FleetRouter, decode_delta_payload, encode_delta_payload,
+)
 from .personalise import Personaliser  # noqa: F401
 from .paging import (  # noqa: F401
     PagePool, PagingSpec, extend, free_page_count, make_pool, pages_in_use,

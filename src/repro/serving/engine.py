@@ -106,7 +106,9 @@ chunks without draining — only that user's subsequent tokens change.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
+import time
 from typing import Any, Deque, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -214,6 +216,13 @@ class Request:
     # frozen so preempt/requeue re-attaches the same set verbatim.
     # Rejected on engines without personalisation
     delta_set: Optional[DeltaSet] = None
+    # stable sampling identity: sample keys draw on (sample_id,
+    # token-index).  None (the default) falls back to the engine request
+    # id, preserving the historical single-engine behaviour.  A fleet
+    # router sets it to the global submission index so a request samples
+    # the same stream whichever replica serves it — replica placement,
+    # re-routing and replica failure never change a sampled stream
+    sample_id: Optional[int] = None
 
     @property
     def terminal(self) -> bool:
@@ -233,7 +242,8 @@ class SubmitResult(NamedTuple):
 class _Slot:
     req: Optional[Request] = None
     cursor: int = 0  # next feed token; >= len(feed) => generating
-    rid: int = -1  # engine request id (sampling key; mirrors the fused rid)
+    rid: int = -1  # engine request id (scheduling identity; fault coords)
+    sid: int = -1  # sampling identity (request sample_id, default = rid)
     budget: int = 0  # effective KV budget (request max_len or engine-wide)
     # feed = prompt + already-generated prefix (non-empty on resume);
     # the eager mirror of the fused path's requeued PendingBuffer entry
@@ -253,6 +263,7 @@ class SlotState(NamedTuple):
     budget: jax.Array      # (slots,) int32 per-request KV budget (eviction)
     active: jax.Array      # (slots,) bool
     rid: jax.Array         # (slots,) int32 engine-internal request id; -1 free
+    sid: jax.Array         # (slots,) int32 sampling identity (default = rid)
     pages: jax.Array       # (slots,) int32 pages held (as-you-go growth)
     ttl: jax.Array         # (slots,) int32 resident ticks until deadline
     tok_base: jax.Array    # (slots,) int32 emitted tokens before (re)admit
@@ -268,6 +279,7 @@ class PendingBuffer(NamedTuple):
     budget: jax.Array   # (P,) int32 per-request KV budget
     n_pages: jax.Array  # (P,) int32 admission page demand (0 if unpaged)
     rid: jax.Array      # (P,) int32
+    sid: jax.Array      # (P,) int32 sampling identity (default = rid)
     ttl: jax.Array      # (P,) int32 remaining deadline (resident ticks)
     tok_base: jax.Array  # (P,) int32 emitted tokens before (re)admission
     preempt_left: jax.Array  # (P,) int32 requeues left
@@ -275,8 +287,13 @@ class PendingBuffer(NamedTuple):
     # staged per-user deltas, {layer: {kind: (pack, idx)}} with P-leading
     # leaves ({} when the engine has no personalise policy)
     delta: Any
-    head: jax.Array     # () int32 next entry to admit
+    head: jax.Array     # () int32 next entry to admit (strict-FIFO mode)
     count: jax.Array    # () int32 valid entries
+    # backfill admission (admit_backfill=N): per-entry admitted mask
+    # replacing the head cursor, plus the head-starvation aging counter
+    # (bypasses since the head last admitted).  Zeros in strict-FIFO mode
+    taken: jax.Array    # (P,) bool entries already admitted this buffer
+    age: jax.Array      # () int32 backfill bypasses while the head waits
 
 
 class EncRun(NamedTuple):
@@ -318,8 +335,17 @@ class ServeEngine:
         queue_limit: Optional[int] = None,
         faults: Optional[FaultConfig] = None,
         personalise: Optional[Any] = None,  # core.policy.SparseUpdatePolicy
+        device: Optional[Any] = None,  # jax.Device to pin this engine to
+        admit_backfill: Optional[int] = None,
     ):
         self.cfg = cfg
+        # replica pinning: committing the params to one device pins every
+        # jitted program (and its donated carries) to that device, so a
+        # fleet of engines dispatches concurrently — one replica per
+        # device with no cross-device transfers on the hot path
+        self.device = device
+        if device is not None:
+            params = jax.device_put(params, device)
         self.params = params
         self.n_slots = slots
         self.max_len = max_len
@@ -355,6 +381,29 @@ class ServeEngine:
                 f"reserve must be 'asyougo' or 'worstcase', got {reserve!r}")
         self.reserve = reserve
         self.rayg = self.spec is not None and reserve == "asyougo"
+        # pending-buffer page-demand backfill: when the FIFO head cannot
+        # fit under the admission predicate, admit (at most one per tick)
+        # a later pending entry whose demand fits — bounded by an aging
+        # counter of `admit_backfill` bypasses so the head cannot starve.
+        # Sampling identities are submission-ordered (sid), never
+        # admission-ordered, so streams stay schedule-invariant.
+        # Demand only differentiates under reserve='asyougo' (prompt-page
+        # pricing); worstcase prices every stream at ceil(max_len /
+        # page_size), so a blocked head implies no entry fits and the
+        # bypass correctly never fires
+        if admit_backfill is not None:
+            if self.spec is None:
+                raise ValueError(
+                    "admit_backfill requires paging (kv_paging=True): "
+                    "without a page pool admission never blocks on the "
+                    "head, so there is nothing to backfill past")
+            if int(admit_backfill) < 1:
+                raise ValueError(
+                    f"admit_backfill must be >= 1 bypasses, got "
+                    f"{admit_backfill} (None disables backfill)")
+        self._backfill = 0 if admit_backfill is None else int(admit_backfill)
+        self._head_age = 0  # bypasses since the head last admitted
+        self._eager_rids: Dict[int, int] = {}  # pre-assigned rids (eager)
         # encoder-decoder / multimodal: per-request encoder outputs are
         # pinned as a read-only page run (audio: cross-attention enc_out;
         # vlm: the image-prefix embedding swap).  The run shares the KV
@@ -526,31 +575,48 @@ class ServeEngine:
 
         # sampling happens inside the jitted step: each tick ships a
         # (slots,) int32 vector to the host instead of (slots, vocab)
-        # logits, plus a per-slot finiteness flag for the numerics guard
-        def postproc(logits, rids, tok_idx):
+        # logits, plus a per-slot finiteness flag for the numerics guard.
+        # Faults key on the scheduling identity (rid); sampling keys on
+        # the stable sampling identity (sid, default = rid)
+        def postproc(logits, rids, sids, tok_idx):
             if self.faults is not None and self.faults.nan_logits:
                 hit = FI.nan_hit(self.faults, rids, tok_idx)
                 logits = jnp.where(hit[:, None], jnp.nan, logits)
             finite = jnp.all(jnp.isfinite(logits), axis=-1)
-            return self._pick(logits, rids, tok_idx), finite
+            return self._pick(logits, sids, tok_idx), finite
 
-        def decode(p, t, c, pos, rids, tok_idx, enc, arena):
+        def decode(p, t, c, pos, rids, sids, tok_idx, enc, arena):
             logits, c = T.decode_step(cfg, p, t, c, pos, drop_free=True,
                                       **self._fwd_kwargs(enc, arena))
-            tok, finite = postproc(logits[:, 0], rids, tok_idx)
+            tok, finite = postproc(logits[:, 0], rids, sids, tok_idx)
             return tok, finite, c
 
         # stall-tick forward: generating slots pause (valid=False rows
         # advance nothing on the block path), prefilling slots keep
         # feeding — the eager mirror of the fused path's block_tick
-        def decode_masked(p, t, c, pos, valid, rids, tok_idx, enc, arena):
+        def decode_masked(p, t, c, pos, valid, rids, sids, tok_idx, enc,
+                          arena):
             logits, c = T.prefill_block(cfg, p, t, c, pos, valid[:, None],
                                         **self._fwd_kwargs(enc, arena))
-            tok, finite = postproc(logits[:, 0], rids, tok_idx)
+            tok, finite = postproc(logits[:, 0], rids, sids, tok_idx)
             return tok, finite, c
 
         self._decode = jax.jit(decode)
         self._decode_masked = jax.jit(decode_masked)
+        if device is not None:
+            # the long-lived device carries follow the params' pinning so
+            # donation works and no per-chunk cross-device copies happen
+            (self.caches, self.pool, self._enc, self._arena,
+             self._sample_key) = jax.device_put(
+                (self.caches, self.pool, self._enc, self._arena,
+                 self._sample_key), device)
+
+    def _on_device(self):
+        """Context placing ad-hoc array uploads on this engine's pinned
+        device (a no-op for unpinned engines)."""
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
 
     def _enc_fwd_kwargs(self, enc: EncRun) -> Dict[str, jax.Array]:
         """Gather the pinned encoder-run rows through the run table and
@@ -579,13 +645,16 @@ class ServeEngine:
             kw["plan"] = self.personalise
         return kw
 
-    def _pick(self, logits: jax.Array, rids: jax.Array,
+    def _pick(self, logits: jax.Array, sids: jax.Array,
               tok_idx: jax.Array) -> jax.Array:
         """Next-token choice from (slots, vocab) logits, in-graph.
 
-        ``rids`` / ``tok_idx`` are (slots,) and identify *which* token of
+        ``sids`` / ``tok_idx`` are (slots,) and identify *which* token of
         *which* request each row would emit; the sample key is derived
-        from them, never from wall-clock scheduling.
+        from them, never from wall-clock scheduling.  ``sids`` is the
+        stable sampling identity (``Request.sample_id``, defaulting to
+        the engine rid), so a fleet router that stamps submission-order
+        sample_ids gets bit-identical sampled streams on any replica.
         """
         if self.temperature <= 0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -598,7 +667,7 @@ class ServeEngine:
         def row_key(r, i):
             return jax.random.fold_in(jax.random.fold_in(base, r), i)
 
-        keys = jax.vmap(row_key)(rids, tok_idx)
+        keys = jax.vmap(row_key)(sids, tok_idx)
         return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
 
     # ------------------------------------------------------------------
@@ -791,6 +860,43 @@ class ServeEngine:
     # Eager per-tick path (fused=False): the debugging reference
     # ------------------------------------------------------------------
 
+    def _rid_for(self, req: Request) -> int:
+        """Eager-path rid assignment in *submission* order.  A backfill
+        scan pre-assigns rids to skipped fresh entries (so the sampling
+        default sid = rid stays submission-ordered, matching the fused
+        path's staging-order rids); head admissions pop the pre-assigned
+        rid or draw the next one."""
+        r = self._eager_rids.pop(id(req), None)
+        if r is None:
+            r = self._next_rid
+            self._next_rid += 1
+        return r
+
+    def _backfill_pick(self, free_pages: int):
+        """First pending entry (requeue then queue, FIFO order) whose
+        admission price fits ``free_pages``; removes it from its deque.
+        Returns (rid, req, resumed, feed, budget, want) or None."""
+        for qi, (rid, req) in enumerate(self._requeue):
+            budget = self.request_budget(req)
+            feed = self._feed(req)
+            want = self._admit_pages(len(feed), budget)
+            if want + self._enc_pages <= free_pages:
+                del self._requeue[qi]
+                return rid, req, True, feed, budget, want
+        for qi, req in enumerate(self.queue):
+            if id(req) not in self._eager_rids:
+                self._eager_rids[id(req)] = self._next_rid
+                self._next_rid += 1
+            budget = self.request_budget(req)
+            feed = self._feed(req)
+            want = self._admit_pages(len(feed), budget)
+            if want + self._enc_pages <= free_pages:
+                rid = self._eager_rids.pop(id(req))
+                del self.queue[qi]
+                self._attach_delta(req)
+                return rid, req, False, feed, budget, want
+        return None
+
     def _admit(self) -> None:
         # preempted streams restage ahead of fresh work (they hold the
         # oldest rids — same order the fused host restage produces)
@@ -800,6 +906,7 @@ class ServeEngine:
         if self.spec is not None and (self.queue or self._requeue):
             # debug-path host check (the fused path does this on device)
             free_pages = int(jax.device_get(PG.free_page_count(self.pool)))
+        backfilled = False
         for i, sl in enumerate(self.slots):
             if sl.req is not None or not (self._requeue or self.queue):
                 continue
@@ -811,34 +918,53 @@ class ServeEngine:
                 resumed = False
             budget = self.request_budget(req)
             feed = self._feed(req)
+            picked = None
             if self.spec is not None:
                 # a request's admission price is its KV demand plus its
                 # pinned encoder run (0 on decoder-only configs)
                 want = self._admit_pages(len(feed), budget)
                 if want + self._enc_pages > free_pages:
-                    # FIFO head-of-line blocking: admission stalls
-                    # until running requests release pages
-                    break
+                    # FIFO head-of-line blocking: admission stalls until
+                    # running requests release pages — unless backfill is
+                    # on and the head's aging bound is not yet spent, in
+                    # which case at most ONE later entry that fits admits
+                    # in its place this tick (the fused mirror)
+                    if (self._backfill and not backfilled
+                            and self._head_age < self._backfill):
+                        picked = self._backfill_pick(free_pages)
+                    if picked is None:
+                        break
+                    rid, req, resumed, feed, budget, want = picked
+                    backfilled = True
+                    self._head_age += 1
                 free_pages -= want + self._enc_pages
                 need[i] = want
-            if resumed:
-                self._requeue.popleft()
-            else:
-                self.queue.popleft()
-                # admission order matches the fused path's staging order,
-                # so sampling keys (keyed on rid) agree between the paths
-                rid = self._next_rid
-                self._next_rid += 1
-                self._attach_delta(req)
+            if picked is None:
+                # head admission (the pick already left its deque)
+                if resumed:
+                    self._requeue.popleft()
+                else:
+                    self.queue.popleft()
+                    # submission-order rids: admission order matches the
+                    # fused path's staging order on the FIFO path, and
+                    # the backfill scan pre-assigns skipped entries
+                    rid = self._rid_for(req)
+                    self._attach_delta(req)
+                self._head_age = 0
             sl.req = req
             sl.cursor = 0
             sl.rid = rid
+            sl.sid = (req.sample_id if req.sample_id is not None else rid)
             sl.budget = budget
             sl.feed = feed
             sl.pages = int(need[i])
             sl.tok_base = len(req.out)
             self.pos[i] = 0
             mask[i] = True
+            if backfilled:
+                # the head is still blocked and the one backfill slot of
+                # this tick is spent
+                break
         if mask.any():
             if self.spec is not None:
                 self.pool = PG.reserve(
@@ -1001,20 +1127,22 @@ class ServeEngine:
                 valid[i] = not stall_tick
         rids = np.asarray([sl.rid if sl.req is not None else -1
                            for sl in self.slots], np.int32)
+        sids = np.asarray([sl.sid if sl.req is not None else -1
+                           for sl in self.slots], np.int32)
         tok_idx = np.asarray([len(sl.req.out) if sl.req is not None else 0
                               for sl in self.slots], np.int32)
         if stall_tick:
             next_tok, finite, self.caches = self._decode_masked(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(self.pos, jnp.int32), jnp.asarray(valid),
-                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc,
-                self._arena)
+                jnp.asarray(rids), jnp.asarray(sids), jnp.asarray(tok_idx),
+                self._enc, self._arena)
         else:
             next_tok, finite, self.caches = self._decode(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(self.pos, jnp.int32),
-                jnp.asarray(rids), jnp.asarray(tok_idx), self._enc,
-                self._arena)
+                jnp.asarray(rids), jnp.asarray(sids), jnp.asarray(tok_idx),
+                self._enc, self._arena)
         next_tok, finite = _telemetry._fetch((next_tok, finite))
         # -- advance lifecycle: emit, numerics, done/trunc, deadline
         for i in live:
@@ -1080,11 +1208,14 @@ class ServeEngine:
         def z():
             return jnp.zeros((self.n_slots,), jnp.int32)
 
-        return SlotState(
+        state = SlotState(
             prompt=jnp.zeros((self.n_slots, self.max_len), jnp.int32),
             prompt_len=z(), cursor=z(), pos=z(), last_tok=z(), remaining=z(),
             budget=z(), active=jnp.zeros((self.n_slots,), bool), rid=z() - 1,
-            pages=z(), ttl=z(), tok_base=z(), preempt_left=z())
+            sid=z() - 1, pages=z(), ttl=z(), tok_base=z(), preempt_left=z())
+        if self.device is not None:
+            state = jax.device_put(state, self.device)
+        return state
 
     def scan_compiles(self) -> int:
         """Compiled ``scan_ticks`` programs (one per distinct chunk size)."""
@@ -1136,6 +1267,9 @@ class ServeEngine:
             # trace-time personalisation gating: without a policy the
             # compiled programs are byte-for-byte the pre-arena ones
             pers_on = self.personalise is not None
+            # trace-time backfill gating: 0 compiles the strict-FIFO
+            # head-cursor admission unchanged
+            backfill = self._backfill
 
             def body(params, carry, gt):
                 state, caches, pend, pool, enc, arena = carry
@@ -1143,8 +1277,20 @@ class ServeEngine:
                 # -- admit: free slots claim pending entries in FIFO order
                 free = ~state.active
                 rank = jnp.cumsum(free.astype(jnp.int32)) - 1
-                fifo = free & (pend.head + rank < pend.count)
-                src = jnp.clip(pend.head + rank, 0, P - 1)
+                if backfill:
+                    # taken-mask admission: eligible entries (valid, not
+                    # yet admitted) claim free slots in FIFO index order —
+                    # identical to the head cursor until a backfill skips
+                    # past a blocked head
+                    idxp = jnp.arange(P)
+                    elig = (~pend.taken) & (idxp < pend.count)
+                    n_elig = jnp.sum(elig.astype(jnp.int32))
+                    order = jnp.argsort(jnp.where(elig, idxp, P + idxp))
+                    fifo = free & (rank < n_elig)
+                    src = order[jnp.clip(rank, 0, P - 1)]
+                else:
+                    fifo = free & (pend.head + rank < pend.count)
+                    src = jnp.clip(pend.head + rank, 0, P - 1)
                 if spec is not None:
                     # a candidate is admitted only if the prefix demand up
                     # to and including it fits the free-list; the cumsum is
@@ -1159,6 +1305,42 @@ class ServeEngine:
                                     if enc_on else 0)
                     fits = jnp.cumsum(price) <= PG.free_page_count(pool)
                     take = fifo & fits
+                    if backfill:
+                        # page-demand backfill, at most one entry per
+                        # tick: when the head is blocked (so the FIFO
+                        # pass admitted nothing), the first later entry
+                        # whose whole price fits the remaining pages
+                        # admits into the first free slot — bounded by
+                        # the aging counter (`backfill` bypasses) so the
+                        # head cannot starve.  Sampling keys are (sid,
+                        # token-index) functions, so admission order
+                        # never changes a stream
+                        left = PG.free_page_count(pool) - jnp.sum(
+                            jnp.where(take, price, 0))
+                        taken_now = pend.taken.at[
+                            jnp.where(take, src, P)].set(True, mode="drop")
+                        price_e = pend.n_pages + (enc_pages if enc_on
+                                                  else 0)
+                        cand = elig & ~taken_now & (price_e <= left)
+                        head_blocked = (n_elig > 0) & ~taken_now[order[0]]
+                        slots_left = free & ~take
+                        first_left = slots_left & (jnp.cumsum(
+                            slots_left.astype(jnp.int32)) == 1)
+                        do_bf = (head_blocked & jnp.any(cand)
+                                 & jnp.any(slots_left)
+                                 & (pend.age < backfill))
+                        pick = jnp.argmax(cand)
+                        take2 = first_left & do_bf
+                        src = jnp.where(take2, pick, src)
+                        take = take | take2
+                        need = jnp.where(take, pend.n_pages[src], 0)
+                        taken_now = jnp.where(
+                            do_bf, taken_now.at[pick].set(True), taken_now)
+                        pend = pend._replace(
+                            taken=taken_now,
+                            age=jnp.where(
+                                do_bf, pend.age + 1,
+                                jnp.where(head_blocked, pend.age, 0)))
                     pool = PG.reserve(pool, need, take)
                     if enc_on:
                         pool, enc_table = PG.reserve_run(
@@ -1190,6 +1372,7 @@ class ServeEngine:
                     budget=sel(pend.budget[src], state.budget),
                     active=state.active | take,
                     rid=sel(pend.rid[src], state.rid),
+                    sid=sel(pend.sid[src], state.sid),
                     pages=sel(pend.n_pages[src], state.pages),
                     ttl=sel(pend.ttl[src], state.ttl),
                     tok_base=sel(pend.tok_base[src], state.tok_base),
@@ -1197,7 +1380,10 @@ class ServeEngine:
                                      state.preempt_left),
                 )
                 n_admit = jnp.sum(take.astype(jnp.int32))
-                pend = pend._replace(head=pend.head + n_admit)
+                if not backfill:
+                    # in backfill mode the taken mask *is* the cursor —
+                    # head stays 0 and the host drains by rid membership
+                    pend = pend._replace(head=pend.head + n_admit)
                 if spec is not None:
                     # sync fresh page-table rows into the caches before the
                     # forward writes through them
@@ -1362,7 +1548,7 @@ class ServeEngine:
                 finite = jnp.all(jnp.isfinite(logits), axis=-1)
                 bad = emit & ~finite
                 good_emit = emit & finite
-                next_tok = self._pick(logits, state.rid, tok_idx)
+                next_tok = self._pick(logits, state.sid, tok_idx)
                 remaining = state.remaining - good_emit.astype(jnp.int32)
                 done = state.active & ~bad & (
                     (remaining <= 0) | (pos >= state.budget - 1))
@@ -1418,7 +1604,14 @@ class ServeEngine:
 
                 def cond_fn(c):
                     t, state, caches, pend, pool, enc, arena, ys = c
-                    drained = pend.head >= pend.count
+                    if backfill:
+                        left = jnp.sum(
+                            ((~pend.taken)
+                             & (jnp.arange(P) < pend.count)).astype(
+                                 jnp.int32))
+                        drained = left == 0
+                    else:
+                        drained = pend.head >= pend.count
                     free = jnp.any(~state.active)
                     idle = ~jnp.any(state.active)
                     stop = drained & ((free & backlog) | idle)
@@ -1459,6 +1652,7 @@ class ServeEngine:
         budget = np.zeros((P,), np.int32)
         n_pages = np.zeros((P,), np.int32)
         rid = np.full((P,), -1, np.int32)
+        sid = np.full((P,), -1, np.int32)
         ttl = np.zeros((P,), np.int32)
         tok_base = np.zeros((P,), np.int32)
         preempt_left = np.zeros((P,), np.int32)
@@ -1482,6 +1676,7 @@ class ServeEngine:
             budget[j] = self.request_budget(req)
             n_pages[j] = self._admit_pages(n, int(budget[j]))
             rid[j] = r
+            sid[j] = req.sample_id if req.sample_id is not None else r
             # the deadline balance survives preemption: remaining ttl =
             # deadline minus resident ticks already consumed under this rid
             ttl[j] = min(self._deadline(req) - self._resident.get(r, 0),
@@ -1501,15 +1696,27 @@ class ServeEngine:
         self._pending_cache = PendingBuffer(
             jnp.asarray(prompt), jnp.asarray(length), jnp.asarray(max_new),
             jnp.asarray(budget), jnp.asarray(n_pages),
-            jnp.asarray(rid), jnp.asarray(ttl), jnp.asarray(tok_base),
+            jnp.asarray(rid), jnp.asarray(sid), jnp.asarray(ttl),
+            jnp.asarray(tok_base),
             jnp.asarray(preempt_left), jnp.asarray(enc),
             jax.tree_util.tree_map(jnp.asarray, delta),
             jnp.zeros((), jnp.int32),
-            jnp.asarray(np.int32(len(self._staged))))
+            jnp.asarray(np.int32(len(self._staged))),
+            jnp.zeros((P,), bool),
+            # the head's accumulated bypass balance carries across chunk
+            # rebuilds so restaging can't reset the starvation bound
+            jnp.asarray(np.int32(self._head_age)))
         self._pending_dirty = False
         return self._pending_cache
 
-    def _run_fused(self, max_ticks: int, chunk: Optional[int] = None) -> None:
+    # -- fused run, decomposed: begin → (dispatch → drain)* → finish.
+    # ``_run_fused`` is the solo-engine composition; the fleet router
+    # drives the same four calls across replicas, dispatching every
+    # replica before draining any so device execution overlaps while
+    # each replica keeps its one-blocking-sync-per-chunk budget.
+
+    def fused_begin(self, chunk: Optional[int] = None) -> None:
+        """Open a fused run: validate mode, init carries, reset counters."""
         if any(sl.req is not None for sl in self.slots):
             raise RuntimeError(
                 "eager slots busy; drain step() work before a fused run")
@@ -1518,113 +1725,215 @@ class ServeEngine:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if self._state is None:
             self._state = self._init_state()
-        used = chunks = dispatched = peak = 0
-        syncs0 = _telemetry.host_sync_count()
-        while ((self.queue or self._staged or self._live or self._requeue)
-               and used < max_ticks):
-            # restage preempted streams at the head of the staging mirror,
-            # in preemption order (overflow waits for the next chunk),
-            # then refill with fresh work;
-            # the mirror becomes the device pending buffer for this chunk
-            # (host -> device, never a blocking sync)
-            while self._requeue and len(self._staged) < self.pending_size:
-                self._staged.appendleft(self._requeue.pop())
-                self._pending_dirty = True
-            while self.queue and len(self._staged) < self.pending_size:
-                req = self.queue.popleft()
-                rid = self._next_rid
-                self._next_rid += 1
-                self._attach_delta(req)
-                self._by_rid[rid] = req
-                self._staged.append((rid, req))
-                self._pending_dirty = True
-            # backlog: queued work beyond the device buffer's capacity — the
-            # device loop returns early if the buffer drains while a slot is
-            # free, so the freed slot refills here instead of idling out the
-            # chunk.  budget is a traced scalar: tail chunks near max_ticks
-            # reuse the one compiled program per chunk size.
-            backlog = bool(self.queue or self._requeue)
-            budget = min(chunk, max_ticks - used)
-            run = self.scan_ticks(chunk)
-            (self._state, self.caches, _, self.pool, self._enc, self._arena,
-             ys, t_exec) = run(
+        self._frun = {"chunk": chunk, "used": 0, "chunks": 0,
+                      "dispatched": 0, "peak": 0, "syncs": 0,
+                      "toks": 0, "busy_s": 0.0}
+
+    def has_work(self) -> bool:
+        """Anything queued, staged, resident or awaiting requeue?"""
+        return bool(self.queue or self._staged or self._live
+                    or self._requeue)
+
+    def fused_dispatch(self, budget: Optional[int] = None):
+        """Stage work and launch one chunk; returns the unfetched handle.
+
+        ``None`` when the engine has no work.  The handle is async device
+        output — the caller may dispatch other replicas before handing it
+        to :meth:`fused_drain`, which performs the chunk's single
+        blocking host sync.
+        """
+        if not self.has_work():
+            return None
+        fr = self._frun
+        t_busy = time.perf_counter()
+        # restage preempted streams at the head of the staging mirror,
+        # in preemption order (overflow waits for the next chunk),
+        # then refill with fresh work;
+        # the mirror becomes the device pending buffer for this chunk
+        # (host -> device, never a blocking sync)
+        while self._requeue and len(self._staged) < self.pending_size:
+            self._staged.appendleft(self._requeue.pop())
+            self._pending_dirty = True
+        while self.queue and len(self._staged) < self.pending_size:
+            req = self.queue.popleft()
+            rid = self._rid_for(req)
+            self._attach_delta(req)
+            self._by_rid[rid] = req
+            self._staged.append((rid, req))
+            self._pending_dirty = True
+        # backlog: queued work beyond the device buffer's capacity — the
+        # device loop returns early if the buffer drains while a slot is
+        # free, so the freed slot refills here instead of idling out the
+        # chunk.  budget is a traced scalar: tail chunks near max_ticks
+        # reuse the one compiled program per chunk size.
+        backlog = bool(self.queue or self._requeue)
+        budget = (fr["chunk"] if budget is None
+                  else min(fr["chunk"], int(budget)))
+        run = self.scan_ticks(fr["chunk"])
+        with self._on_device():
+            (self._state, self.caches, pend, self.pool, self._enc,
+             self._arena, ys, t_exec) = run(
                 self.params, self._state, self.caches, self._make_pending(),
                 self.pool, self._enc, self._arena, budget, backlog,
                 np.int32(self.ticks))
-            # the single blocking transfer of the chunk: per-tick events
-            (rids, toks, outs, act, n_admit), t_exec = (
-                _telemetry._fetch((ys, t_exec)))
-            if int(t_exec) > 0:
-                # per-slot rid occupancy at the last executed tick — the
-                # (sync-free) resident map swap_deltas targets between
-                # chunks; terminal rids resolve to nothing via _by_rid
-                self._slot_rids = rids[int(t_exec) - 1].copy()
+        # pend.age rides along so backfill's starvation balance survives
+        # buffer rebuilds without costing a second fetch
+        fr["busy_s"] += time.perf_counter() - t_busy
+        return ys, t_exec, pend.age
+
+    def fused_drain(self, handle) -> None:
+        """Fetch one dispatched chunk — the blocking sync — and book it."""
+        fr = self._frun
+        t_busy = time.perf_counter()
+        ys, t_exec, age = handle
+        # the single blocking transfer of the chunk: per-tick events
+        (rids, toks, outs, act, n_admit), t_exec, age = (
+            _telemetry._fetch((ys, t_exec, age)))
+        fr["syncs"] += 1  # exactly one _fetch per drained chunk
+        if int(t_exec) > 0:
+            # per-slot rid occupancy at the last executed tick — the
+            # (sync-free) resident map swap_deltas targets between
+            # chunks; terminal rids resolve to nothing via _by_rid
+            self._slot_rids = rids[int(t_exec) - 1].copy()
+        if self._backfill:
+            # backfill admits by taken-mask, not head cursor: a staged
+            # entry's rid appears in the event rows iff it was admitted
+            # this chunk (staged entries are never resident at chunk
+            # start), so the mirror drains by membership; the fetched
+            # device aging counter is the carried starvation balance
+            ev = {int(r) for r in np.unique(rids) if r >= 0}
+            kept: Deque[Tuple[int, Request]] = collections.deque()
+            moved = 0
+            for r_, req_ in self._staged:
+                if r_ in ev:
+                    self._live.add(r_)
+                    moved += 1
+                else:
+                    kept.append((r_, req_))
+            self._staged = kept
+            if moved:
+                self._pending_dirty = True
+            self._head_age = int(age)
+        else:
             consumed = int(n_admit.sum())
             for _ in range(consumed):
                 rid, _req = self._staged.popleft()
                 self._live.add(rid)
             if consumed:
                 self._pending_dirty = True
-            # residency ledger for deadlines: each rid event row is one
-            # resident tick (preemption/eviction ticks included) — counted
-            # from the already-fetched arrays, no extra transfer
-            res_rids, res_counts = np.unique(rids[rids >= 0],
-                                             return_counts=True)
-            for r, c in zip(res_rids, res_counts):
-                r = int(r)
-                self._resident[r] = self._resident.get(r, 0) + int(c)
-            # drain O(emitted + finished) event cells, not chunk x slots:
-            # np.nonzero walks ticks row-major, so per-request appends stay
-            # in generation order (terminal cells coincide with their last
-            # emit, hence the second pass)
-            for t, i in zip(*np.nonzero(toks >= 0)):
-                self._by_rid[int(rids[t, i])].out.append(int(toks[t, i]))
-            for t, i in zip(*np.nonzero(outs > 0)):
-                rid = int(rids[t, i])
-                code = int(outs[t, i])
-                if code == OUTCOME_REQUEUED:
-                    # preempted with retry budget: back to the host for
-                    # restage at the top of the next chunk
-                    req = self._by_rid[rid]
-                    req.preempts += 1
-                    self._live.discard(rid)
-                    self._requeue.append((rid, req))
-                    self._tally["requeued"] = (
-                        self._tally.get("requeued", 0) + 1)
-                    continue
-                req = self._by_rid.pop(rid)
-                req.outcome = OUTCOME_NAMES[code]
-                if code in (OUTCOME_DONE, OUTCOME_TRUNCATED):
-                    req.done = True
-                    req.truncated = code == OUTCOME_TRUNCATED
-                self._tally[req.outcome] = (
-                    self._tally.get(req.outcome, 0) + 1)
+        # residency ledger for deadlines: each rid event row is one
+        # resident tick (preemption/eviction ticks included) — counted
+        # from the already-fetched arrays, no extra transfer
+        res_rids, res_counts = np.unique(rids[rids >= 0],
+                                         return_counts=True)
+        for r, c in zip(res_rids, res_counts):
+            r = int(r)
+            self._resident[r] = self._resident.get(r, 0) + int(c)
+        # drain O(emitted + finished) event cells, not chunk x slots:
+        # np.nonzero walks ticks row-major, so per-request appends stay
+        # in generation order (terminal cells coincide with their last
+        # emit, hence the second pass)
+        for t, i in zip(*np.nonzero(toks >= 0)):
+            self._by_rid[int(rids[t, i])].out.append(int(toks[t, i]))
+        for t, i in zip(*np.nonzero(outs > 0)):
+            rid = int(rids[t, i])
+            code = int(outs[t, i])
+            if code == OUTCOME_REQUEUED:
+                # preempted with retry budget: back to the host for
+                # restage at the top of the next chunk
+                req = self._by_rid[rid]
+                req.preempts += 1
                 self._live.discard(rid)
-                self._resident.pop(rid, None)
-                self._enc_host.pop(rid, None)
-            ticks_used = int(act.sum())
-            used += ticks_used
-            self.ticks += ticks_used
-            dispatched += int(t_exec)
-            chunks += 1
-            if rids.size:
-                # concurrent resident streams per tick, from the already-
-                # fetched event rows (rid >= 0 = slot held a request that
-                # tick) — no extra transfer
-                peak = max(peak, int((rids >= 0).sum(axis=1).max()))
+                self._requeue.append((rid, req))
+                self._tally["requeued"] = (
+                    self._tally.get("requeued", 0) + 1)
+                continue
+            req = self._by_rid.pop(rid)
+            req.outcome = OUTCOME_NAMES[code]
+            if code in (OUTCOME_DONE, OUTCOME_TRUNCATED):
+                req.done = True
+                req.truncated = code == OUTCOME_TRUNCATED
+            self._tally[req.outcome] = (
+                self._tally.get(req.outcome, 0) + 1)
+            self._live.discard(rid)
+            self._resident.pop(rid, None)
+            self._enc_host.pop(rid, None)
+        ticks_used = int(act.sum())
+        fr["used"] += ticks_used
+        self.ticks += ticks_used
+        fr["dispatched"] += int(t_exec)
+        fr["chunks"] += 1
+        fr["toks"] += int((toks >= 0).sum())
+        fr["busy_s"] += time.perf_counter() - t_busy
+        if rids.size:
+            # concurrent resident streams per tick, from the already-
+            # fetched event rows (rid >= 0 = slot held a request that
+            # tick) — no extra transfer
+            fr["peak"] = max(fr["peak"],
+                             int((rids >= 0).sum(axis=1).max()))
+
+    def fused_finish(self) -> None:
+        """Close the run: publish ``last_run_report`` from the counters."""
+        fr = self._frun
         self.last_run_report = {
-            "ticks": used, "chunks": chunks,
-            "host_syncs": _telemetry.host_sync_count() - syncs0,
+            "ticks": fr["used"], "chunks": fr["chunks"],
+            # one blocking fetch per drained chunk, counted per engine —
+            # interleaved replica drains never cross-book a sync
+            "host_syncs": fr["syncs"],
             # invariant guard: the drain early-exit means every executed
             # device tick has an active slot, so this always equals
             # "ticks" — the capacity-1 regression test asserts the
             # equality and catches any reintroduction of idle chunk
             # remainders
-            "ticks_dispatched": dispatched,
-            "peak_resident": peak,
+            "ticks_dispatched": fr["dispatched"],
+            "peak_resident": fr["peak"],
+            "new_tokens": fr["toks"],
+            # host wall time spent inside this engine's dispatch+drain
+            # calls (the blocking fetch included, inter-chunk idle
+            # excluded) — the denominator of per-replica capacity
+            "busy_seconds": fr["busy_s"],
             "outcomes": dict(self._tally),
             "memory": self.memory_report(),
         }
+
+    def _run_fused(self, max_ticks: int, chunk: Optional[int] = None) -> None:
+        self.fused_begin(chunk)
+        fr = self._frun
+        while self.has_work() and fr["used"] < max_ticks:
+            handle = self.fused_dispatch(max_ticks - fr["used"])
+            if handle is None:
+                break
+            self.fused_drain(handle)
+        self.fused_finish()
+
+    def evacuate(self) -> List[Request]:
+        """Pull every unfinished request off this engine (replica failure).
+
+        Returns the orphans in submission order — queued, staged, requeued
+        and resident alike — and clears the host scheduling state.  Device
+        KV/page state is simply abandoned: resumption elsewhere is the
+        preemption-requeue recompute swap (the prompt plus the generated
+        prefix re-prefill, realigning positions and sample keys), so a
+        re-submitted orphan's remaining stream is bit-identical as long as
+        its ``sample_id`` rides along.  The deadline clock restarts on the
+        adopting engine — failover extends, never shortens, a budget.
+        """
+        orphans = [req for _, req in sorted(self._by_rid.items())]
+        orphans += list(self.queue)
+        self.queue.clear()
+        self._staged.clear()
+        self._requeue.clear()
+        self._by_rid.clear()
+        self._live.clear()
+        self._resident.clear()
+        self._enc_host.clear()
+        self._eager_rids.clear()
+        self._pending_dirty = True
+        self._pending_cache = None
+        self._slot_rids = np.full((self.n_slots,), -1, np.int32)
+        self._head_age = 0
+        self._state = None  # carries re-init cold on any later run
+        return orphans
 
     # ------------------------------------------------------------------
     # Online personalisation: per-user registry + hot-swap

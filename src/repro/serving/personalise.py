@@ -35,7 +35,7 @@ import numpy as np
 
 from ..core.policy import SparseUpdatePolicy
 from ..optim import compress as C
-from .engine import DeltaSet, Request, ServeEngine
+from .engine import DeltaSet, Request
 
 __all__ = ["Personaliser"]
 
@@ -73,13 +73,25 @@ class Personaliser:
         When True (default) the delta exchange goes through
         ``int8_compress``/``int8_decompress`` with a persistent per-user
         error-feedback residual; when False deltas are swapped in at full
-        precision (payload accounting then shows ratio 1.0).
+        precision (payload accounting then shows ratio 1.0).  When the
+        engine exposes ``push_delta_payload`` (a :class:`FleetRouter`),
+        the compressed exchange crosses that boundary as real serialized
+        bytes (``fleet.encode_delta_payload``) and the wire accounting
+        measures the actual payload.
+    refresh_cap:
+        Cost-aware refresh scheduling: at most this many users refresh
+        per between-chunks window.  Eligible users (>= ``min_streams``
+        banked) are ranked by stale-delta age (windows since their last
+        refresh) x banked-stream count; the rest defer to later windows
+        — bounding the adapt stall per chunk under heavy traffic.  None
+        (default) refreshes every eligible user, the historical
+        ``min_streams``-trigger behaviour.
     """
 
     def __init__(
         self,
         session: Any,
-        engine: ServeEngine,
+        engine: Any,  # ServeEngine or FleetRouter (duck-typed)
         policy: SparseUpdatePolicy,
         *,
         profile: Any = "jetson-nano",
@@ -90,6 +102,7 @@ class Personaliser:
         shots: int = 4,
         seq: int = 32,
         compress: bool = True,
+        refresh_cap: Optional[int] = None,
         seed: int = 0,
     ):
         if engine.personalise is None:
@@ -107,11 +120,20 @@ class Personaliser:
         self.shots = max(1, int(shots))
         self.seq = int(seq)
         self.compress = bool(compress)
+        if refresh_cap is not None and int(refresh_cap) < 1:
+            raise ValueError(
+                f"refresh_cap must be >= 1 users per window, got "
+                f"{refresh_cap} (None disables the cap)")
+        self.refresh_cap = None if refresh_cap is None else int(refresh_cap)
         self._rng = np.random.default_rng(seed)
         # per-user state: finished-stream corpus, persistent EF residual
         self._streams: Dict[int, List[np.ndarray]] = {}
         self._ef: Dict[int, Any] = {}
         self._seen: set = set()
+        # refresh-scheduling clocks: between-chunks windows elapsed and
+        # each user's last refreshed window (0 = never)
+        self._window = 0
+        self._last_refresh: Dict[int, int] = {}
         self.refreshes = 0
         self.last_report: Dict[str, Any] = {}
 
@@ -169,10 +191,26 @@ class Personaliser:
         per-round accounting; an empty dict means no user was eligible."""
         from ..core.session import Task
 
-        uids = sorted(u for u, s in self._streams.items()
-                      if len(s) >= self.min_streams)
-        if not uids:
+        self._window += 1
+        eligible = sorted(u for u, s in self._streams.items()
+                          if len(s) >= self.min_streams)
+        if not eligible:
             return {}
+        deferred: List[int] = []
+        if self.refresh_cap is not None and len(eligible) > self.refresh_cap:
+            # cost-aware scheduling: the refresh score is stale-delta age
+            # (windows since this user last refreshed) x banked-stream
+            # count, so a long-starved light user eventually outranks a
+            # heavy fresh one; the per-window cap bounds the adapt stall
+            def score(u: int) -> int:
+                age = max(1, self._window - self._last_refresh.get(u, 0))
+                return age * len(self._streams[u])
+
+            ranked = sorted(eligible, key=lambda u: (-score(u), u))
+            uids = sorted(ranked[:self.refresh_cap])
+            deferred = sorted(ranked[self.refresh_cap:])
+        else:
+            uids = eligible
         tasks = [Task.from_episode(self._episode(u), self._rng,
                                    getattr(self.session, "max_way", 16),
                                    name=f"user{u}")
@@ -183,6 +221,11 @@ class Personaliser:
             iters=self.iters, policy_override=self.policy)
         adapt_s = time.perf_counter() - t0
 
+        # the router boundary: when the engine accepts serialized delta
+        # payloads, the compressed exchange ships as real bytes on the
+        # wire (sender quantises + serializes; the receiving side decodes
+        # and decompresses) — otherwise the historical in-process handoff
+        push = getattr(self.engine, "push_delta_payload", None)
         users, raw_b, wire_b, swapped, swap_s = [], 0, 0, 0, 0.0
         for uid, ad in zip(uids, results):
             deltas = ad.deltas
@@ -194,6 +237,20 @@ class Personaliser:
                     ef = C.ef_state_init(deltas)
                 q, scales, ef = C.int8_compress(deltas, ef)
                 self._ef[uid] = ef  # residual survives to the next round
+                if push is not None:
+                    from .fleet import encode_delta_payload
+
+                    payload = encode_delta_payload(self.policy, q, scales)
+                    wire = len(payload)
+                    t1 = time.perf_counter()
+                    swapped += push(uid, payload)
+                    swap_s += time.perf_counter() - t1
+                    raw_b += raw
+                    wire_b += wire
+                    users.append(uid)
+                    self._last_refresh[uid] = self._window
+                    self._streams[uid] = []
+                    continue
                 wire = (_payload_bytes(q)
                         + 4 * len(jax.tree_util.tree_leaves(scales)))
                 deltas = C.int8_decompress(q, scales)
@@ -206,18 +263,22 @@ class Personaliser:
             raw_b += raw
             wire_b += wire
             users.append(uid)
+            self._last_refresh[uid] = self._window
             self._streams[uid] = []  # corpus consumed by this refresh
 
         self.refreshes += 1
         self.last_report = {
             "round": self.refreshes,
             "users": users,
+            "deferred_users": deferred,
+            "window": self._window,
             "adapt_seconds": adapt_s,
             "swap_seconds": swap_s,
             "resident_rows_swapped": swapped,
             "payload_bytes_f32": raw_b,
             "payload_bytes_wire": wire_b,
             "payload_ratio": raw_b / max(1, wire_b),
+            "wire_serialized": push is not None and self.compress,
         }
         return self.last_report
 
@@ -246,7 +307,9 @@ class Personaliser:
             if r:
                 history.append(r)
             rounds += 1
-            if all(q.done for q in requests):
+            # every request at a typed terminal outcome (done, truncated,
+            # expired, ...) ends the loop — only in-flight work continues
+            if all(q.terminal for q in requests):
                 break
         return {
             "rounds": rounds,

@@ -1,0 +1,366 @@
+"""Fleet serving: R ServeEngine replicas behind one FleetRouter.
+
+The acceptance matrix for data-parallel scale-out: the per-request token
+streams coming out of an R-replica fleet must be identical to a single
+engine running the same submission sequence (greedy and sampled, paged
+and personalised) — the router's global submission index becomes each
+request's ``sample_id``, so sampling keys are placement-invariant — while
+every replica keeps its one-host-sync-per-chunk budget.  Plus the control
+plane: sticky uid placement with delta migration on re-routing, typed
+``queue_full`` only at fleet-wide saturation, replica-kill chaos where
+every inflight request still reaches exactly one typed terminal outcome,
+the serialized int8 delta payload boundary, and the pending-buffer
+page-demand backfill (schedule-invariant streams, bounded head aging).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import TinyTrainSession, lm_backbone
+from repro.core.policy import SelectedUnit, SparseUpdatePolicy
+from repro.models import transformer as T
+from repro.models.api import ArchConfig
+from repro.optim import compress as C
+from repro.serving import (
+    DeltaSet, FleetRouter, Personaliser, Request, ServeEngine,
+    decode_delta_payload, encode_delta_payload,
+)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=32, vocab=64,
+                n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base).validate()
+
+
+def covering_policy(bb):
+    units, seen = [], set()
+    for c in reversed(bb.unit_costs):
+        if c.kind not in seen:
+            units.append(SelectedUnit(
+                c.layer, c.kind, tuple(sorted({0, c.n_channels - 1}))))
+            seen.add(c.kind)
+    units.sort(key=lambda u: (u.layer, u.kind))
+    return SparseUpdatePolicy(horizon=0, units=tuple(units))
+
+
+def rand_deltas(bb, policy, seed, scale=0.05):
+    deltas = bb.init_deltas(policy)
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    leaves = [jax.random.normal(k, x.shape, x.dtype) * scale
+              for k, x in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _requests(cfg, seed, n=10, users=4, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i % users,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=int(rng.integers(3, 9)))
+                    .astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _streams(reqs):
+    return [(tuple(r.out), r.outcome) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Router vs single engine: per-request stream parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sampled", [False, True])
+def test_router_matches_single_engine_streams(sampled):
+    """An R=3 fleet's streams are identical per request to one engine
+    running the same submission sequence (greedy and sampled, paged),
+    and every replica keeps host_syncs == chunks."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=2, max_len=32, chunk=8, fused=True, prefill_block=4,
+              kv_paging=True, kv_page_size=4)
+    if sampled:
+        kw.update(temperature=0.8, top_k=8)
+
+    ref_reqs = _requests(cfg, seed=7)
+    ServeEngine(cfg, params, **kw).run(ref_reqs)
+    assert all(r.done for r in ref_reqs)
+
+    fleet_reqs = _requests(cfg, seed=7)
+    router = FleetRouter(cfg, params, replicas=3, **kw)
+    router.run(fleet_reqs)
+    assert _streams(fleet_reqs) == _streams(ref_reqs)
+    # work actually spread over replicas
+    per = router.last_run_report["replicas"]
+    assert sum(1 for r in per if r.get("chunks", 0)) >= 2
+    for rep in per:
+        assert rep.get("host_syncs", 0) == rep.get("chunks", 0)
+
+
+def test_router_personalised_parity():
+    """Per-user delta overlays registered through the router serve the
+    same streams as a single personalised engine."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    bb = lm_backbone(cfg, tokens_per_batch=32, batch_size=2)
+    policy = covering_policy(bb)
+    sets = {u: DeltaSet.from_policy(policy, rand_deltas(bb, policy, 3 + u))
+            for u in (0, 1)}
+    kw = dict(slots=2, max_len=32, chunk=8, fused=True, prefill_block=4,
+              personalise=policy)
+
+    ref_reqs = _requests(cfg, seed=11, n=8, users=2)
+    eng = ServeEngine(cfg, params, **kw)
+    for u, ds in sets.items():
+        eng.swap_deltas(u, ds)
+    eng.run(ref_reqs)
+    assert all(r.done for r in ref_reqs)
+
+    fleet_reqs = _requests(cfg, seed=11, n=8, users=2)
+    router = FleetRouter(cfg, params, replicas=2, **kw)
+    for u, ds in sets.items():
+        router.swap_deltas(u, ds)  # registry-only: no homes yet
+    router.run(fleet_reqs)
+    assert _streams(fleet_reqs) == _streams(ref_reqs)
+
+
+# ---------------------------------------------------------------------------
+# Routing: sticky placement, delta migration, fleet-wide shedding
+# ---------------------------------------------------------------------------
+
+
+def test_sticky_uid_placement_and_delta_migration():
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    bb = lm_backbone(cfg, tokens_per_batch=32, batch_size=2)
+    policy = covering_policy(bb)
+    ds = DeltaSet.from_policy(policy, rand_deltas(bb, policy, 5))
+    router = FleetRouter(cfg, params, replicas=2, slots=2, max_len=32,
+                         chunk=8, fused=True, prefill_block=4,
+                         queue_limit=2, personalise=policy)
+    router.swap_deltas(7, ds)
+
+    reqs = _requests(cfg, seed=3, n=3, users=1, max_new=4)
+    for r in reqs:
+        r.uid = 7
+    assert router.submit(reqs[0]).accepted
+    home = router._home[7]
+    # the registered delta set moved to the home replica at first routing
+    assert 7 in router.engines[home]._user_deltas
+    assert router.submit(reqs[1]).accepted
+    assert router._home[7] == home  # sticky while the home has room
+    assert router.engines[home].backlog_size() == 2
+    # home saturated (queue_limit=2): the third submission re-homes, and
+    # the user's deltas migrate with it
+    res = router.submit(reqs[2])
+    assert res.accepted
+    other = router._home[7]
+    assert other != home
+    assert 7 in router.engines[other]._user_deltas
+    router.scan_chunks()
+    assert all(r.done for r in reqs)
+
+
+def test_queue_full_only_at_fleet_saturation():
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    router = FleetRouter(cfg, params, replicas=2, slots=2, max_len=32,
+                         chunk=8, fused=True, prefill_block=4,
+                         queue_limit=2)
+    reqs = _requests(cfg, seed=9, n=5, users=5, max_new=4)
+    results = [router.submit(r) for r in reqs]
+    # 2 replicas x queue_limit 2 absorb four; the fifth sheds typed
+    assert [r.accepted for r in results] == [True] * 4 + [False]
+    assert results[-1].reason == "queue_full"
+    assert reqs[-1].outcome == "rejected"
+    router.scan_chunks()
+    assert all(r.done for r in reqs[:4])
+
+
+# ---------------------------------------------------------------------------
+# Failure: replica kill mid-flight
+# ---------------------------------------------------------------------------
+
+
+def test_replica_kill_every_request_terminal_exactly_once():
+    """Kill a replica while streams are resident: its backlog drains and
+    re-routes, resumed streams stay bit-identical (greedy), and every
+    request ends with exactly one typed terminal outcome."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=2, max_len=48, chunk=4, fused=True, prefill_block=4,
+              kv_paging=True, kv_page_size=4)
+
+    ref_reqs = _requests(cfg, seed=13, n=8, users=4, max_new=10)
+    ServeEngine(cfg, params, **kw).run(ref_reqs)
+
+    reqs = _requests(cfg, seed=13, n=8, users=4, max_new=10)
+    router = FleetRouter(cfg, params, replicas=2, **kw)
+    for r in reqs:
+        assert router.submit(r).accepted
+    router.scan_chunks(rounds=2)  # some streams now mid-decode
+    victim = 0 if router.engines[0].has_work() else 1
+    moved = router.fail_replica(victim)
+    assert moved["rerouted"] >= 1 and moved["shed"] == 0
+    assert not router.alive[victim]
+    router.scan_chunks()
+    # exactly one typed terminal outcome per request, streams unchanged
+    assert all(r.outcome in ("done", "truncated") for r in reqs)
+    assert _streams(reqs) == _streams(ref_reqs)
+    # failing an already-dead replica is a no-op; killing the last alive
+    # replica is refused
+    assert router.fail_replica(victim) == {"rerouted": 0, "shed": 0}
+    with pytest.raises(RuntimeError):
+        router.fail_replica(1 - victim)
+
+
+# ---------------------------------------------------------------------------
+# Serialized delta payload boundary
+# ---------------------------------------------------------------------------
+
+
+def test_delta_payload_codec_roundtrip():
+    """encode -> bytes -> decode equals the in-process int8 exchange."""
+    cfg = tiny_cfg()
+    bb = lm_backbone(cfg, tokens_per_batch=32, batch_size=2)
+    policy = covering_policy(bb)
+    deltas = rand_deltas(bb, policy, 17)
+    q, scales, _ = C.int8_compress(deltas, C.ef_state_init(deltas))
+    payload = encode_delta_payload(policy, q, scales)
+    assert isinstance(payload, bytes) and len(payload) > 0
+    ds = decode_delta_payload(payload)
+    want = C.int8_decompress(q, scales)
+    for a, b in zip(jax.tree_util.tree_leaves(ds.deltas),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    # channel indices survive the wire (self-describing payload)
+    ref = DeltaSet.from_policy(policy, want)
+    assert jax.tree_util.tree_structure(ds.channels) == \
+        jax.tree_util.tree_structure(ref.channels)
+    for a, b in zip(jax.tree_util.tree_leaves(ds.channels),
+                    jax.tree_util.tree_leaves(ref.channels)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_personaliser_ships_bytes_through_router():
+    """With a FleetRouter engine the refresh exchange crosses the router
+    boundary as serialized bytes, and the refresh cap defers users by
+    stale-age x banked-count score."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    bb = lm_backbone(cfg, tokens_per_batch=32, batch_size=2)
+    policy = covering_policy(bb)
+    session = TinyTrainSession(bb, params, seed=0)
+    router = FleetRouter(cfg, params, replicas=2, slots=2, max_len=32,
+                         chunk=4, fused=True, prefill_block=4,
+                         personalise=policy)
+    pers = Personaliser(session, router, policy, iters=2, min_streams=2,
+                        seq=16, refresh_cap=1)
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i % 2,
+                    prompt=rng.integers(0, cfg.vocab, size=5)
+                    .astype(np.int32),
+                    max_new=5)
+            for i in range(6)]
+    rep = pers.run_online(reqs)
+    assert rep["all_done"]
+    assert rep["refreshes"], "no refresh fired"
+    capped = [r for r in rep["refreshes"] if r["deferred_users"]]
+    for r in rep["refreshes"]:
+        assert r["wire_serialized"] is True
+        assert len(r["users"]) <= 1  # refresh_cap=1
+        assert 0 < r["payload_bytes_wire"] < r["payload_bytes_f32"]
+    # both users eventually refresh (aging beats banked count)
+    refreshed = {u for r in rep["refreshes"] for u in r["users"]}
+    if capped:
+        assert refreshed >= {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# Pending-buffer page-demand backfill
+# ---------------------------------------------------------------------------
+
+
+def _backfill_requests(cfg):
+    rng = np.random.default_rng(21)
+    mk = lambda n: rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+    # Admission prices differ only under reserve='asyougo' (prompt-page
+    # demand); worstcase prices every stream at ceil(max_len / page_size)
+    # so a blocked head could never be bypassed.
+    return [
+        Request(uid=0, prompt=mk(16), max_new=4),  # 4 prompt pages
+        Request(uid=1, prompt=mk(16), max_new=4),  # head blocker: 4 pages
+        Request(uid=2, prompt=mk(4), max_new=4),   # 1 page: backfills
+        Request(uid=3, prompt=mk(4), max_new=4),   # 1 page: backfills
+    ]
+
+
+def test_backfill_streams_schedule_invariant_and_faster():
+    """With the head blocked on page demand, a later small request admits
+    in its place: total drain ticks strictly drop while every stream and
+    outcome is unchanged (schedule-invariant decoding), and the aged head
+    still completes (no starvation)."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=2, max_len=24, chunk=8, fused=True, prefill_block=4,
+              kv_paging=True, kv_page_size=4, page_budget=7,
+              reserve="asyougo")
+
+    fifo = _backfill_requests(cfg)
+    eng = ServeEngine(cfg, params, **kw)
+    eng.run(fifo)
+    fifo_ticks = eng.last_run_report["ticks"]
+
+    bf = _backfill_requests(cfg)
+    eng_bf = ServeEngine(cfg, params, admit_backfill=4, **kw)
+    eng_bf.run(bf)
+    bf_ticks = eng_bf.last_run_report["ticks"]
+
+    assert all(r.done for r in fifo) and all(r.done for r in bf)
+    assert _streams(bf) == _streams(fifo)
+    assert bf_ticks < fifo_ticks, (bf_ticks, fifo_ticks)
+    rep = eng_bf.last_run_report
+    assert rep["host_syncs"] == rep["chunks"]
+
+
+def test_backfill_eager_matches_fused():
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=2, max_len=24, kv_paging=True, kv_page_size=4,
+              page_budget=7, reserve="asyougo", admit_backfill=4)
+    fused = _backfill_requests(cfg)
+    ServeEngine(cfg, params, fused=True, chunk=8, prefill_block=4,
+                **kw).run(fused)
+    eager = _backfill_requests(cfg)
+    ServeEngine(cfg, params, fused=False, **kw).run(eager)
+    assert all(r.done for r in fused)
+    assert _streams(eager) == _streams(fused)
+
+
+def test_backfill_requires_paging_and_positive_limit():
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, slots=2, max_len=32, admit_backfill=2)
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, slots=2, max_len=32, kv_paging=True,
+                    admit_backfill=0)
+
+
+def test_router_with_backfill_matches_single_engine():
+    """Backfill composes with routing: fleet streams still match the
+    single-engine run under the same admission discipline."""
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(slots=2, max_len=24, chunk=8, fused=True, prefill_block=4,
+              kv_paging=True, kv_page_size=4, page_budget=7,
+              reserve="asyougo", admit_backfill=4)
+    ref = _backfill_requests(cfg)
+    ServeEngine(cfg, params, **kw).run(ref)
+    fleet = _backfill_requests(cfg)
+    FleetRouter(cfg, params, replicas=2, **kw).run(fleet)
+    assert _streams(fleet) == _streams(ref)

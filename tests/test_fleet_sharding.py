@@ -44,19 +44,33 @@ def _het_tasks(rng, combos, n):
 
 
 def _run_mesh_parity():
-    """adapt_many on an 8-way data mesh == single-device adapt_many."""
+    """adapt_many on an 8-way data mesh == single-device adapt_many, and
+    per-host ingestion (2 hosts x 4 devices) == the global mesh path
+    bit-for-bit (local repeat-last padding reproduces the global padding
+    exactly, so the compiled program sees identical inputs)."""
     session = _micro_session()
     rng = np.random.default_rng(0)
     tasks = _het_tasks(rng, [(2, 2), (3, 3), (4, 3), (2, 7)], 8)
     mesh = jax.make_mesh((8,), ("data",))
     fleet_m = session.adapt_many(tasks, api.RPI_ZERO, iters=2, mesh=mesh)
     rep_m = dict(session.last_fleet_report)
+    fleet_h = session.adapt_many(tasks, api.RPI_ZERO, iters=2, mesh=mesh,
+                                 hosts=2)
+    rep_h = dict(session.last_fleet_report)
     fleet_1 = session.adapt_many(tasks, api.RPI_ZERO, iters=2)
     assert rep_m["mesh_axes"] == {"data": 8}
-    for m, s in zip(fleet_m, fleet_1):
+    assert rep_m["ingestion"] == "global"
+    assert rep_h["hosts"] == 2 and rep_h["ingestion"] == "per-host"
+    for m, h, s in zip(fleet_m, fleet_h, fleet_1):
         assert m.policy.units == s.policy.units
         np.testing.assert_allclose(m.losses, s.losses, rtol=1e-4, atol=1e-5)
         assert abs(m.accuracy() - s.accuracy()) < 1e-5
+        # hosted ingestion is exact vs the global mesh path
+        assert h.policy.units == m.policy.units
+        assert h.losses == m.losses
+        for a, b in zip(jax.tree_util.tree_leaves(h.deltas),
+                        jax.tree_util.tree_leaves(m.deltas)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestMeshParity:
